@@ -1,0 +1,88 @@
+"""§Perf for the paper's own technique: BLTC hillclimb on this container.
+
+Variants (cumulative, wall-clock measured on the XLA CPU backend, error
+vs direct summation):
+  paper_faithful   — per-cluster modified charges (Eq. 14/15), difference-
+                     form r^2 (exactly the paper's algorithm)
+  +hierarchical    — upward-pass q_hat (exact, O(N) precompute;
+                     beyond-paper)
+  +matmul_r2       — MXU-form pairwise distances in the approximation
+                     kernel (beyond-paper; MAC separation makes it safe)
+
+CSV: variant,plan_s,exec_s,rel2_err
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30000)
+    ap.add_argument("--degree", type=int, default=8)
+    ap.add_argument("--leaf", type=int, default=512)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.api import TreecodeConfig, TreecodeSolver
+    from repro.core.direct import direct_sum
+
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
+    q = rng.uniform(-1, 1, args.n).astype(np.float32)
+
+    sample = rng.choice(args.n, 2000, replace=False)
+    kern = TreecodeConfig().make_kernel()
+    phi_ds = direct_sum(jnp.asarray(pts[sample]), jnp.asarray(pts),
+                        jnp.asarray(q), kernel=kern)
+
+    variants = [
+        ("paper_faithful", dict(precompute="direct", approx_r2="diff")),
+        ("+hierarchical", dict(precompute="hierarchical", approx_r2="diff")),
+        ("+matmul_r2", dict(precompute="hierarchical", approx_r2="matmul")),
+    ]
+    print("variant,plan_s,qhat_s,exec_s,rel2_err")
+    for name, kw in variants:
+        cfg = TreecodeConfig(theta=0.8, degree=args.degree,
+                             leaf_size=args.leaf, backend="xla", **kw)
+        solver = TreecodeSolver(cfg)
+        t0 = time.time()
+        plan = solver.plan(pts, pts)
+        plan_s = time.time() - t0
+
+        # isolate the precompute phase (the paper's "precompute" bar in
+        # Fig. 6cd): jit just the modified-charge computation
+        from repro.core import eval as ceval
+        import functools as ft
+        qhat_fn = (ceval.compute_qhat_hierarchical
+                   if cfg.precompute == "hierarchical"
+                   else ceval.compute_qhat_direct)
+        qf = jax.jit(ft.partial(qhat_fn, degree=cfg.degree, backend="xla"))
+        qs = jnp.asarray(q)[plan.arrays["src_perm"]]
+        qf(plan.arrays, qs).block_until_ready()
+        t0 = time.time()
+        for _ in range(args.reps):
+            out = qf(plan.arrays, qs)
+        out.block_until_ready()
+        qhat_s = (time.time() - t0) / args.reps
+
+        phi = solver.execute(plan, q)          # compile + run
+        phi.block_until_ready()
+        t0 = time.time()
+        for _ in range(args.reps):
+            phi = solver.execute(plan, q)
+        phi.block_until_ready()
+        exec_s = (time.time() - t0) / args.reps
+        err = float(jnp.linalg.norm(phi_ds - jnp.asarray(np.asarray(phi)[sample]))
+                    / jnp.linalg.norm(phi_ds))
+        print(f"{name},{plan_s:.2f},{qhat_s:.3f},{exec_s:.3f},{err:.3e}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

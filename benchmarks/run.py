@@ -1,0 +1,60 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+  fig4     — Fig. 4 time-vs-error reproduction (CPU-scaled, FP64)
+  scaling  — Fig. 5/6 weak+strong scaling of the distributed BLTC
+             (simulated multi-device + phase breakdown + LET volume)
+  kernels  — the four compute kernels (XLA timing + Pallas interpret check)
+  roofline — 40-cell (arch x shape) dry-run roofline table (cached results;
+             run `python -m benchmarks.roofline` first for fresh numbers)
+
+``python -m benchmarks.run`` runs a fast subset of everything;
+``--full`` runs paper-scale parameters (slow on 1 CPU core).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    choices=["", "fig4", "scaling", "kernels", "roofline"])
+    args = ap.parse_args()
+
+    sections = [args.only] if args.only else \
+        ["kernels", "fig4", "scaling", "roofline"]
+
+    if "kernels" in sections:
+        print("==== kernels (paper Sec. 3.2: the four compute kernels) ====")
+        from benchmarks import kernels
+        sys.argv = ["kernels"] + ([] if args.full else ["--quick"])
+        kernels.main()
+
+    if "fig4" in sections:
+        print("==== fig4 (single-device time vs error) ====")
+        from benchmarks import fig4
+        sys.argv = ["fig4"] + (["--n", "20000", "--full"] if args.full
+                               else ["--n", "3000"])
+        fig4.main()
+
+    if "scaling" in sections:
+        print("==== scaling (Fig. 5/6: weak+strong, phases, LET bytes) ====")
+        from benchmarks import scaling
+        sys.argv = ["scaling"] + ([] if args.full
+                                  else ["--base-n", "2048",
+                                        "--ranks", "1", "2", "4"])
+        scaling.main()
+
+    if "roofline" in sections:
+        print("==== roofline (40-cell arch x shape dry-run, cached) ====")
+        from benchmarks import roofline
+        print(roofline.fmt_table("16x16"))
+        print()
+        print("---- multi-pod (2x16x16) ----")
+        print(roofline.fmt_table("2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

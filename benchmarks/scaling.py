@@ -1,0 +1,104 @@
+"""Fig. 5/6 analogue: weak + strong scaling of the distributed BLTC.
+
+Real multi-GPU wall-clock scaling is not measurable on one CPU core, so
+this benchmark does what CAN be measured honestly here:
+  - runs the full RCB + LET + shard_map pipeline on P simulated host
+    devices (subprocess per P, XLA_FLAGS device count),
+  - times the three phases the paper's Fig. 6(c,d) breaks down: setup
+    (host tree/lists/LET schedule), precompute+compute (device step), and
+    reports accuracy vs direct summation,
+  - reports the LET communication volume (bytes all-gathered + halo) per
+    rank, whose growth rate is the paper's O(log N) claim.
+
+CSV: mode,P,N,setup_s,device_s,err,let_bytes_per_rank
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_WORKER = """
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.api import TreecodeConfig
+from repro.core.direct import direct_sum
+from repro.distributed.bltc import prepare_distributed, distributed_execute
+
+P = {P}; N = {N}
+rng = np.random.default_rng(0)
+pts = rng.uniform(-1, 1, (N, 3)).astype(np.float32)
+q = rng.uniform(-1, 1, N).astype(np.float32)
+cfg = TreecodeConfig(theta=0.8, degree={degree}, leaf_size={leaf},
+                     backend="xla")
+
+t0 = time.time()
+plan = prepare_distributed(pts, cfg, P)
+setup_s = time.time() - t0
+
+phi = distributed_execute(plan, q, cfg)  # compile + run
+t0 = time.time()
+phi = distributed_execute(plan, q, cfg)
+jax.block_until_ready(phi)
+device_s = time.time() - t0
+
+sample = np.random.default_rng(1).choice(N, min(N, 2000), replace=False)
+phi_ds = direct_sum(jnp.asarray(pts[sample]), jnp.asarray(pts),
+                    jnp.asarray(q), kernel=cfg.make_kernel())
+err = float(jnp.linalg.norm(phi_ds - jnp.asarray(np.asarray(phi)[sample]))
+            / jnp.linalg.norm(phi_ds))
+
+# LET wire volume per rank: gathered qhat + metadata + halo leaves
+m = plan.arrays["node_lo"].shape[1]
+k3 = (cfg.degree + 1) ** 3
+gathered = (P - 1) * m * (k3 + 6) * 4
+halo = sum(int(plan.arrays[f"halo_send_{{i}}"].shape[1])
+           for i in range(len(plan.perm_rounds)))
+halo_bytes = halo * plan.arrays["leaf_gather"].shape[2] * 16
+print(json.dumps({{"setup_s": setup_s, "device_s": device_s, "err": err,
+                   "let_bytes": gathered + halo_bytes}}))
+"""
+
+
+def run_case(p, n, degree=6, leaf=128, timeout=1800):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={p}")
+    code = textwrap.dedent(_WORKER.format(P=p, N=n, degree=degree, leaf=leaf))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env, cwd=ROOT)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="both",
+                    choices=["weak", "strong", "both"])
+    ap.add_argument("--base-n", type=int, default=4096)
+    ap.add_argument("--ranks", type=int, nargs="*", default=[1, 2, 4])
+    args = ap.parse_args()
+
+    print("mode,P,N,setup_s,device_s,err,let_bytes_per_rank")
+    if args.mode in ("weak", "both"):
+        for p in args.ranks:
+            n = args.base_n * p   # fixed N per rank (paper Fig. 5)
+            r = run_case(p, n)
+            print(f"weak,{p},{n},{r['setup_s']:.2f},{r['device_s']:.2f},"
+                  f"{r['err']:.2e},{r['let_bytes']}", flush=True)
+    if args.mode in ("strong", "both"):
+        n = args.base_n * max(args.ranks)
+        for p in args.ranks:
+            r = run_case(p, n)
+            print(f"strong,{p},{n},{r['setup_s']:.2f},{r['device_s']:.2f},"
+                  f"{r['err']:.2e},{r['let_bytes']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Reproduce the structure of paper Fig. 4: run time vs error for MAC
+theta in {0.5, 0.7, 0.9} as the interpolation degree n sweeps up, for the
+Coulomb and Yukawa kernels, against the direct-sum baseline (FP64, scaled
+N for a single CPU core).
+
+    PYTHONPATH=src python examples/figure4_sweep.py [--n 4000]
+"""
+import argparse
+
+from benchmarks.fig4 import check_paper_claims, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    args = ap.parse_args()
+    print("kernel,theta,degree,time_s,rel2_err,direct_time_s")
+    rows = run(n_particles=args.n, degrees=(1, 2, 4, 6, 8, 10))
+    print()
+    for msg in check_paper_claims(rows):
+        print(msg)
+
+
+if __name__ == "__main__":
+    main()

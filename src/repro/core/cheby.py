@@ -1,0 +1,125 @@
+"""Barycentric Lagrange interpolation at Chebyshev points of the 2nd kind.
+
+Implements Sec. 2.1-2.3 of Vaughn, Wilson & Krasny (2020):
+  - Chebyshev points of the 2nd kind s_k = cos(pi k / n)  (Eq. 6)
+  - barycentric weights w_k = (-1)^k delta_k               (Eq. 7)
+  - barycentric rows w_k / (y - s_k) with exact-hit (removable-singularity)
+    handling (Sec. 2.3): if a particle coordinate coincides with a Chebyshev
+    point coordinate, L_k(y) = delta_{kk'} is enforced explicitly.
+
+All functions are pure jnp and dtype-polymorphic (f32 on TPU, f64 on CPU
+with jax_enable_x64). They are shared by the Pallas kernels (which inline
+the same math) and the reference oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def cheb_points_1d(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Chebyshev points of the 2nd kind on [-1, 1], k = 0..n (n+1 points).
+
+    Returned in the natural ordering s_0 = 1 ... s_n = -1 (Eq. 6).
+    """
+    k = np.arange(n + 1)
+    return jnp.asarray(np.cos(np.pi * k / n), dtype=dtype)
+
+
+def bary_weights_1d(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Barycentric weights for 2nd-kind Chebyshev points (Eq. 7).
+
+    w_k = (-1)^k * delta_k with delta_k = 1/2 at the endpoints. Any common
+    scaling cancels in the barycentric form, so these stay the same under
+    linear mapping of the interval.
+    """
+    w = np.power(-1.0, np.arange(n + 1))
+    w[0] *= 0.5
+    w[-1] *= 0.5
+    return jnp.asarray(w, dtype=dtype)
+
+
+def map_points(s: jnp.ndarray, lo, hi) -> jnp.ndarray:
+    """Linearly map 2nd-kind points from [-1,1] to [lo, hi] (broadcasts)."""
+    return lo + (hi - lo) * (s + 1.0) * 0.5
+
+
+def cluster_grid(lo: jnp.ndarray, hi: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Tensor-product Chebyshev grid for a cluster box.
+
+    Args:
+      lo, hi: (..., 3) cluster bounding box corners.
+      n: interpolation degree (n+1 points per dimension).
+
+    Returns:
+      (..., (n+1)**3, 3) grid points, ordered with k3 fastest.
+    """
+    dtype = lo.dtype
+    s = cheb_points_1d(n, dtype)  # (n+1,)
+    # (..., n+1) per dimension
+    s1 = map_points(s, lo[..., 0:1], hi[..., 0:1])
+    s2 = map_points(s, lo[..., 1:2], hi[..., 1:2])
+    s3 = map_points(s, lo[..., 2:3], hi[..., 2:3])
+    m = n + 1
+    g1 = jnp.broadcast_to(s1[..., :, None, None], s1.shape[:-1] + (m, m, m))
+    g2 = jnp.broadcast_to(s2[..., None, :, None], s2.shape[:-1] + (m, m, m))
+    g3 = jnp.broadcast_to(s3[..., None, None, :], s3.shape[:-1] + (m, m, m))
+    grid = jnp.stack([g1, g2, g3], axis=-1)  # (..., m, m, m, 3)
+    return grid.reshape(grid.shape[:-4] + (m * m * m, 3))
+
+
+def bary_terms(y: jnp.ndarray, s: jnp.ndarray, w: jnp.ndarray, tol=0.0):
+    """Barycentric terms t_k = w_k / (y - s_k) with exact-hit handling.
+
+    This is the shared building block for both L_k evaluation (Eq. 4/5) and
+    the factored modified-charge computation (Eq. 14/15).
+
+    Args:
+      y: (...,) evaluation coordinates.
+      s: (m,) interpolation nodes (already mapped to the cluster interval).
+      w: (m,) barycentric weights.
+      tol: hit tolerance, broadcastable against y[..., None] - s. The
+        default 0.0 reproduces the paper's Sec. 2.3 convention (smallest
+        positive float ~ exact equality). The hierarchical upward pass
+        passes a scale-aware tolerance: shared box corners make child nodes
+        land arbitrarily close to (but, after f32 rounding, not exactly on)
+        parent nodes, and 1/(y-s) would overflow f32 there.
+
+    Returns:
+      (terms, denom): terms (..., m) and denom (...,) = sum_k terms, such
+      that L_k(y) = terms[..., k] / denom. On a hit, terms is the one-hot
+      row and denom is 1.
+    """
+    d = y[..., None] - s  # (..., m)
+    hit = jnp.abs(d) <= tol if not isinstance(tol, float) or tol > 0.0 \
+        else d == 0.0
+    any_hit = jnp.any(hit, axis=-1, keepdims=True)
+    safe_d = jnp.where(hit, 1.0, d)
+    t = w / safe_d
+    t = jnp.where(any_hit, hit.astype(y.dtype), t)
+    denom = jnp.sum(t, axis=-1)
+    return t, denom
+
+
+def lagrange_rows(y: jnp.ndarray, s: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """L_k(y) for all k: (..., m) rows that sum to 1 (barycentric form)."""
+    t, denom = bary_terms(y, s, w)
+    return t / denom[..., None]
+
+
+@functools.partial(jnp.vectorize, signature="(m),()->()", excluded=(2, 3))
+def _interp_1d(fvals, y, s, w):  # pragma: no cover - helper for tests
+    rows = lagrange_rows(y, s, w)
+    return jnp.sum(rows * fvals)
+
+
+def interp_1d(fvals: jnp.ndarray, y: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Barycentric interpolation of f sampled at 2nd-kind points on [-1,1].
+
+    Test/diagnostic helper: p_n(y) for f given by fvals at cheb_points_1d(n).
+    """
+    s = cheb_points_1d(n, fvals.dtype)
+    w = bary_weights_1d(n, fvals.dtype)
+    return _interp_1d(fvals, y, s, w)

@@ -1,0 +1,296 @@
+"""Device evaluation pipeline: plan (host) -> execute (jit).
+
+The host packs the tree, batches, and interaction lists into static padded
+arrays once (`prepare_plan`); the jitted `execute` then computes
+
+    modified charges (per-level kernels)  ->  cluster Chebyshev grids
+    ->  approx kernel over approx lists   ->  direct kernel over leaf lists
+    ->  un-permutation back to input order.
+
+Separating plan from execute mirrors real treecode usage: boundary-element
+and iterative solvers re-apply the same geometry to many charge vectors, so
+`execute` takes charges as a fresh argument and everything geometric is
+reused (and stays on device).
+
+Padded widths are rounded up (`_round_up`) so that re-planning over moving
+particles (MD) mostly reuses compiled executables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cheby
+from repro.core.interaction import build_interaction_lists
+from repro.core.potentials import Kernel
+from repro.core.tree import Batches, Tree, build_batches, build_tree
+from repro.kernels import ops
+
+
+def _round_up(x: int, base: int = 8) -> int:
+    return max(base, -(-x // base) * base)
+
+
+def _round_pow2(x: int) -> int:
+    return 1 << max(0, int(np.ceil(np.log2(max(x, 1)))))
+
+
+@dataclasses.dataclass
+class Plan:
+    """Geometry-dependent, charge-independent device arrays + host trees."""
+
+    arrays: dict                 # jnp pytree consumed by `execute`
+    meta: Tuple                  # static: (degree, n_bucket_shapes, ...)
+    tree: Tree                   # host copies for diagnostics / distribution
+    batches: Batches
+    padding_waste: float         # sentinel-slot fraction of kernel work
+    num_targets: int
+    num_sources: int
+
+
+def prepare_plan(
+    targets: np.ndarray,
+    sources: np.ndarray,
+    *,
+    theta: float,
+    degree: int,
+    leaf_size: int,
+    batch_size: int,
+) -> Plan:
+    """Host-side setup phase (tree build + traversal + packing)."""
+    targets = np.asarray(targets)
+    sources = np.asarray(sources)
+    dtype = targets.dtype
+
+    tree = build_tree(sources, leaf_size)
+    batches = build_batches(targets, batch_size)
+    lists = build_interaction_lists(tree, batches, theta, degree)
+
+    nb_pad = _round_up(batches.max_count)
+    nl_pad = _round_up(tree.max_leaf_count)
+    a_pad = _round_up(lists.approx.shape[1])
+    d_pad = _round_up(lists.direct.shape[1])
+
+    def _pad_cols(a, width):
+        return np.pad(a, ((0, 0), (0, width - a.shape[1])),
+                      constant_values=-1)
+
+    approx_idx = _pad_cols(lists.approx, a_pad).astype(np.int32)
+    direct_idx = _pad_cols(lists.direct, d_pad).astype(np.int32)
+
+    # Targets packed batch-contiguously, padded per row.
+    nb = batches.num_batches
+    tgt_sorted = targets[batches.perm]
+    tgt_b = np.zeros((nb, nb_pad, 3), dtype)
+    pos_of_batchorder = np.empty(targets.shape[0], np.int64)
+    cursor = 0
+    for b in range(nb):
+        c = int(batches.count[b])
+        tgt_b[b, :c] = tgt_sorted[cursor:cursor + c]
+        pos_of_batchorder[cursor:cursor + c] = b * nb_pad + np.arange(c)
+        cursor += c
+    # phi_input[j] = phi_flat[gather_index[j]] for input target index j.
+    inv_perm = np.argsort(batches.perm, kind="stable")
+    gather_index = pos_of_batchorder[inv_perm].astype(np.int32)
+
+    # Leaf gather table (leaf slot -> padded particle indices, tree order).
+    nleaves = tree.num_leaves
+    leaf_gather = np.full((nleaves, nl_pad), -1, np.int64)
+    for slot, node in enumerate(tree.leaf_ids):
+        s, c = int(tree.start[node]), int(tree.count[node])
+        leaf_gather[slot, :c] = np.arange(s, s + c)
+
+    # Per-level cluster buckets for the modified-charge kernels. Padded
+    # particle counts are bucketed to powers of two so moving-particle
+    # re-plans hit the jit cache.
+    bucket_gather, bucket_nodes = [], []
+    for node_ids in tree.levels():
+        m_pad = _round_pow2(int(tree.count[node_ids].max()))
+        g = np.full((len(node_ids), m_pad), -1, np.int64)
+        for r, node in enumerate(node_ids):
+            s, c = int(tree.start[node]), int(tree.count[node])
+            g[r, :c] = np.arange(s, s + c)
+        bucket_gather.append(jnp.asarray(g, jnp.int32))
+        bucket_nodes.append(jnp.asarray(node_ids, jnp.int32))
+
+    arrays = dict(
+        src_sorted=jnp.asarray(sources[tree.perm]),
+        src_perm=jnp.asarray(tree.perm, jnp.int32),
+        tgt_batched=jnp.asarray(tgt_b),
+        gather_index=jnp.asarray(gather_index),
+        leaf_gather=jnp.asarray(leaf_gather, jnp.int32),
+        node_lo=jnp.asarray(tree.lo.astype(dtype)),
+        node_hi=jnp.asarray(tree.hi.astype(dtype)),
+        approx_idx=jnp.asarray(approx_idx),
+        direct_idx=jnp.asarray(direct_idx),
+        bucket_gather=tuple(bucket_gather),
+        bucket_nodes=tuple(bucket_nodes),
+        # Hierarchical (upward-pass) precompute tables, built lazily.
+        parent_of=jnp.asarray(tree.parent, jnp.int32),
+    )
+    meta = (degree,)
+    return Plan(
+        arrays=arrays, meta=meta, tree=tree, batches=batches,
+        padding_waste=float(lists.padding_waste),
+        num_targets=targets.shape[0], num_sources=sources.shape[0],
+    )
+
+
+def _gathered(src_sorted, q_sorted, gather, fill=None):
+    """(rows, pad, 3) points and charges from a -1-padded gather table.
+
+    `fill` (rows, 3) replaces padded coordinates — the modified-charge
+    kernels pass the cluster center so padded slots stay INSIDE the box:
+    a padded point outside the box makes the alternating barycentric
+    denominator cancel to exactly 0 in f32 (observed at degree 10), and
+    0/0 = NaN. Charges on padding are always 0."""
+    safe = jnp.maximum(gather, 0)
+    valid = gather >= 0
+    fill_b = 0.0 if fill is None else fill[:, None, :]
+    pts = jnp.where(valid[..., None], src_sorted[safe], fill_b)
+    q = jnp.where(valid, q_sorted[safe], 0.0)
+    return pts, q
+
+
+def compute_qhat_direct(arrays, q_sorted, *, degree, backend):
+    """Paper-faithful q_hat: every cluster from its own particles (Eq. 12).
+
+    Cost O((n+1)^3 N log N) — this is the paper's precompute phase. The
+    hierarchical alternative below reduces it to O((n+1)^3 N) exactly.
+    """
+    lo, hi = arrays["node_lo"], arrays["node_hi"]
+    n1 = degree + 1
+    qhat = jnp.zeros((lo.shape[0], n1 ** 3), q_sorted.dtype)
+    for gidx, nodes in zip(arrays["bucket_gather"], arrays["bucket_nodes"]):
+        center = 0.5 * (lo[nodes] + hi[nodes])
+        pts, qb = _gathered(arrays["src_sorted"], q_sorted, gidx,
+                            fill=center)
+        qh = ops.modified_charges(
+            pts, qb, lo[nodes], hi[nodes], degree=degree, backend=backend)
+        qhat = qhat.at[nodes].set(qh)
+    return qhat
+
+
+def compute_qhat_hierarchical(arrays, q_sorted, *, degree, backend):
+    """Upward-pass q_hat (beyond-paper, mathematically exact).
+
+    Leaves are computed from particles; every internal cluster is computed
+    from its children by barycentric Chebyshev-to-Chebyshev restriction:
+    since L^parent_k is a degree-n polynomial per dimension, interpolating
+    it on the child grid is exact, so
+
+        qhat_p[k] = sum_child sum_k' ( prod_l L^p_{k_l}(s^c_{k'_l}) ) qhat_c[k'].
+
+    Cost O((n+1)^3 N) for leaves + O(nodes (n+1)^4) for the pass — removes
+    the log N factor from the paper's precompute with zero accuracy loss.
+    """
+    lo, hi = arrays["node_lo"], arrays["node_hi"]
+    n1 = degree + 1
+    nnodes = lo.shape[0]
+    qhat = jnp.zeros((nnodes, n1 ** 3), q_sorted.dtype)
+
+    # Leaf level(s): from particles. The deepest bucket per level contains a
+    # mix of leaves and internals; computing from particles is exact for
+    # both, so we seed every level bottom-up but only from-particles for
+    # leaves, then overwrite internals by restriction.
+    leaf_rows = arrays["leaf_node_ids"]
+    center = 0.5 * (lo[leaf_rows] + hi[leaf_rows])
+    pts, qb = _gathered(arrays["src_sorted"], q_sorted,
+                        arrays["leaf_gather"], fill=center)
+    qh_leaf = ops.modified_charges(
+        pts, qb, lo[leaf_rows], hi[leaf_rows], degree=degree, backend=backend)
+    qhat = qhat.at[leaf_rows].set(qh_leaf)
+
+    w = cheby.bary_weights_1d(degree, q_sorted.dtype)
+    s01 = cheby.cheb_points_1d(degree, q_sorted.dtype)
+
+    for pairs in arrays["upward_pairs"]:  # deepest level first
+        parents, children = pairs[:, 0], pairs[:, 1]
+        # Per-dimension transfer rows T_l[k', k] = L^p_k(s^c_{k'}).
+        rows = []
+        eps = jnp.finfo(q_sorted.dtype).eps
+        for ax in range(3):
+            child_nodes = cheby.map_points(
+                s01, lo[children, ax:ax + 1], hi[children, ax:ax + 1])
+            parent_nodes = cheby.map_points(
+                s01, lo[parents, ax:ax + 1], hi[parents, ax:ax + 1])
+            # Scale-aware hit tolerance: child grids share corners with the
+            # parent box up to rounding; snap within ~64 ulp of the span.
+            tol = (64.0 * eps) * (hi[parents, ax] - lo[parents, ax])
+            # y = child grid coords (P, n1c), s = parent nodes (P, 1, n1p).
+            t, den = cheby.bary_terms(child_nodes, parent_nodes[:, None, :],
+                                      w, tol=tol[:, None, None])
+            rows.append(t / den[..., None])  # (P, n1_child, n1_parent)
+        qc = qhat[children].reshape(-1, n1, n1, n1)
+        contrib = jnp.einsum("pxa,pyb,pzc,pxyz->pabc",
+                             rows[0], rows[1], rows[2], qc)
+        contrib = contrib.reshape(-1, n1 ** 3)
+        qhat = qhat.at[parents].add(contrib)
+    return qhat
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("degree", "kernel", "backend", "kahan", "precompute",
+                     "approx_r2"))
+def execute(
+    arrays: dict,
+    charges: jnp.ndarray,
+    *,
+    degree: int,
+    kernel: Kernel,
+    backend: str = "auto",
+    kahan: bool = False,
+    precompute: str = "direct",
+    approx_r2: str = "diff",
+) -> jnp.ndarray:
+    """Potentials at the plan's targets, in the caller's input order."""
+    q_sorted = charges[arrays["src_perm"]]
+    if precompute == "direct":
+        qhat = compute_qhat_direct(
+            arrays, q_sorted, degree=degree, backend=backend)
+    elif precompute == "hierarchical":
+        qhat = compute_qhat_hierarchical(
+            arrays, q_sorted, degree=degree, backend=backend)
+    else:
+        raise ValueError(f"unknown precompute {precompute!r}")
+
+    grids = cheby.cluster_grid(arrays["node_lo"], arrays["node_hi"], degree)
+    tgt = arrays["tgt_batched"]
+    # The approximation kernel may use the MXU matmul form of r^2: the MAC
+    # guarantees target/cluster separation, so no cancellation risk there.
+    phi_a = ops.batch_cluster_eval(
+        arrays["approx_idx"], tgt, grids, qhat,
+        kernel=kernel, backend=backend, kahan=kahan, r2_mode=approx_r2)
+
+    leaf_pts, leaf_q = _gathered(
+        arrays["src_sorted"], q_sorted, arrays["leaf_gather"])
+    phi_d = ops.batch_cluster_eval(
+        arrays["direct_idx"], tgt, leaf_pts, leaf_q,
+        kernel=kernel, backend=backend, kahan=kahan)
+
+    phi = (phi_a + phi_d).reshape(-1)
+    return phi[arrays["gather_index"]]
+
+
+def add_hierarchical_tables(plan: Plan) -> Plan:
+    """Extend a plan with upward-pass tables (parent/child pairs per level,
+    deepest first, and the leaf gather rows' node ids)."""
+    tree = plan.tree
+    pairs_by_level = []
+    max_level = int(tree.level.max())
+    for lvl in range(max_level, 0, -1):
+        nodes = np.nonzero((tree.level == lvl))[0]
+        if len(nodes) == 0:
+            continue
+        parents = tree.parent[nodes]
+        pairs_by_level.append(
+            jnp.asarray(np.stack([parents, nodes], axis=1), jnp.int32))
+    plan.arrays["upward_pairs"] = tuple(pairs_by_level)
+    plan.arrays["leaf_node_ids"] = jnp.asarray(tree.leaf_ids, jnp.int32)
+    return plan

@@ -1,0 +1,136 @@
+"""Uniform-MAC interaction lists (Sec. 2.4 algorithm + Sec. 3.2 batching).
+
+For every target batch B the source tree is traversed with the
+multipole acceptance criterion (Eq. 13)
+
+    (r_B + r_C) / R < theta     and     (n+1)^3 < N_C,
+
+applied *uniformly to the whole batch* (the paper's divergence-free GPU
+choice). The traversal yields, per batch:
+
+  - an APPROX list of cluster node ids (evaluated via Eq. 11 against the
+    cluster's Chebyshev grid and modified charges), and
+  - a DIRECT list of *leaf slots* (evaluated via Eq. 9 against the leaf's
+    source particles). A direct interaction with an internal cluster (the
+    (n+1)^3 >= N_C branch) is decomposed into its constituent leaves so the
+    device pipeline only ever sees fixed-stride leaf blocks.
+
+The traversal is a vectorized level-synchronous frontier sweep over
+(batch, node) pairs — the NumPy analogue of the paper's per-batch recursive
+COMPUTEPOTENTIAL — and the ragged results are padded with -1 sentinels into
+rectangular arrays for the static device kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.tree import Batches, Tree
+
+
+@dataclasses.dataclass
+class InteractionLists:
+    """Padded per-batch interaction lists (-1 = empty slot)."""
+
+    approx: np.ndarray  # (B, A_max) source-tree node ids
+    direct: np.ndarray  # (B, D_max) leaf slots (indices into tree.leaf_ids)
+    # Diagnostics (EXPERIMENTS.md padding-overhead reporting):
+    approx_counts: np.ndarray  # (B,)
+    direct_counts: np.ndarray  # (B,)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of padded slots that are sentinels (wasted kernel work)."""
+        total = self.approx.size + self.direct.size
+        used = self.approx_counts.sum() + self.direct_counts.sum()
+        return 1.0 - used / max(total, 1)
+
+
+def _pad_ragged(pairs_b: np.ndarray, pairs_v: np.ndarray, num_batches: int):
+    """Scatter (batch, value) pairs into a (B, max_count) -1-padded array."""
+    order = np.argsort(pairs_b, kind="stable")
+    b = pairs_b[order]
+    v = pairs_v[order]
+    counts = np.bincount(b, minlength=num_batches)
+    width = int(counts.max()) if len(b) else 0
+    width = max(width, 1)  # keep kernels shape-valid even for empty lists
+    out = np.full((num_batches, width), -1, dtype=np.int64)
+    # slot of each pair within its batch row
+    row_start = np.zeros(num_batches + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_start[1:])
+    slot = np.arange(len(b)) - row_start[b]
+    out[b, slot] = v
+    return out, counts
+
+
+def build_interaction_lists(
+    tree: Tree,
+    batches: Batches,
+    theta: float,
+    degree: int,
+) -> InteractionLists:
+    """Dual traversal of all batches against the source tree (Eq. 13)."""
+    npts = (degree + 1) ** 3
+    nb = batches.num_batches
+
+    approx_b, approx_v = [], []
+    direct_b, direct_v = [], []
+
+    # Frontier of candidate (batch, node) pairs, starting at the root.
+    fb = np.arange(nb, dtype=np.int64)
+    fn = np.zeros(nb, dtype=np.int64)
+    while fb.size:
+        rb = batches.radius[fb]
+        rc = tree.radius[fn]
+        R = np.linalg.norm(batches.center[fb] - tree.center[fn], axis=1)
+        nc = tree.count[fn]
+        leaf = tree.is_leaf[fn]
+        # Guard R == 0 (a batch co-located with a cluster center): MAC fails.
+        dist_ok = (rb + rc) < theta * R
+        size_ok = npts < nc
+        mac = dist_ok & size_ok
+
+        if np.any(mac):
+            approx_b.append(fb[mac])
+            approx_v.append(fn[mac])
+
+        # MAC failed on distance: leaves go direct, internals recurse.
+        dist_fail = ~mac & ~dist_ok
+        go_direct = dist_fail & leaf
+        recurse = dist_fail & ~leaf
+        # MAC failed only on cluster size ((n+1)^3 >= N_C): direct with the
+        # whole (possibly internal) cluster -> decomposed into leaves below.
+        small = ~mac & dist_ok
+        go_direct = go_direct | (small & leaf)
+        small_internal = small & ~leaf
+
+        if np.any(go_direct):
+            direct_b.append(fb[go_direct])
+            direct_v.append(tree.leaf_index[fn[go_direct]])
+        for b, node in zip(fb[small_internal], fn[small_internal]):
+            slots = tree.leaves_in_range(int(tree.start[node]), int(tree.count[node]))
+            direct_b.append(np.full(len(slots), b, dtype=np.int64))
+            direct_v.append(slots)
+
+        if np.any(recurse):
+            kids = tree.children[fn[recurse]]          # (m, 8)
+            keep = kids >= 0
+            fb = np.repeat(fb[recurse], keep.sum(axis=1))
+            fn = kids[keep]
+        else:
+            fb = np.empty(0, dtype=np.int64)
+            fn = np.empty(0, dtype=np.int64)
+
+    def _cat(chunks):
+        return (np.concatenate(chunks) if chunks
+                else np.empty(0, dtype=np.int64))
+
+    ab, av = _cat(approx_b), _cat(approx_v)
+    db, dv = _cat(direct_b), _cat(direct_v)
+    approx, a_counts = _pad_ragged(ab, av, nb)
+    direct, d_counts = _pad_ragged(db, dv, nb)
+    return InteractionLists(
+        approx=approx, direct=direct,
+        approx_counts=a_counts, direct_counts=d_counts,
+    )

@@ -1,0 +1,81 @@
+"""Interaction kernels G(x, y) (Eq. 2) in a kernel-independent registry.
+
+The BLTC is kernel-independent: it only ever *evaluates* G. Each kernel is
+a pure function of the squared distance (plus parameters), which is the
+form both the Pallas kernels and the jnp oracles consume. Self-interaction
+and padded-slot contributions are removed by the `r2 > 0` mask, matching
+the treecode convention of excluding the singular i == j term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """A smooth, non-oscillatory interaction kernel.
+
+    Attributes:
+      name: registry name.
+      of_r2: (r2, params) -> G; must be finite for r2 > 0. Values at
+        r2 == 0 are ignored (masked by callers).
+      params: static kernel parameters (e.g. Yukawa kappa), hashable.
+    """
+
+    name: str
+    of_r2: Callable
+    params: tuple = ()
+
+    def __call__(self, r2: jnp.ndarray) -> jnp.ndarray:
+        """Masked evaluation: G(r) for r2 > 0, exactly 0 at r2 == 0."""
+        safe = jnp.where(r2 > 0.0, r2, 1.0)
+        return jnp.where(r2 > 0.0, self.of_r2(safe, self.params), 0.0)
+
+    def pairwise(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        """G(x_i, y_j) for x (..., nx, 3), y (..., ny, 3) -> (..., nx, ny)."""
+        d = x[..., :, None, :] - y[..., None, :, :]
+        return self(jnp.sum(d * d, axis=-1))
+
+    def pairwise_matmul(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        """G via r^2 = |x|^2 + |y|^2 - 2 x.y — the cross term is a matmul,
+        so the distance computation runs on the MXU instead of the VPU
+        (beyond-paper §Perf optimization). Safe for MAC-separated
+        target/cluster pairs (the approximation kernel); the direct-sum
+        kernel keeps the cancellation-free difference form."""
+        xy = jnp.einsum("...nd,...md->...nm", x, y)
+        x2 = jnp.sum(x * x, axis=-1)[..., :, None]
+        y2 = jnp.sum(y * y, axis=-1)[..., None, :]
+        return self(jnp.maximum(x2 + y2 - 2.0 * xy, 0.0))
+
+
+def _coulomb(r2, params):
+    del params
+    return jnp.reciprocal(jnp.sqrt(r2))
+
+
+def _yukawa(r2, params):
+    (kappa,) = params
+    r = jnp.sqrt(r2)
+    return jnp.exp(-kappa * r) / r
+
+
+def coulomb() -> Kernel:
+    """G(x,y) = 1/|x-y| (Eq. 2, left)."""
+    return Kernel("coulomb", _coulomb)
+
+
+def yukawa(kappa: float = 0.5) -> Kernel:
+    """G(x,y) = exp(-kappa |x-y|)/|x-y| (Eq. 2, right)."""
+    return Kernel("yukawa", _yukawa, (float(kappa),))
+
+
+_REGISTRY = {"coulomb": coulomb, "yukawa": yukawa}
+
+
+def get_kernel(name: str, **params) -> Kernel:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**params)

@@ -1,0 +1,60 @@
+"""Recursive coordinate bisection (Sec. 3.1, the paper uses Zoltan's RCB).
+
+Splits particles into P contiguous, count-balanced slabs by recursively
+bisecting along the longest extent at the index proportional to the rank
+counts on each side (so with N divisible by P every rank owns exactly N/P
+particles — the balance property Fig. 2 illustrates)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RCB:
+    perm: np.ndarray      # (N,) input index -> rank-major order
+    rank_of: np.ndarray   # (N,) rank of each input particle
+    starts: np.ndarray    # (P+1,) slab boundaries in permuted order
+    lo: np.ndarray        # (P, 3) slab bounding boxes (of owned particles)
+    hi: np.ndarray        # (P, 3)
+
+    @property
+    def nranks(self) -> int:
+        return len(self.starts) - 1
+
+    def counts(self) -> np.ndarray:
+        return np.diff(self.starts)
+
+
+def rcb_partition(points: np.ndarray, nranks: int) -> RCB:
+    n = points.shape[0]
+    if n % nranks:
+        raise ValueError(f"N={n} must be divisible by P={nranks}")
+    perm = np.arange(n)
+    bounds = [None] * nranks
+
+    def recurse(start, count, r0, r1):
+        if r1 - r0 == 1:
+            idx = perm[start:start + count]
+            pts = points[idx]
+            bounds[r0] = (pts.min(0), pts.max(0))
+            return
+        idx = perm[start:start + count]
+        pts = points[idx]
+        dim = int(np.argmax(pts.max(0) - pts.min(0)))
+        order = np.argsort(pts[:, dim], kind="stable")
+        perm[start:start + count] = idx[order]
+        rmid = (r0 + r1) // 2
+        left = count * (rmid - r0) // (r1 - r0)
+        recurse(start, left, r0, rmid)
+        recurse(start + left, count - left, rmid, r1)
+
+    recurse(0, n, 0, nranks)
+    starts = np.arange(nranks + 1) * (n // nranks)
+    rank_of = np.empty(n, np.int64)
+    for r in range(nranks):
+        rank_of[perm[starts[r]:starts[r + 1]]] = r
+    lo = np.stack([b[0] for b in bounds])
+    hi = np.stack([b[1] for b in bounds])
+    return RCB(perm=perm, rank_of=rank_of, starts=starts, lo=lo, hi=hi)

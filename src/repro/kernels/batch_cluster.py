@@ -1,0 +1,172 @@
+"""Pallas TPU kernel for batch-cluster interactions (Eq. 9 and Eq. 11).
+
+This is the paper's central GPU insight adapted to TPU: the barycentric
+particle-cluster approximation has the *same direct-sum form* as the exact
+interaction, so ONE kernel evaluates both — against leaf source particles
+(direct, Eq. 9) or against Chebyshev points with modified charges
+(approximation, Eq. 11).
+
+TPU mapping (vs. the paper's CUDA/OpenACC mapping):
+  - paper: one kernel launch per (batch, cluster) pair, 4 async streams,
+    1 thread block per target, threads over sources, atomics into phi.
+  - here: a single `pallas_call` over grid (batch, target-tile, list-slot).
+    The interaction list is a host-built padded index array delivered via
+    scalar prefetch; the BlockSpec index_map gathers each cluster's block
+    from HBM (the TPU analogue of the per-launch pointer argument), the
+    grid pipeline double-buffers the next cluster while computing the
+    current one (replacing async streams), and the output tile is revisited
+    across list slots so accumulation happens in VMEM (replacing atomics).
+  - pairwise kernel evaluations run on the VPU over a (tile, m) block; the
+    charge contraction is a matvec on the MXU.
+
+Layout: coordinates are coordinate-major (..., 3, P) so the particle axis
+is the TPU lane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.potentials import Kernel
+
+
+def _pair_r2(tx, sy, mode: str):
+    """Pairwise squared distances, (NT, m). mode='diff' subtracts on the
+    VPU (cancellation-free, used for the direct kernel); mode='matmul'
+    uses |x|^2+|y|^2-2x.y so the cross term runs on the MXU (beyond-paper
+    optimization, used for the MAC-separated approximation kernel)."""
+    if mode == "matmul":
+        xy = jax.lax.dot_general(tx, sy, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=tx.dtype)
+        x2 = jnp.sum(tx * tx, axis=0)[:, None]
+        y2 = jnp.sum(sy * sy, axis=0)[None, :]
+        return jnp.maximum(x2 + y2 - 2.0 * xy, 0.0)
+    d0 = tx[0][:, None] - sy[0][None, :]
+    d1 = tx[1][:, None] - sy[1][None, :]
+    d2 = tx[2][:, None] - sy[2][None, :]
+    return d0 * d0 + d1 * d1 + d2 * d2
+
+
+def _body(idx_ref, tgt_ref, src_ref, q_ref, out_ref, *, kernel: Kernel,
+          r2_mode: str = "diff"):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tx = tgt_ref[0]  # (3, NT)
+    sy = src_ref[0]  # (3, m)
+    r2 = _pair_r2(tx, sy, r2_mode)
+    g = kernel(r2)                             # masked at r2 == 0
+    pot = jax.lax.dot_general(                 # (NT,) charge contraction
+        g, q_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+    valid = (idx_ref[b, s] >= 0).astype(out_ref.dtype)
+    out_ref[0] += valid * pot
+
+
+def _body_kahan(idx_ref, tgt_ref, src_ref, q_ref, out_ref, comp_ref, *,
+                kernel: Kernel, r2_mode: str = "diff"):
+    # Compensated (Kahan) accumulation across list slots: pushes the f32
+    # floor down ~1 digit for long interaction lists (beyond-paper accuracy
+    # knob; see the hardware-adaptation table in DESIGN.md).
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
+
+    tx = tgt_ref[0]
+    sy = src_ref[0]
+    g = kernel(_pair_r2(tx, sy, r2_mode))
+    pot = jax.lax.dot_general(
+        g, q_ref[0], dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+    valid = (idx_ref[b, s] >= 0).astype(out_ref.dtype)
+    y = valid * pot - comp_ref[0]
+    tsum = out_ref[0] + y
+    comp_ref[0] = (tsum - out_ref[0]) - y
+    out_ref[0] = tsum
+
+
+def batch_cluster_eval_pallas(
+    idx: jnp.ndarray,      # (B, S) int32 cluster ids, -1 = empty
+    tgt: jnp.ndarray,      # (B, 3, NB) coordinate-major padded targets
+    src_pts: jnp.ndarray,  # (C, 3, m) coordinate-major cluster points
+    src_q: jnp.ndarray,    # (C, m) charges (0 = padding)
+    kernel: Kernel,
+    *,
+    target_tile: int = 256,
+    kahan: bool = False,
+    r2_mode: str = "diff",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """phi (B, NB): potentials of every batch against its interaction list."""
+    bsz, _, nb = tgt.shape
+    _, _, m = src_pts.shape
+    slots = idx.shape[1]
+    nt = min(target_tile, nb)
+    if nb % nt:
+        raise ValueError(f"NB={nb} must be a multiple of target tile {nt}")
+    ntiles = nb // nt
+
+    grid = (bsz, ntiles, slots)
+
+    def tgt_map(b, t, s, idx_ref):
+        del s, idx_ref
+        return (b, 0, t)
+
+    def src_map(b, t, s, idx_ref):
+        del t
+        return (jnp.maximum(idx_ref[b, s], 0), 0, 0)
+
+    def q_map(b, t, s, idx_ref):
+        del t
+        return (jnp.maximum(idx_ref[b, s], 0), 0)
+
+    def out_map(b, t, s, idx_ref):
+        del s, idx_ref
+        return (b, t)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    if kahan:
+        body = functools.partial(_body_kahan, kernel=kernel,
+                                 r2_mode=r2_mode)
+        scratch = [pltpu.VMEM((1, nt), tgt.dtype)]
+    else:
+        body = functools.partial(_body, kernel=kernel, r2_mode=r2_mode)
+        scratch = []
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3, nt), tgt_map),
+            pl.BlockSpec((1, 3, m), src_map),
+            pl.BlockSpec((1, m), q_map),
+        ],
+        out_specs=pl.BlockSpec((1, nt), out_map),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, nb), tgt.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(idx.astype(jnp.int32), tgt, src_pts, src_q)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the modified charges q_hat (Eq. 12 via 14/15).
+
+The paper's two preprocessing kernels are fused into one Pallas kernel:
+stage 1 (Eq. 14) computes the intermediate q_tilde_j = q_j / (D_j1 D_j2 D_j3)
+where D_jl are the barycentric denominators, and stage 2 (Eq. 15)
+accumulates the rank-1 tensor products into q_hat. On the GPU the paper
+parallelizes stage 1 over source particles and stage 2 over Chebyshev
+points, with reductions over threads; on TPU both stages become one block
+program per (cluster, particle-tile):
+
+  - barycentric term rows  w_k / (y - s_k)  are built on the VPU with the
+    exact-hit (removable singularity) handling of Sec. 2.3;
+  - the 3-way tensor contraction  q_hat[k1,k2,k3] = sum_j t1 t2 t3 q~  is
+    reshaped into an MXU matmul  ( (n+1)^2 x MT ) @ ( MT x (n+1) );
+  - particle tiles accumulate into the revisited (1, (n+1)^3) output block.
+
+Clusters at the same tree level have similar particle counts, so the host
+groups clusters level-by-level and calls this kernel once per level with a
+static padded particle count (padding has q = 0 and contributes nothing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import cheby
+
+
+def _body(pts_ref, q_ref, nodes_ref, w_ref, out_ref, *, degree: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    n1 = degree + 1
+    y = pts_ref[0]       # (3, MT) coordinate-major particle tile
+    s = nodes_ref[0]     # (3, n1) per-dimension mapped Chebyshev nodes
+    w = w_ref[...]       # (n1,)
+
+    t1, d1 = cheby.bary_terms(y[0], s[0], w)   # (MT, n1), (MT,)
+    t2, d2 = cheby.bary_terms(y[1], s[1], w)
+    t3, d3 = cheby.bary_terms(y[2], s[2], w)
+    den = d1 * d2 * d3
+    # guard f32 cancellation of the denominator on padded slots (q == 0)
+    qt = jnp.where(den != 0.0,
+                   q_ref[0] / jnp.where(den != 0.0, den, 1.0),
+                   0.0)                        # stage 1 (Eq. 14)
+
+    mt = t1.shape[0]
+    g2 = (t1[:, :, None] * t2[:, None, :]).reshape(mt, n1 * n1)
+    r3 = t3 * qt[:, None]                      # (MT, n1)
+    # stage 2 (Eq. 15): (n1^2, MT) @ (MT, n1) on the MXU, k3 fastest.
+    qhat = jax.lax.dot_general(
+        g2, r3, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+    out_ref[0] += qhat.reshape(n1 * n1 * n1)
+
+
+def modified_charges_pallas(
+    pts: jnp.ndarray,    # (C, 3, m) coordinate-major cluster particles
+    q: jnp.ndarray,      # (C, m) charges, 0 on padding
+    nodes: jnp.ndarray,  # (C, 3, n+1) mapped per-dimension Chebyshev nodes
+    degree: int,
+    *,
+    particle_tile: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q_hat (C, (n+1)^3) for every cluster."""
+    c, _, m = pts.shape
+    n1 = degree + 1
+    mt = min(particle_tile, m)
+    if m % mt:
+        raise ValueError(f"m={m} must be a multiple of particle tile {mt}")
+    w = cheby.bary_weights_1d(degree, pts.dtype)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(_body, degree=degree),
+        grid=(c, m // mt),
+        in_specs=[
+            pl.BlockSpec((1, 3, mt), lambda ci, ti: (ci, 0, ti)),
+            pl.BlockSpec((1, mt), lambda ci, ti: (ci, ti)),
+            pl.BlockSpec((1, 3, n1), lambda ci, ti: (ci, 0, 0)),
+            pl.BlockSpec((n1,), lambda ci, ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n1 * n1 * n1), lambda ci, ti: (ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, n1 * n1 * n1), pts.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(pts, q, nodes, w)

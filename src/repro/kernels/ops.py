@@ -1,0 +1,165 @@
+"""Jitted wrappers around the Pallas kernels with backend dispatch.
+
+Backends:
+  - "pallas":            real TPU lowering (the production target);
+  - "pallas_interpret":  the same kernel bodies executed in Python on CPU
+                         (correctness validation in this container);
+  - "xla":               memory-tiled pure-jnp implementation of identical
+                         math. This is the fast path on CPU (interpret mode
+                         is a Python loop over the grid) and doubles as an
+                         independent large-shape check of the kernels.
+  - "auto":              "pallas" on TPU, "xla" otherwise.
+
+All wrappers accept the natural (..., P, 3) coordinate layout and transpose
+to the kernels' coordinate-major layout internally (a one-time O(N) cost
+against the O(N * m) kernel work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cheby
+from repro.core.potentials import Kernel
+from repro.kernels import batch_cluster as _bc
+from repro.kernels import modified_charges as _mc
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(backend: str) -> str:
+    return default_backend() if backend == "auto" else backend
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), size
+
+
+# ---------------------------------------------------------------------------
+# batch-cluster evaluation (Eq. 9 / Eq. 11)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel", "backend", "target_tile", "batch_chunk",
+                     "kahan", "r2_mode"))
+def batch_cluster_eval(
+    idx: jnp.ndarray,      # (B, S) int, -1 = empty slot
+    tgt: jnp.ndarray,      # (B, NB, 3)
+    src_pts: jnp.ndarray,  # (C, m, 3)
+    src_q: jnp.ndarray,    # (C, m)
+    *,
+    kernel: Kernel,
+    backend: str = "auto",
+    target_tile: int = 256,
+    batch_chunk: int = 16,
+    kahan: bool = False,
+    r2_mode: str = "diff",
+) -> jnp.ndarray:
+    """phi (B, NB) = sum over list slots of batch-cluster interactions."""
+    backend = _resolve(backend)
+    if backend in ("pallas", "pallas_interpret"):
+        tgt_cm = jnp.swapaxes(tgt, -1, -2)          # (B, 3, NB)
+        src_cm = jnp.swapaxes(src_pts, -1, -2)      # (C, 3, m)
+        tgt_cm, nb = _pad_axis(tgt_cm, 2, target_tile)
+        phi = _bc.batch_cluster_eval_pallas(
+            idx, tgt_cm, src_cm, src_q, kernel,
+            target_tile=target_tile, kahan=kahan, r2_mode=r2_mode,
+            interpret=(backend == "pallas_interpret"),
+        )
+        return phi[:, :nb]
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    # XLA path: scan over (batch-chunk, slot) to bound the (bc, NB, m)
+    # pairwise intermediate.
+    bsz, nb = tgt.shape[0], tgt.shape[1]
+    idx_p, _ = _pad_axis(idx, 0, batch_chunk, value=-1)
+    tgt_p, _ = _pad_axis(tgt, 0, batch_chunk)
+    nchunk = idx_p.shape[0] // batch_chunk
+    idx_c = idx_p.reshape(nchunk, batch_chunk, -1)
+    tgt_c = tgt_p.reshape(nchunk, batch_chunk, nb, 3)
+
+    def chunk_step(_, args):
+        idx_b, tgt_b = args  # (bc, S), (bc, NB, 3)
+
+        def slot_step(phi, idx_s):  # idx_s (bc,)
+            safe = jnp.maximum(idx_s, 0)
+            pts = src_pts[safe]                     # (bc, m, 3)
+            qs = src_q[safe]                        # (bc, m)
+            pw = (kernel.pairwise_matmul if r2_mode == "matmul"
+                  else kernel.pairwise)
+            g = pw(tgt_b, pts)                      # (bc, NB, m)
+            valid = (idx_s >= 0).astype(tgt_b.dtype)
+            return phi + jnp.einsum("bnm,bm,b->bn", g, qs, valid), None
+
+        phi0 = jnp.zeros((batch_chunk, nb), tgt_b.dtype)
+        phi, _ = jax.lax.scan(slot_step, phi0, idx_b.T)
+        return None, phi
+
+    _, phis = jax.lax.scan(chunk_step, None, (idx_c, tgt_c))
+    return phis.reshape(-1, nb)[:bsz]
+
+
+# ---------------------------------------------------------------------------
+# modified charges (Eq. 12 via the factored 14/15 form)
+# ---------------------------------------------------------------------------
+
+
+def _cluster_nodes(lo: jnp.ndarray, hi: jnp.ndarray, degree: int):
+    """Per-dimension mapped Chebyshev nodes, (C, 3, n+1)."""
+    s = cheby.cheb_points_1d(degree, lo.dtype)
+    return cheby.map_points(s, lo[..., None], hi[..., None])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("degree", "backend", "particle_tile"))
+def modified_charges(
+    pts: jnp.ndarray,  # (C, m, 3) cluster particles, padded (q = 0)
+    q: jnp.ndarray,    # (C, m)
+    lo: jnp.ndarray,   # (C, 3)
+    hi: jnp.ndarray,   # (C, 3)
+    *,
+    degree: int,
+    backend: str = "auto",
+    particle_tile: int = 512,
+) -> jnp.ndarray:
+    """q_hat (C, (n+1)^3), flattened k3-fastest (cluster_grid ordering)."""
+    backend = _resolve(backend)
+    nodes = _cluster_nodes(lo, hi, degree)
+    if backend in ("pallas", "pallas_interpret"):
+        pts_cm = jnp.swapaxes(pts, -1, -2)  # (C, 3, m)
+        m = pts_cm.shape[-1]
+        tile = min(particle_tile, m)
+        pts_cm, _ = _pad_axis(pts_cm, 2, tile)
+        q_p, _ = _pad_axis(q, 1, tile)
+        return _mc.modified_charges_pallas(
+            pts_cm, q_p, nodes, degree, particle_tile=tile,
+            interpret=(backend == "pallas_interpret"),
+        )
+    if backend != "xla":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    n1 = degree + 1
+    w = cheby.bary_weights_1d(degree, pts.dtype)
+    t1, d1 = cheby.bary_terms(pts[..., 0], nodes[:, None, 0, :], w)
+    t2, d2 = cheby.bary_terms(pts[..., 1], nodes[:, None, 1, :], w)
+    t3, d3 = cheby.bary_terms(pts[..., 2], nodes[:, None, 2, :], w)
+    den = d1 * d2 * d3
+    # padded/degenerate slots can cancel den to 0 in f32; their q is 0
+    qt = jnp.where(den != 0.0, q / jnp.where(den != 0.0, den, 1.0), 0.0)
+    g2 = (t1[..., :, None] * t2[..., None, :]).reshape(*t1.shape[:-1], n1 * n1)
+    r3 = t3 * qt[..., None]
+    qhat = jnp.einsum("cmp,cmk->cpk", g2, r3)
+    return qhat.reshape(-1, n1 * n1 * n1)

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are deliberately written in the *unfactored* textbook form (direct
+Eq. 9/11/12 evaluation) so they are an independent check on the factored /
+tiled kernel implementations. They materialize O(B*S*NB*m) intermediates —
+test-scale shapes only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cheby
+from repro.core.potentials import Kernel
+
+
+def ref_batch_cluster_eval(
+    idx: jnp.ndarray,      # (B, S) int, -1 = empty slot
+    tgt: jnp.ndarray,      # (B, NB, 3) padded target coordinates
+    src_pts: jnp.ndarray,  # (C, m, 3) per-cluster source/Chebyshev points
+    src_q: jnp.ndarray,    # (C, m) charges / modified charges (0 = padding)
+    kernel: Kernel,
+) -> jnp.ndarray:
+    """phi[b, i] = sum_s sum_j G(tgt[b,i], pts[idx[b,s], j]) q[idx[b,s], j].
+
+    The same oracle covers both the direct-sum kernel (Eq. 9: pts are leaf
+    particles) and the approximation kernel (Eq. 11: pts are Chebyshev
+    points, q are modified charges) — the paper's structural point is that
+    these have the identical direct-sum form.
+    """
+    safe = jnp.maximum(idx, 0)
+    pts = src_pts[safe]                # (B, S, m, 3)
+    q = src_q[safe]                    # (B, S, m)
+    d = tgt[:, None, :, None, :] - pts[:, :, None, :, :]
+    g = kernel(jnp.sum(d * d, axis=-1))  # (B, S, NB, m), masked at r2 == 0
+    valid = (idx >= 0).astype(tgt.dtype)
+    return jnp.einsum("bsnm,bsm,bs->bn", g, q, valid)
+
+
+def ref_modified_charges(
+    pts: jnp.ndarray,  # (C, m, 3) cluster source particles (padded)
+    q: jnp.ndarray,    # (C, m) charges, 0 on padding
+    lo: jnp.ndarray,   # (C, 3)
+    hi: jnp.ndarray,   # (C, 3)
+    degree: int,
+) -> jnp.ndarray:
+    """Modified charges by direct evaluation of Eq. 12 (unfactored form).
+
+    q_hat[c, k] = sum_j L_{k1}(y_j1) L_{k2}(y_j2) L_{k3}(y_j3) q_j with the
+    (k1, k2, k3) multi-index flattened k3-fastest, matching
+    `cheby.cluster_grid` ordering.
+    """
+    dtype = pts.dtype
+    n1 = degree + 1
+    s = cheby.cheb_points_1d(degree, dtype)   # (n1,)
+    w = cheby.bary_weights_1d(degree, dtype)  # (n1,)
+
+    rows = []
+    for axis in range(3):
+        s_ax = cheby.map_points(s, lo[:, axis:axis + 1], hi[:, axis:axis + 1])
+        # Broadcast nodes to (C, 1, n1) against particle coords (C, m, 1).
+        t, den = cheby.bary_terms(pts[..., axis], s_ax[:, None, :], w)
+        rows.append(t / den[..., None])       # (C, m, n1) = L_k rows
+    qhat = jnp.einsum("zma,zmb,zmc,zm->zabc", rows[0], rows[1], rows[2], q)
+    return qhat.reshape(-1, n1 * n1 * n1)
+
+
+def ref_cluster_approx_potential(
+    tgt: jnp.ndarray,   # (NB, 3)
+    lo: jnp.ndarray,    # (3,)
+    hi: jnp.ndarray,    # (3,)
+    qhat: jnp.ndarray,  # ((n+1)^3,)
+    degree: int,
+    kernel: Kernel,
+) -> jnp.ndarray:
+    """Single batch-cluster approximation (Eq. 11) for diagnostics."""
+    grid = cheby.cluster_grid(lo, hi, degree)  # ((n+1)^3, 3)
+    return kernel.pairwise(tgt, grid) @ qhat

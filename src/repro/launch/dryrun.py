@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step with the
+arch's optimizer, or serve prefill/decode), shards params/optimizer/inputs
+per the arch's rule set, and runs jit(...).lower(...).compile() against
+ShapeDtypeStruct inputs — no allocation ever happens, so arctic-480b costs
+only compile time. Outputs (memory_analysis, cost_analysis, per-collective
+wire bytes parsed from the partitioned HLO) feed EXPERIMENTS.md §Dry-run
+and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+      --shape train_4k --mesh multi --out out.json
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.registry import (  # noqa: E402
+    ARCH_IDS, get_config, optimizer_for, rule_set_for)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.api import Model, SHAPES  # noqa: E402
+from repro.models.config import (  # noqa: E402
+    RULE_SETS, make_shardings, shard_ctx_for_mesh)
+from repro.models.layers import decl_logical, decl_shapes, param_count  # noqa: E402
+from repro.optim.optimizers import get_optimizer  # noqa: E402
+from repro.training.step import make_train_step  # noqa: E402
+
+# v5e per-chip hardware constants (roofline denominators).
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+
+_COLL_RE = re.compile(
+    r"(\w+)\[([\d,]*)\].* (all-reduce|all-gather|reduce-scatter"
+    r"|all-to-all|collective-permute)(?:-start)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective wire bytes from the SPMD-partitioned HLO.
+
+    Wire model (per device): all-reduce 2*S*(g-1)/g, all-gather/
+    reduce-scatter/all-to-all S*(g-1)/g, collective-permute S, where S is
+    the result-shape bytes and g the replica-group size."""
+    stats = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",") if x] if dims else []
+        size = int(np.prod(shape)) * _DTYPE_BYTES[dtype] if shape else \
+            _DTYPE_BYTES[dtype]
+        gm = _GROUP_RE.search(line)
+        g = len(gm.group(1).split(",")) if gm else 2
+        if op == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif op == "collective-permute":
+            wire = size
+        else:
+            wire = size * (g - 1) / g
+        st = stats.setdefault(op, {"count": 0, "bytes": 0.0})
+        st["count"] += 1
+        st["bytes"] += wire
+    return stats
+
+
+def active_params(model: Model) -> int:
+    """6*N*D uses N_active for MoE: experts scaled by top_k/n_experts."""
+    cfg = model.cfg
+    decls = model.decls()
+    logical = decl_logical(decls)
+    shapes = decl_shapes(decls)
+    total = active = 0
+    for lg, sh in zip(jax.tree.leaves(
+            logical, is_leaf=lambda x: isinstance(x, tuple)),
+            jax.tree.leaves(shapes)):
+        n = int(np.prod(sh.shape))
+        total += n
+        if "experts" in lg and cfg.n_experts:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return int(active)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             check_fit: bool = True, overrides: dict = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = Model(cfg)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not model.supports(shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": model.skip_reason(shape)}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = shard_ctx_for_mesh(mesh)
+    rules = RULE_SETS[rule_set_for(arch)]
+
+    decls = model.decls()
+    p_shapes = decl_shapes(decls)
+    p_logical = decl_logical(decls)
+    p_shard = make_shardings(p_logical, p_shapes, rules, mesh)
+
+    in_specs = model.input_specs(shape)
+    in_logical = model.input_logical(shape)
+    in_shard = make_shardings(in_logical, in_specs, rules, mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = get_optimizer(optimizer_for(arch))
+            o_shapes = jax.eval_shape(opt.init, p_shapes)
+            o_logical = opt.state_logical(p_logical)
+            o_shard = make_shardings(o_logical, o_shapes, rules, mesh)
+            step = make_train_step(model, opt, ctx)
+            fn = jax.jit(step, in_shardings=(p_shard, o_shard, in_shard),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_shapes, o_shapes, in_specs)
+        elif shape.kind == "prefill":
+            def serve_prefill(params, batch):
+                return model.prefill(params, batch, ctx,
+                                     cache_len=shape.seq_len)
+            fn = jax.jit(serve_prefill, in_shardings=(p_shard, in_shard))
+            lowered = fn.lower(p_shapes, in_specs)
+        else:  # decode
+            def serve_decode(params, batch):
+                return model.decode(params, batch, ctx)
+            fn = jax.jit(serve_decode, in_shardings=(p_shard, in_shard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(p_shapes, in_specs)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    colls = collective_stats(hlo_text)
+    # Loop-aware static analysis: XLA's cost_analysis counts while-loop
+    # (scan) bodies once; this multiplies by trip counts (see hlo_analysis).
+    from repro.launch.hlo_analysis import analyze
+    loop_aware = analyze(hlo_text)
+
+    n_params = param_count(decls)
+    n_active = active_params(model)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    # Per-device, loop-aware totals (xla cost_analysis kept for comparison).
+    hlo_flops = loop_aware.flops * chips
+    hlo_bytes = loop_aware.hbm_bytes * chips
+    colls = loop_aware.collectives or colls
+    coll_bytes = loop_aware.collective_bytes
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "compile_s": round(compile_s, 1),
+        "params": n_params, "active_params": n_active,
+        "chips": chips, "tokens": tokens,
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_flops,
+        "hlo_bytes_total": hlo_bytes,
+        "xla_cost_flops_per_dev": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "collectives": colls,
+        "collective_wire_bytes_per_device": coll_bytes,
+        "roofline": {
+            "compute_s": hlo_flops / (chips * PEAK_FLOPS),
+            "memory_s": hlo_bytes / (chips * HBM_BW),
+            "collective_s": coll_bytes / ICI_BW,
+        },
+    }
+    r = result["roofline"]
+    r["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: r[k])
+    r["useful_flops_frac"] = (model_flops / hlo_flops) if hlo_flops else 0.0
+    if check_fit:
+        hbm = 16 * 2**30
+        result["fits_hbm"] = bool(result["per_device"]["peak_hbm_est"] < hbm)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="config overrides, e.g. grad_accum=4 ce_chunk=512")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        cur = getattr(get_config(args.arch), k)
+        overrides[k] = (v == "True") if isinstance(cur, bool) else type(cur)(v)
+    res = run_cell(args.arch, args.shape, args.mesh == "multi",
+                   overrides=overrides)
+    js = json.dumps(res, indent=1)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    sys.exit(0 if res["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,472 @@
+"""HLO text analyzer: loop-aware flops / bytes / collective accounting.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, so any
+scanned-layer model under-reports flops/bytes/collectives by ~n_layers x.
+This module parses the SPMD-partitioned HLO text, builds the computation
+call graph, extracts while-loop trip counts from their condition
+computations, and accumulates per-device totals with correct multipliers:
+
+  flops:      dot ops (2 * prod(result) * contracted), convolutions ditto
+  hbm bytes:  operand + result bytes of top-level ops per computation
+              (fusion internals excluded — fused intermediates stay in
+              registers/VMEM), parameters of the entry excluded from temps
+  collective: wire-cost model per op (ring all-reduce 2S(g-1)/g etc.)
+
+This is a static analysis of the program XLA will actually run per device,
+which is exactly what the roofline needs on a CPU-only container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+                "c64": 8, "c128": 16}
+
+# "  %name = f32[1,2,3]{2,1,0} op-name(%a, %b), attr=..."  — the result
+# type may itself be a tuple "(f32[..], bf16[..])" (while ops), so the
+# opcode is located as the first lowercase word followed by "(" after the
+# "=": dtype tokens (f32[, pred[]) never match that pattern.
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = [int(x) for x in dims.split(",") if x]
+        elems = int(np.prod(shape)) if shape else 1
+        total += elems * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def _close_paren(s: str) -> int:
+    """Index of the ')' matching an implicit '(' just before s."""
+    depth = 1
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        # computation header: "%name (args...) -> type {"  (no " = ")
+        if stripped.endswith("{") and "->" in stripped and " = " not in stripped:
+            ls = stripped.lstrip()
+            if ls.startswith("ENTRY"):
+                m2 = re.match(r"ENTRY\s+%?([\w.\-]+)", ls)
+                if m2:
+                    cur = Computation(m2.group(1), {}, [])
+                    comps[cur.name] = cur
+                    entry = cur.name
+                continue
+            mc = _COMP_HDR_RE.match(ls)
+            if mc:
+                cur = Computation(mc.group(1), {}, [])
+                comps[cur.name] = cur
+            continue
+        if stripped.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ma = _ASSIGN_RE.match(line)
+        if not ma:
+            continue
+        name, rhs = ma.groups()
+        mo = _OPCODE_RE.search(rhs)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        type_str = rhs[:mo.start()].strip()
+        rest = rhs[mo.end():]
+        ci = _close_paren(rest)
+        operand_str, attrs = rest[:ci], rest[ci + 1:]
+        operands = [o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                    for o in _split_args(operand_str)]
+        op = Op(name, type_str, opcode, operands, attrs,
+                is_root=line.lstrip().startswith("ROOT"))
+        cur.ops[name] = op
+        cur.order.append(name)
+    return comps, entry
+
+
+def _split_args(s: str) -> List[str]:
+    out, depth, buf = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        out.append("".join(buf))
+    return [x for x in (t.strip() for t in out) if x]
+
+
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|called_computations=\{)"
+    r"\s*=?\s*%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count of a scan-generated while loop: the integer bound in the
+    condition computation (scan conditions compare the induction variable
+    against a single s32 constant)."""
+    consts = []
+    for name in cond.order:
+        op = cond.ops[name]
+        if op.opcode == "constant" and op.operands:
+            tok = op.operands[0]
+            if re.fullmatch(r"\d+", tok):
+                consts.append(int(tok))
+        if op.opcode == "compare":
+            for tok in op.operands:
+                if re.fullmatch(r"\d+", tok):
+                    consts.append(int(tok))
+    return max(consts) if consts else 1
+
+
+_DNUMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONV_RE = re.compile(r"dim_labels=")
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _elems(op.type_str)
+    lhs = comp.ops.get(op.operands[0]) if op.operands else None
+    k = 1
+    m = _DNUMS_RE.search(op.attrs)
+    if lhs is not None and m:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        lhs_shape = _first_shape(lhs.type_str)
+        for d in dims:
+            if d < len(lhs_shape):
+                k *= lhs_shape[d]
+    return 2.0 * out_elems * k
+
+
+def _elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        shape = [int(x) for x in dims.split(",") if x]
+        total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def _first_shape(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _collective_wire(op: Op) -> Tuple[str, float]:
+    base = op.opcode.replace("-start", "")
+    size = _shape_bytes(op.type_str)
+    gm = _GROUP_RE.search(op.attrs)
+    g = len(gm.group(1).split(",")) if gm else 2
+    if base == "all-reduce":
+        wire = 2 * size * (g - 1) / g
+    elif base == "collective-permute":
+        wire = size
+    elif base == "all-gather":
+        wire = size * (g - 1) / g            # result is the gathered shape
+    else:  # reduce-scatter / all-to-all
+        wire = size * (g - 1) / g
+    return base, wire
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c["bytes"] for c in self.collectives.values())
+
+    def add_collective(self, op: str, wire: float, mult: float):
+        st = self.collectives.setdefault(op, {"count": 0, "bytes": 0.0})
+        st["count"] += mult
+        st["bytes"] += wire * mult
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call", "custom-call",
+                   "iota", "after-all", "partition-id", "replica-id"}
+_PASSTHROUGH = {"bitcast", "reshape", "copy", "transpose", "convert"}
+
+# Elementwise arithmetic: 1 flop/element; transcendentals weighted 4
+# (VPU multi-cycle). Matters for elementwise-heavy kernels (the BLTC's
+# G(x,y) evaluations, softmax) — dots alone undercount those.
+_ARITH_1 = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+            "negate", "abs", "compare", "select", "and", "or", "xor",
+            "clamp", "floor", "ceil", "round-nearest-afz", "sign",
+            "reduce", "reduce-window"}
+_ARITH_4 = {"exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+            "power", "cosine", "sine", "atan2", "expm1", "log1p",
+            "cbrt", "erf"}
+
+
+def _arith_flops(op: Op) -> float:
+    if op.opcode in _ARITH_1:
+        return float(_elems(op.type_str))
+    if op.opcode in _ARITH_4:
+        return 4.0 * _elems(op.type_str)
+    return 0.0
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: Dict[str, Computation], sub_name: str) -> float:
+    """HBM bytes of one fusion execution, slice-aware.
+
+    A fusion whose parameter is consumed only by dynamic-slice reads just
+    the slice (scan reading one layer of a stacked buffer), and a fusion
+    rooted in dynamic-update-slice writes (and re-reads) only the update
+    window — XLA aliases the big buffer in place. Counting those at full
+    buffer size per loop iteration overstates traffic by ~n_layers x.
+    """
+    sub = comps.get(sub_name)
+    result_bytes = _shape_bytes(op.type_str)
+    if sub is None:
+        return result_bytes + sum(
+            _shape_bytes(comp.ops[o].type_str) for o in op.operands
+            if o in comp.ops)
+
+    # Pure dtype-conversion fusions (parameter/convert/bitcast/copy only)
+    # are CPU-backend artifacts — the TPU backend keeps bf16 end-to-end and
+    # fuses converts into consumers. Count them as zero traffic.
+    if all(sub.ops[n].opcode in ("parameter", "convert", "bitcast", "copy",
+                                 "tuple", "get-tuple-element")
+           for n in sub.order):
+        return 0.0
+
+    consumers: Dict[str, List[str]] = {}
+    for name in sub.order:
+        for o in sub.ops[name].operands:
+            consumers.setdefault(o, []).append(name)
+
+    def effective_uses(name: str) -> List[Op]:
+        """Consumers of `name`, looking through pass-through ops."""
+        out: List[Op] = []
+        stack = list(consumers.get(name, []))
+        seen = set()
+        while stack:
+            u = stack.pop()
+            if u in seen:
+                continue
+            seen.add(u)
+            uo = sub.ops[u]
+            if uo.opcode in _PASSTHROUGH:
+                stack.extend(consumers.get(u, []))
+            else:
+                out.append(uo)
+        return out
+
+    def resolve_src(name: str) -> str:
+        """Trace back through pass-through ops to the originating op."""
+        seen = set()
+        while (name in sub.ops and sub.ops[name].opcode in _PASSTHROUGH
+               and sub.ops[name].operands and name not in seen):
+            seen.add(name)
+            name = sub.ops[name].operands[0]
+        return name
+
+    root = None
+    for name in sub.order:
+        if sub.ops[name].is_root:
+            root = sub.ops[name]
+    if root is None and sub.order:
+        root = sub.ops[sub.order[-1]]
+    eff_root = sub.ops.get(resolve_src(root.name)) if root is not None else None
+
+    total = 0.0
+    # result bytes: in-place dynamic-update-slice writes only the window
+    # (CPU-backend convert/bitcast wrappers looked through)
+    dus_buffer_param = None
+    if eff_root is not None and eff_root.opcode == "dynamic-update-slice" \
+            and len(eff_root.operands) >= 2:
+        upd = eff_root.operands[1]
+        if upd in sub.ops:
+            total += _shape_bytes(sub.ops[upd].type_str)
+        dus_buffer_param = resolve_src(eff_root.operands[0])
+    else:
+        total += result_bytes
+
+    # operand bytes per fused parameter
+    for name in sub.order:
+        o = sub.ops[name]
+        if o.opcode != "parameter":
+            continue
+        if name == dus_buffer_param:
+            continue  # aliased in place: no full read
+        uses = effective_uses(name)
+        if uses and all(u.opcode == "dynamic-slice" for u in uses):
+            total += sum(_shape_bytes(u.type_str) for u in uses)
+        elif uses and all(u.opcode == "dynamic-update-slice"
+                          and u.operands
+                          and resolve_src(u.operands[0]) == name
+                          for u in uses):
+            continue  # buffer only updated in place
+        else:
+            total += _shape_bytes(o.type_str)
+    return total
+
+
+def analyze(text: str) -> Totals:
+    comps, entry = parse_hlo(text)
+    totals = Totals()
+    memo: Dict[str, Tuple[float, float, Dict]] = {}
+
+    def comp_cost(name: str) -> Tuple[float, float, Dict]:
+        """(flops, bytes, collectives) of one execution of computation."""
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        flops = 0.0
+        bts = 0.0
+        colls: Dict[str, Dict[str, float]] = {}
+
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            oc = op.opcode
+            if oc == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if mb:
+                    body = mb.group(1)
+                if mcnd:
+                    cond = mcnd.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                f, b, c = comp_cost(body) if body else (0.0, 0.0, {})
+                flops += f * trips
+                bts += b * trips
+                for k, v in c.items():
+                    st = colls.setdefault(k, {"count": 0, "bytes": 0.0})
+                    st["count"] += v["count"] * trips
+                    st["bytes"] += v["bytes"] * trips
+                continue
+            if oc in ("call", "conditional"):
+                for m in re.finditer(r"%?([\w.\-]+)", op.attrs):
+                    if m.group(1) in comps:
+                        f, b, c = comp_cost(m.group(1))
+                        flops += f
+                        bts += b
+                        for k, v in c.items():
+                            st = colls.setdefault(k, {"count": 0, "bytes": 0.0})
+                            st["count"] += v["count"]
+                            st["bytes"] += v["bytes"]
+                        break
+                continue
+            if oc == "fusion":
+                # flops: dots inside the fused computation
+                mf = re.search(r"(?:calls=|fusion\s*=\s*)%?([\w.\-]+)",
+                               op.attrs)
+                sub = mf.group(1) if mf else None
+                if sub in comps:
+                    for sn in comps[sub].order:
+                        sop = comps[sub].ops[sn]
+                        if sop.opcode in ("dot", "convolution"):
+                            flops += _dot_flops(sop, comps[sub])
+                        else:
+                            flops += _arith_flops(sop)
+                    bts += _fusion_bytes(op, comp, comps, sub)
+                else:
+                    bts += _shape_bytes(op.type_str)
+                    for o in op.operands:
+                        if o in comp.ops:
+                            bts += _shape_bytes(comp.ops[o].type_str)
+                continue
+            if oc in ("dot", "convolution"):
+                flops += _dot_flops(op, comp)
+                bts += _shape_bytes(op.type_str)
+                for o in op.operands:
+                    if o in comp.ops:
+                        bts += _shape_bytes(comp.ops[o].type_str)
+                continue
+            if oc == "dynamic-slice":
+                bts += 2 * _shape_bytes(op.type_str)  # read + write window
+                continue
+            if oc == "dynamic-update-slice":
+                upd = (op.operands[1] if len(op.operands) > 1 else None)
+                if upd in comp.ops:
+                    bts += 2 * _shape_bytes(comp.ops[upd].type_str)
+                continue
+            if oc.replace("-start", "") in _COLLECTIVES:
+                k, wire = _collective_wire(op)
+                st = colls.setdefault(k, {"count": 0, "bytes": 0.0})
+                st["count"] += 1
+                st["bytes"] += wire
+                continue
+            if oc in _SKIP_BYTES_OPS or oc.endswith("-done"):
+                continue
+            # other top-level ops (copy, reshape w/ layout change, sort...)
+            flops += _arith_flops(op)
+            bts += _shape_bytes(op.type_str)
+            for o in op.operands:
+                if o in comp.ops:
+                    bts += _shape_bytes(comp.ops[o].type_str)
+
+        memo[name] = (flops, bts, colls)
+        return memo[name]
+
+    if entry is None:
+        return totals
+    f, b, c = comp_cost(entry)
+    totals.flops = f
+    totals.hbm_bytes = b
+    totals.collectives = c
+    return totals

@@ -1,0 +1,96 @@
+"""Batched serving launcher: prefill + decode loop with greedy sampling.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
+        --batch 4 --prompt-len 16 --new-tokens 24
+
+On TPU the same entry point serves the full config on the production mesh
+(params TP-sharded, KV cache batch-sharded); --smoke runs the reduced
+config end-to-end on the host.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, rule_set_for
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.api import Model
+from repro.models.config import RULE_SETS, make_shardings, shard_ctx_for_mesh
+from repro.models.layers import decl_logical, decl_shapes, materialize
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+    ctx = shard_ctx_for_mesh(mesh)
+    rules = RULE_SETS[rule_set_for(args.arch)]
+    decls = model.decls()
+    p_shard = make_shardings(decl_logical(decls), decl_shapes(decls),
+                             rules, mesh)
+
+    cache_len = args.prompt_len + args.new_tokens
+    if cfg.family == "vlm":
+        cache_len += cfg.n_patches
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((args.batch, cfg.src_seq, cfg.d_model),
+                                    cfg.adtype)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros(
+            (args.batch, cfg.n_patches, cfg.vision_dim), cfg.adtype)
+
+    with mesh:
+        params = jax.jit(lambda: materialize(decls, jax.random.key(0)),
+                         out_shardings=p_shard)()
+
+        @jax.jit
+        def prefill(p, b):
+            return model.prefill(p, b, ctx, cache_len=cache_len)
+
+        @jax.jit
+        def decode(p, b):
+            return model.decode(p, b, ctx)
+
+        t0 = time.time()
+        logits, cache = prefill(params, batch)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens = [tok]
+        t0 = time.time()
+        for _ in range(args.new_tokens - 1):
+            logits, cache = decode(params, {"tokens": tok, "cache": cache})
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out_tokens, axis=1))
+    tput = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)
+    print(f"{cfg.name}: prefill({args.batch}x{args.prompt_len}) "
+          f"{t_prefill*1e3:.0f} ms; decode {args.new_tokens-1} steps "
+          f"{t_decode*1e3:.0f} ms ({tput:.1f} tok/s)")
+    print("generated token ids (first row):", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Production training launcher: mesh-aware, sharded, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --steps 50 --smoke              # reduced config on local devices
+
+On a real TPU pod slice this same entry point runs the full config with
+the production mesh (--mesh single|multi), per-host data sharding,
+resumable checkpoints, and XLA latency-hiding flags; on this container
+--smoke exercises every code path on the host mesh.
+"""
+import os
+
+# Latency-hiding / async-collective flags for real TPU deployments (no-op
+# on CPU). Set before jax initializes.
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true")
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint.store import Checkpointer, latest_step  # noqa: E402
+from repro.configs.registry import (  # noqa: E402
+    ARCH_IDS, get_config, optimizer_for, rule_set_for)
+from repro.data.pipeline import Prefetcher, TokenSource  # noqa: E402
+from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: E402
+from repro.models.api import Model  # noqa: E402
+from repro.models.config import (  # noqa: E402
+    RULE_SETS, make_shardings, shard_ctx_for_mesh)
+from repro.models.layers import (  # noqa: E402
+    decl_logical, decl_shapes, materialize, param_count)
+from repro.optim.optimizers import get_optimizer  # noqa: E402
+from repro.training.step import StepWatchdog, make_train_step  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=args.mesh == "multi"))
+    ctx = shard_ctx_for_mesh(mesh)
+    rules = RULE_SETS[rule_set_for(args.arch)]
+
+    decls = model.decls()
+    print(f"{cfg.name}: {param_count(decls)/1e6:.1f}M params, mesh "
+          f"{dict(mesh.shape)}")
+    p_shard = make_shardings(decl_logical(decls), decl_shapes(decls),
+                             rules, mesh)
+    opt = get_optimizer(optimizer_for(args.arch), lr=1e-3, warmup=20)
+
+    with mesh:
+        params = jax.jit(lambda: materialize(decls, jax.random.key(0)),
+                         out_shardings=p_shard)()
+        opt_state = jax.jit(opt.init)(params)
+        step_fn = jax.jit(make_train_step(model, opt, ctx),
+                          donate_argnums=(0, 1))
+
+        ck = Checkpointer(args.ckpt_dir)
+        start = 0
+        if latest_step(args.ckpt_dir) is not None:
+            restored, start, _ = ck.restore(
+                {"params": params, "opt": opt_state})
+            params, opt_state = restored["params"], restored["opt"]
+            print(f"resumed from step {start}")
+
+        src = TokenSource(cfg.vocab, args.seq, args.batch, seed=0)
+        pf = Prefetcher(src, start_step=start)
+        wd = StepWatchdog()
+        t0 = time.time()
+        for step, batch in pf:
+            if step >= args.steps:
+                break
+            wd.start()
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            if cfg.family == "encdec":
+                jb["frames"] = jnp.zeros(
+                    (args.batch, cfg.src_seq, cfg.d_model), cfg.adtype)
+            if cfg.family == "vlm":
+                jb["patches"] = jnp.zeros(
+                    (args.batch, cfg.n_patches, cfg.vision_dim), cfg.adtype)
+            params, opt_state, m = step_fn(params, opt_state, jb)
+            slow = wd.stop()
+            if step % 10 == 0:
+                print(f"step {step:4d} loss {float(m['loss']):.4f}"
+                      f"{' [straggler]' if slow else ''}", flush=True)
+            if (step + 1) % args.ckpt_every == 0:
+                ck.save(step + 1, {"params": params, "opt": opt_state},
+                        meta={"step": step + 1})
+        pf.close()
+        ck.wait()
+    print(f"done in {time.time()-t0:.1f}s; watchdog flags: {wd.flagged}")
+
+
+if __name__ == "__main__":
+    main()

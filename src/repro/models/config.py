@@ -1,0 +1,205 @@
+"""Model configuration + logical-axis sharding for the LM substrate.
+
+Every parameter is created together with a tuple of *logical axis names*
+(e.g. ("embed", "mlp")); `resolve_spec` maps logical names to mesh axes via
+a rules table, with an automatic replicate-fallback whenever a dimension is
+not divisible by the mesh axis it would shard over (e.g. 2 KV heads on a
+16-way model axis). Two built-in rule sets:
+
+  - "tp":      Megatron tensor parallelism over the `model` axis, params
+               replicated over `data`/`pod`, batch over (`pod`, `data`).
+  - "fsdp_tp": additionally shards the `embed` logical axis over `data`
+               (ZeRO-3-style 2D sharding; needed for the 480B MoE).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 0       # 0 -> n_heads (MHA)
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    d_ff: int = 0
+    vocab: int = 256
+    act: str = "silu_glu"     # silu_glu | gelu_glu | gelu
+    norm: str = "rmsnorm"     # rmsnorm | layernorm
+    rope: str = "full"        # full | half | none
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_ff: int = 0     # parallel dense-MLP residual branch (arctic)
+    capacity_factor: float = 1.25
+    moe_group: int = 1024     # dispatch group size (tokens)
+    aux_loss_coef: float = 0.01
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+    attn_every: int = 0       # hybrid: shared attention block each k layers
+    # --- encoder-decoder (whisper) ---
+    enc_layers: int = 0
+    src_seq: int = 1500       # post-conv-frontend audio frames (stub input)
+    # --- VLM (llava) ---
+    vision_dim: int = 0       # stub patch-embedding dim
+    n_patches: int = 0
+    # --- numerics / execution ---
+    dtype: str = "float32"          # activation compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots
+    grad_accum: int = 1             # microbatches per step (§Perf lever)
+    ce_chunk: int = 0               # fused CE seq-chunk; 0 = dense loss
+    shard_residual: bool = False    # shard residual-stream D over `model`
+    #   (sequence-parallel-style stash sharding; §Perf lever for FSDP archs
+    #    where grad-accum would repeat expensive weight all-gathers)
+    attn_chunk: int = 1024          # kv-chunked attention block size
+    attn_dense_max: int = 8192      # use dense attention when T <= this
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // max(self.n_heads, 1)
+
+    @property
+    def adtype(self):
+        return jax.numpy.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jax.numpy.dtype(self.param_dtype)
+
+    @property
+    def d_inner(self) -> int:  # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def is_subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+
+# --------------------------------------------------------------------------
+# Sharding rules
+# --------------------------------------------------------------------------
+
+Rules = Tuple[Tuple[str, Optional[Tuple[str, ...]]], ...]
+
+_COMMON = (
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("layers", None),
+    ("vocab", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("mlp", ("model",)),
+    ("experts", ("model",)),
+    ("ssm_heads", ("model",)),
+    ("ssm_inner", ("model",)),
+    ("conv_dim", None),
+    ("head_dim", None),
+    ("state", None),
+    ("embed", None),
+    ("embed2", None),   # second embed-sized axis (e.g. attn output proj)
+    ("patches", None),
+    ("vision", None),
+    ("expert_mlp", None),
+)
+
+TP_RULES: Rules = _COMMON
+FSDP_TP_RULES: Rules = tuple(
+    (k, ("data",) if k in ("embed", "embed2") else v) for k, v in _COMMON)
+
+RULE_SETS = {"tp": TP_RULES, "fsdp_tp": FSDP_TP_RULES}
+
+
+def resolve_spec(logical: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                 rules: Rules, mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    table = dict(rules)
+    used = set()
+    out = []
+    for ax_name, dim in zip(logical, shape):
+        mesh_axes = table.get(ax_name) if ax_name else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        mesh_axes = tuple(a for a in mesh_axes if a in mesh.axis_names
+                          and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in mesh_axes])) if mesh_axes else 1
+        # jit in_shardings require exact tiling, so replicate non-divisible
+        # dims (e.g. kv_heads=2 or vocab=49155 on a 16-way model axis).
+        # Internal with_sharding_constraint (ShardCtx) may still shard
+        # unevenly — GSPMD pads there.
+        if not mesh_axes or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def make_shardings(spec_tree, param_shapes, rules: Rules, mesh: Mesh):
+    """NamedSharding tree matching a (logical-axes tree, eval_shape tree)."""
+    return jax.tree.map(
+        lambda logical, shp: NamedSharding(
+            mesh, resolve_spec(logical, shp.shape, rules, mesh)),
+        spec_tree, param_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Static activation-sharding context threaded through model code."""
+
+    enabled: bool = False
+    dp: Tuple[str, ...] = ("pod", "data")   # batch axes present in the mesh
+    tp: str = "model"
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint(x, P(*axes)) when sharding is enabled.
+
+        `axes` entries: "dp" -> the batch axes, "tp" -> model axis, None.
+        """
+        if not self.enabled:
+            return x
+        resolved = tuple(
+            self.dp if a == "dp" else (self.tp if a == "tp" else a)
+            for a in axes)
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+    def batch(self, x):
+        return self.constrain(x, "dp", *([None] * (x.ndim - 1)))
+
+
+NO_SHARD = ShardCtx(enabled=False)
+
+
+def shard_ctx_for_mesh(mesh: Mesh) -> ShardCtx:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ShardCtx(enabled=True, dp=dp, tp="model")

@@ -1,0 +1,404 @@
+"""Shared neural building blocks: norms, RoPE, GQA attention, MLP, embeds.
+
+Conventions:
+  - activations (B, S, D); attention heads (B, S, H, head_dim);
+  - params are plain jnp arrays in nested dicts; every init helper returns
+    (array, logical_axes) pairs that `unzip` splits into a params tree and a
+    matching logical-spec tree (consumed by config.make_shardings);
+  - softmax/norm statistics accumulate in f32 regardless of compute dtype;
+  - attention dispatches between a dense path (short kv) and a kv-chunked
+    online-softmax path (long prefill) so that 32k-500k contexts never
+    materialize an O(S*T) score tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, NO_SHARD, ShardCtx
+
+# --------------------------------------------------------------------------
+# declarative param system
+# --------------------------------------------------------------------------
+# Init builds a pure-Python tree of ParamDecl descriptors; `materialize`
+# turns it into arrays (never called for dry-runs — `decl_shapes` feeds
+# ShapeDtypeStructs straight to jit.lower, so a 480B model costs nothing).
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple
+    logical: tuple      # logical axis names, len == ndim
+    dtype: str
+    kind: str = "normal"  # normal | zeros | ones
+    std: float = 0.02
+
+
+def _is_decl(x):
+    return isinstance(x, ParamDecl)
+
+
+def dense_init(shape, logical, dtype, fan_in=None, scale=1.0):
+    fan_in = fan_in if fan_in is not None else (
+        shape[-2] if len(shape) >= 2 else shape[-1])
+    return ParamDecl(tuple(shape), tuple(logical), jnp.dtype(dtype).name,
+                     "normal", scale / np.sqrt(max(fan_in, 1)))
+
+
+def embed_init(shape, logical, dtype):
+    return ParamDecl(tuple(shape), tuple(logical), jnp.dtype(dtype).name,
+                     "normal", 0.02)
+
+
+def ones_init(shape, logical, dtype):
+    return ParamDecl(tuple(shape), tuple(logical), jnp.dtype(dtype).name,
+                     "ones")
+
+
+def zeros_init(shape, logical, dtype):
+    return ParamDecl(tuple(shape), tuple(logical), jnp.dtype(dtype).name,
+                     "zeros")
+
+
+def materialize(decls, key):
+    """Decl tree -> param tree (deterministic per-leaf fold_in keys)."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+
+    def make(i, d):
+        if d.kind == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.kind == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        k = jax.random.fold_in(key, i)
+        return (jax.random.normal(k, d.shape, jnp.float32) * d.std
+                ).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [make(i, d) for i, d in enumerate(leaves)])
+
+
+def decl_shapes(decls):
+    """Decl tree -> ShapeDtypeStruct tree (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        decls, is_leaf=_is_decl)
+
+
+def decl_logical(decls):
+    """Decl tree -> logical-axes tree (for config.make_shardings)."""
+    return jax.tree.map(lambda d: d.logical, decls, is_leaf=_is_decl)
+
+
+def param_count(decls) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(decls, is_leaf=_is_decl))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def apply_norm(cfg: ModelConfig, x, p):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_init(cfg: ModelConfig, shape, logical):
+    p = {"scale": ones_init(shape, logical, cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = zeros_init(shape, logical, cfg.pdtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float,
+         fraction: float = 1.0) -> jnp.ndarray:
+    """Apply RoPE to x (B, S, H, D) at positions pos (B, S).
+
+    fraction < 1 rotates only the leading `fraction * D` dims (rounded to a
+    multiple of 2) and passes the rest through — the ChatGLM "2d"/partial
+    RoPE variant uses fraction = 0.5.
+    """
+    d = x.shape[-1]
+    rd = int(d * fraction) // 2 * 2
+    if rd == 0:
+        return x
+    freqs = jnp.exp(
+        -np.log(theta) * jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)
+    ang = pos.astype(jnp.float32)[..., None] * freqs      # (B, S, rd/2)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    x1 = x[..., : rd // 2]
+    x2 = x[..., rd // 2: rd]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rotated, x[..., rd:]], axis=-1)
+
+
+def rope_fraction(cfg: ModelConfig) -> float:
+    return {"full": 1.0, "half": 0.5, "none": 0.0}[cfg.rope]
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _grouped(q, hk):
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, hk, hq // hk, d)
+
+
+def _dense_attention(q, k, v, q_pos, k_pos, kv_len, causal):
+    """Materialized-scores path (short kv / decode)."""
+    b, s, hk, g, d = q.shape
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / np.sqrt(d)
+    mask = (k_pos[:, None, :] < kv_len[:, None, None])
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, kv_len, causal, chunk):
+    """KV-chunked online-softmax (flash-style) path for long contexts."""
+    b, s, hk, g, d = q.shape
+    t = k.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    nc = k.shape[1] // chunk
+    k = k.reshape(b, nc, chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(b, nc, chunk, hk, d).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+    scale = 1.0 / np.sqrt(d)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, kpc = xs
+        sc = jnp.einsum("bskgd,btkd->bkgst", q, kc,
+                        preferred_element_type=jnp.float32) * scale
+        mask = kpc[:, None, :] < kv_len[:, None, None]
+        if causal:
+            mask &= kpc[:, None, :] <= q_pos[:, :, None]
+        sc = jnp.where(mask[:, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        # accumulator stays f32 (flash-attention convention)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hk, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k, v, kp))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, S, Hk, g, d)
+
+
+def attention(cfg: ModelConfig, q, k, v, q_pos, kv_len=None, *,
+              causal=True, ctx: ShardCtx = NO_SHARD):
+    """GQA attention. q (B,S,Hq,D); k/v (B,T,Hk,D); q_pos (B,S) absolute.
+
+    kv_len (B,) masks cache positions >= kv_len (decode); defaults to T.
+    """
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    hk = k.shape[2]
+    qg = _grouped(q, hk)
+    k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    if kv_len is None:
+        kv_len = jnp.full((b,), t, jnp.int32)
+    # Dense path when the per-head score block S*T is small (covers short
+    # training contexts AND single-token decode against long caches);
+    # kv-chunked online softmax otherwise (long prefill).
+    if s * t <= cfg.attn_dense_max ** 2:
+        out = _dense_attention(qg, k, v, q_pos, k_pos, kv_len, causal)
+    else:
+        out = _chunked_attention(qg, k, v, q_pos, k_pos, kv_len, causal,
+                                 cfg.attn_chunk)
+    out = out.reshape(b, s, hq, d)
+    return ctx.constrain(out, "dp", None, "tp", None)
+
+
+# --------------------------------------------------------------------------
+# attention block params / apply
+# --------------------------------------------------------------------------
+
+
+def attn_init(cfg: ModelConfig, layers: Optional[int] = None):
+    """QKV/O projections, optionally stacked over a leading `layers` dim."""
+    hq, hk, hd, d = cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.d_model
+    lead = (layers,) if layers else ()
+    llog = ("layers",) if layers else ()
+    p = {
+        "wq": dense_init(lead + (d, hq * hd), llog + ("embed", "heads"),
+                         cfg.pdtype, fan_in=d),
+        "wk": dense_init(lead + (d, hk * hd), llog + ("embed", "kv_heads"),
+                         cfg.pdtype, fan_in=d),
+        "wv": dense_init(lead + (d, hk * hd), llog + ("embed", "kv_heads"),
+                         cfg.pdtype, fan_in=d),
+        "wo": dense_init(lead + (hq * hd, d), llog + ("heads", "embed2"),
+                         cfg.pdtype, fan_in=hq * hd,
+                         scale=1.0 / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init(lead + (hq * hd,), llog + ("heads",), cfg.pdtype)
+        p["bk"] = zeros_init(lead + (hk * hd,), llog + ("kv_heads",), cfg.pdtype)
+        p["bv"] = zeros_init(lead + (hk * hd,), llog + ("kv_heads",), cfg.pdtype)
+    return p
+
+
+def attn_qkv(cfg: ModelConfig, p, x, pos, *, use_rope=True):
+    """Project + (optionally) rotate. Returns q (B,S,Hq,hd), k/v (B,S,Hk,hd)."""
+    b, s, _ = x.shape
+    hq, hk, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hk, hd)
+    v = v.reshape(b, s, hk, hd)
+    if use_rope and cfg.rope != "none":
+        fr = rope_fraction(cfg)
+        q = rope(q, pos, cfg.rope_theta, fr)
+        k = rope(k, pos, cfg.rope_theta, fr)
+    return q, k, v
+
+
+def attn_out(p, o):
+    b, s = o.shape[:2]
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+
+def mlp_init(cfg: ModelConfig, d_ff: Optional[int] = None,
+             layers: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    lead = (layers,) if layers else ()
+    llog = ("layers",) if layers else ()
+    p = {"wu": dense_init(lead + (d, ff), llog + ("embed", "mlp"),
+                          cfg.pdtype, fan_in=d),
+         "wo": dense_init(lead + (ff, d), llog + ("mlp", "embed2"),
+                          cfg.pdtype, fan_in=ff,
+                          scale=1.0 / np.sqrt(2 * max(cfg.n_layers, 1)))}
+    if cfg.act.endswith("_glu"):
+        p["wg"] = dense_init(lead + (d, ff), llog + ("embed", "mlp"),
+                             cfg.pdtype, fan_in=d)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x, ctx: ShardCtx = NO_SHARD):
+    u = x @ p["wu"]
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(x @ p["wg"]) * u
+    elif cfg.act == "gelu_glu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * u
+    else:
+        h = jax.nn.gelu(u, approximate=True)
+    h = ctx.constrain(h, "dp", None, "tp")
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits / loss
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(embed, tokens, dtype):
+    return embed[tokens].astype(dtype)
+
+
+def logits_out(cfg: ModelConfig, params, h, ctx: ShardCtx = NO_SHARD):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    w = table.T if cfg.tie_embeddings else table
+    logits = h @ w.astype(h.dtype)
+    return ctx.constrain(logits, "dp", None, "tp")
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-mean CE in f32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    valid = (labels >= 0) if mask is None else mask & (labels >= 0)
+    valid = valid.astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def fused_cross_entropy(cfg: ModelConfig, params, h, labels,
+                        ctx: ShardCtx = NO_SHARD):
+    """CE without materializing full (B, S, V) logits (§Perf lever).
+
+    Scans rematerialized sequence chunks: each chunk projects h @ W,
+    reduces to (nll_sum, count), and is recomputed in the backward pass —
+    peak logits memory drops from B*S*V to B*ce_chunk*V (f32). Equivalent
+    to cross_entropy(logits_out(h), labels) up to summation order."""
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    w = table.T if cfg.tie_embeddings else table
+    b, s, d = h.shape
+    c = cfg.ce_chunk
+    if not c or s % c:
+        return cross_entropy(logits_out(cfg, params, h, ctx), labels)
+    nc = s // c
+    hs = h.reshape(b, nc, c, d).swapaxes(0, 1)          # (nc, B, c, D)
+    ls = labels.reshape(b, nc, c).swapaxes(0, 1)
+
+    def step(carry, xs):
+        hc, lc = xs
+        logits = ctx.constrain(hc @ w.astype(hc.dtype), "dp", None, "tp")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll_sum, cnt = carry
+        return (nll_sum + ((lse - ll) * valid).sum(),
+                cnt + valid.sum()), None
+
+    body = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    (nll_sum, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (hs, ls))
+    return nll_sum / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,85 @@
+"""LLaVA-NeXT-style VLM: Mistral-7B backbone + stubbed vision frontend.
+
+Per the assignment the modality frontend is a STUB: `input_specs` provides
+precomputed anyres patch embeddings (B, n_patches, vision_dim); here they
+pass through the 2-layer MLP projector and are prepended to the token
+embeddings, exactly as the real model splices projected CLIP features into
+the input sequence. The backbone is the shared decoder-only transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig, NO_SHARD, ShardCtx
+from repro.models.layers import (
+    apply_norm, cross_entropy, dense_init, embed_tokens, logits_out)
+
+
+def llava_decls(cfg: ModelConfig):
+    tree = tf.lm_decls(cfg)
+    tree["projector"] = {
+        "w1": dense_init((cfg.vision_dim, cfg.d_model), ("vision", "embed"),
+                         cfg.pdtype, fan_in=cfg.vision_dim),
+        "w2": dense_init((cfg.d_model, cfg.d_model), ("embed", "embed2"),
+                         cfg.pdtype, fan_in=cfg.d_model),
+    }
+    return tree
+
+
+def _project(cfg, params, patches):
+    h = patches.astype(cfg.adtype) @ params["projector"]["w1"]
+    return jax.nn.gelu(h, approximate=True) @ params["projector"]["w2"]
+
+
+def llava_apply(cfg: ModelConfig, params, tokens, patches, *,
+                ctx: ShardCtx = NO_SHARD):
+    """tokens (B, S_text), patches (B, n_patches, vision_dim).
+
+    Returns logits over the FULL spliced sequence (img tokens first)."""
+    b, s_txt = tokens.shape
+    img = _project(cfg, params, patches)                     # (B, P, D)
+    txt = embed_tokens(params["embed"], tokens, cfg.adtype)  # (B, S, D)
+    h = jnp.concatenate([img, txt], axis=1)
+    h = ctx.constrain(h, "dp", None, None)
+    s = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, aux, _ = tf.forward_hidden(cfg, params, h, positions, ctx=ctx)
+    h = apply_norm(cfg, h, params["final_norm"])
+    return logits_out(cfg, params, h, ctx), aux
+
+
+def llava_loss(cfg, params, batch, *, ctx: ShardCtx = NO_SHARD):
+    """CE over text positions only (image positions carry no labels)."""
+    tokens = batch["tokens"]          # (B, S_text + 1)
+    patches = batch["patches"]
+    logits, aux = llava_apply(cfg, params, tokens[:, :-1], patches, ctx=ctx)
+    n_img = patches.shape[1]
+    txt_logits = logits[:, n_img:]
+    loss = cross_entropy(txt_logits, tokens[:, 1:])
+    return loss + cfg.aux_loss_coef * aux, {"loss": loss}
+
+
+def llava_prefill(cfg, params, tokens, patches, *, cache_len: int,
+                  ctx: ShardCtx = NO_SHARD):
+    """Prefill the spliced [img; text] sequence, return cache for decode."""
+    b, s_txt = tokens.shape
+    img = _project(cfg, params, patches)
+    txt = embed_tokens(params["embed"], tokens, cfg.adtype)
+    h = jnp.concatenate([img, txt], axis=1)
+    h = ctx.constrain(h, "dp", None, None)
+    s = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, _, (k, v) = tf.forward_hidden(cfg, params, h, positions, ctx=ctx,
+                                     mode="prefill")
+    h = apply_norm(cfg, h, params["final_norm"])
+    logits = logits_out(cfg, params, h, ctx)
+    pad = cache_len - s
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, {"k": k, "v": v, "pos": jnp.asarray(s, jnp.int32)}
+
+
+# decode after the spliced prefill is identical to the plain LM decode
+llava_decode = tf.lm_decode

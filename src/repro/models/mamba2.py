@@ -1,0 +1,459 @@
+"""Mamba2 (SSD, state-space duality) and the Zamba2 hybrid.
+
+The SSD layer computes, per head h with per-head scalar decay A_h < 0,
+
+    S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_t^T,     y_t = C_t S_t + D x_t
+
+using the chunked block decomposition of Dao & Gu (2024): within a chunk
+of length Q the output is an attention-like (Q x Q) masked matmul (MXU
+work); across chunks a single lax.scan carries the (H, P, N) state. The
+recurrent form is implemented separately for decode and used as the
+equivalence oracle in tests (chunked == recurrent is a property test).
+
+Zamba2 = a Mamba2 backbone with ONE shared transformer block applied every
+`attn_every` layers: its input is [h, h_embed0] concatenated and projected,
+its output added back through a per-invocation linear (the weight-shared
+global-attention pattern of the Zamba papers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, NO_SHARD, ShardCtx
+from repro.models.layers import (
+    apply_norm, attn_init, attn_out, attn_qkv, attention, cross_entropy,
+    dense_init, embed_init, embed_tokens, logits_out, mlp_apply, mlp_init,
+    norm_init, ones_init, rms_norm, zeros_init)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+
+def ssm_block_decls(cfg: ModelConfig, layers: Optional[int] = None):
+    l = layers
+    lead = (l,) if l else ()
+    llog = ("layers",) if l else ()
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+    return {
+        "norm": norm_init(cfg, lead + (d,), llog + ("embed",)),
+        "wz": dense_init(lead + (d, di), llog + ("embed", "ssm_inner"),
+                         cfg.pdtype, fan_in=d),
+        "wx": dense_init(lead + (d, di), llog + ("embed", "ssm_inner"),
+                         cfg.pdtype, fan_in=d),
+        "wB": dense_init(lead + (d, g * n), llog + ("embed", "state"),
+                         cfg.pdtype, fan_in=d),
+        "wC": dense_init(lead + (d, g * n), llog + ("embed", "state"),
+                         cfg.pdtype, fan_in=d),
+        "wdt": dense_init(lead + (d, h), llog + ("embed", "ssm_heads"),
+                          cfg.pdtype, fan_in=d),
+        "conv_x": dense_init(lead + (k, di), llog + (None, "ssm_inner"),
+                             cfg.pdtype, fan_in=k),
+        "conv_B": dense_init(lead + (k, g * n), llog + (None, "state"),
+                             cfg.pdtype, fan_in=k),
+        "conv_C": dense_init(lead + (k, g * n), llog + (None, "state"),
+                             cfg.pdtype, fan_in=k),
+        "conv_bias_x": zeros_init(lead + (di,), llog + ("ssm_inner",), cfg.pdtype),
+        "conv_bias_B": zeros_init(lead + (g * n,), llog + ("state",), cfg.pdtype),
+        "conv_bias_C": zeros_init(lead + (g * n,), llog + ("state",), cfg.pdtype),
+        "A_log": zeros_init(lead + (h,), llog + ("ssm_heads",), jnp.float32),
+        "D": ones_init(lead + (h,), llog + ("ssm_heads",), jnp.float32),
+        "dt_bias": zeros_init(lead + (h,), llog + ("ssm_heads",), jnp.float32),
+        "gate_norm": ones_init(lead + (di,), llog + ("ssm_inner",), cfg.pdtype),
+        "wo": dense_init(lead + (di, d), llog + ("ssm_inner", "embed2"),
+                         cfg.pdtype, fan_in=di,
+                         scale=1.0 / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def mamba_lm_decls(cfg: ModelConfig):
+    tree = {
+        "embed": embed_init((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                            cfg.pdtype),
+        "blocks": ssm_block_decls(cfg, layers=cfg.n_layers),
+        "final_norm": norm_init(cfg, (cfg.d_model,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = dense_init((cfg.d_model, cfg.vocab),
+                                     ("embed", "vocab"), cfg.pdtype,
+                                     fan_in=cfg.d_model)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# core SSD math
+# --------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv, kernel k. x (B, L, C), w (k, C), b (C,).
+
+    With a cache (B, k-1, C) of trailing pre-conv inputs, returns the conv
+    over [cache; x] (decode path). Returns (y, new_cache)."""
+    k = w.shape[0]
+    hist = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) \
+        if cache is None else cache
+    xp = jnp.concatenate([hist, x], axis=1)
+    y = sum(w[i] * jax.lax.dynamic_slice_in_dim(xp, i, x.shape[1], axis=1)
+            for i in range(k))
+    new_cache = xp[:, -(k - 1):, :] if k > 1 else hist
+    return jax.nn.silu(y + b), new_cache
+
+
+def _split_heads(cfg, x, bm, c, dt):
+    """-> x (B,L,G,Hg,P), B/C (B,L,G,N), dt (B,L,G,Hg)."""
+    b, l = x.shape[:2]
+    g, n, hh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hg, p = hh // g, cfg.ssm_head_dim
+    return (x.reshape(b, l, g, hg, p), bm.reshape(b, l, g, n),
+            c.reshape(b, l, g, n), dt.reshape(b, l, g, hg))
+
+
+def ssd_chunked(cfg: ModelConfig, x, bm, c, dt, a_head, init_state=None):
+    """Chunked SSD scan.
+
+    Args: x (B,L,H,P) via grouped reshape, bm/c (B,L,G,N), dt (B,L,H) > 0,
+      a_head (H,) = -exp(A_log) < 0. init_state optional (B,G,Hg,N,P).
+    Returns: y (B,L,G,Hg,P), final_state (B,G,Hg,N,P).
+    """
+    b, l0 = dt.shape[:2]
+    q = min(cfg.ssm_chunk, l0)
+    pad = (-l0) % q
+    if pad:  # dt = 0 on padding => identity decay, zero input: state exact
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),) * (dt.ndim - 2))
+    l = l0 + pad
+    nc = l // q
+    x, bm, c, dt = _split_heads(cfg, x, bm, c, dt)
+    g, hg = x.shape[2], x.shape[3]
+    n, p = bm.shape[-1], x.shape[-1]
+
+    a = dt * a_head.reshape(1, 1, g, hg)                    # (B,L,G,Hg) <= 0
+    xc = x.reshape(b, nc, q, g, hg, p)
+    bc = bm.reshape(b, nc, q, g, n)
+    cc = c.reshape(b, nc, q, g, n)
+    dtc = dt.reshape(b, nc, q, g, hg)
+    ac = a.reshape(b, nc, q, g, hg)
+    cum = jnp.cumsum(ac, axis=2)                            # (B,nc,Q,G,Hg)
+
+    # Intra-chunk (the "attention-like" diagonal block).
+    cb = jnp.einsum("bcign,bcjgn->bcgij", cc, bc,
+                    preferred_element_type=jnp.float32)     # (B,nc,G,Q,Q)
+    seg = cum[:, :, :, None] - cum[:, :, None, :, :, :]
+    # seg[b,c,i,j,g,h] = cum_i - cum_j ; mask j <= i
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None, None], jnp.exp(seg), 0.0)
+    xdt = xc * dtc[..., None]
+    y = jnp.einsum("bcgij,bcijgh,bcjghp->bcighp",
+                   cb, lmat.astype(x.dtype), xdt)
+
+    # Chunk boundary states + inter-chunk recurrence.
+    decay_out = jnp.exp(cum[:, :, -1:] - cum)               # (B,nc,Q,G,Hg)
+    states = jnp.einsum("bcjgn,bcjghp->bcghnp", bc,
+                        xdt * decay_out[..., None].astype(x.dtype))
+    chunk_decay = jnp.exp(cum[:, :, -1])                    # (B,nc,G,Hg)
+
+    def step(ss, xs):
+        st, dk = xs                                         # (B,G,Hg,N,P), (B,G,Hg)
+        ss_new = ss * dk[..., None, None].astype(ss.dtype) + st
+        return ss_new, ss                                   # emit state BEFORE chunk
+
+    ss0 = (jnp.zeros((b, g, hg, n, p), x.dtype) if init_state is None
+           else init_state)
+    final, prev = jax.lax.scan(
+        step, ss0,
+        (states.transpose(1, 0, 2, 3, 4, 5), chunk_decay.transpose(1, 0, 2, 3)))
+    prev = prev.transpose(1, 0, 2, 3, 4, 5)                 # (B,nc,G,Hg,N,P)
+    y_inter = jnp.einsum("bcign,bcghnp->bcighp", cc, prev) \
+        * jnp.exp(cum).astype(x.dtype)[..., None]
+    # y accumulated in f32 via the cb einsum; back to the compute dtype
+    y = (y + y_inter).astype(x.dtype).reshape(b, l, g, hg, p)[:, :l0]
+    return y, final
+
+
+def ssd_recurrent(cfg: ModelConfig, x, bm, c, dt, a_head, init_state=None):
+    """Step-by-step recurrence (decode oracle; also the 1-token path)."""
+    b, l = dt.shape[:2]
+    x, bm, c, dt = _split_heads(cfg, x, bm, c, dt)
+    g, hg = x.shape[2], x.shape[3]
+    n, p = bm.shape[-1], x.shape[-1]
+    a = dt * a_head.reshape(1, 1, g, hg)
+
+    def step(ss, xs):
+        xt, bt, ct, dtt, at = xs
+        ss = ss * jnp.exp(at)[..., None, None].astype(ss.dtype) \
+            + jnp.einsum("bgn,bghp->bghnp", bt, xt * dtt[..., None])
+        yt = jnp.einsum("bgn,bghnp->bghp", ct, ss)
+        return ss, yt
+
+    ss0 = (jnp.zeros((b, g, hg, n, p), x.dtype) if init_state is None
+           else init_state)
+    xs = (x.transpose(1, 0, 2, 3, 4), bm.transpose(1, 0, 2, 3),
+          c.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2, 3),
+          a.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, ss0, xs)
+    return ys.transpose(1, 0, 2, 3, 4), final
+
+
+def ssm_block_apply(cfg: ModelConfig, p, h, *, ctx: ShardCtx = NO_SHARD,
+                    cache=None, mode="train"):
+    """One Mamba2 block. cache = (conv_x, conv_B, conv_C, ssm_state)."""
+    x_in = apply_norm(cfg, h, p["norm"])
+    z = x_in @ p["wz"]
+    xr = x_in @ p["wx"]
+    br = x_in @ p["wB"]
+    cr = x_in @ p["wC"]
+    dt_raw = x_in @ p["wdt"]
+
+    cc = cache if cache is not None else (None, None, None, None)
+    xr, ncx = _causal_conv(xr, p["conv_x"], p["conv_bias_x"], cc[0])
+    br, ncb = _causal_conv(br, p["conv_B"], p["conv_bias_B"], cc[1])
+    cr, ncc = _causal_conv(cr, p["conv_C"], p["conv_bias_C"], cc[2])
+
+    b, l = xr.shape[:2]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"]).astype(xr.dtype)
+    a_head = -jnp.exp(p["A_log"]).astype(xr.dtype)
+    xh = xr.reshape(b, l, cfg.ssm_heads, cfg.ssm_head_dim)
+
+    use_recurrent = (mode == "decode") or l == 1
+    fn = ssd_recurrent if use_recurrent else ssd_chunked
+    y, new_state = fn(cfg, xh, br, cr, dt, a_head, init_state=cc[3])
+
+    dmat = p["D"].astype(xr.dtype).reshape(
+        1, 1, cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups, 1)
+    y = y + dmat * xh.reshape(y.shape)
+    y = y.reshape(b, l, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = (y @ p["wo"]).astype(h.dtype)
+    new_cache = (ncx, ncb, ncc, new_state)
+    return ctx.constrain(h + out, "dp", None, None), new_cache
+
+
+# --------------------------------------------------------------------------
+# Mamba2 LM (train / prefill / decode)
+# --------------------------------------------------------------------------
+
+
+def _scan_blocks(cfg, blocks, h, ctx, cache, mode):
+    """Scan the Mamba2 block stack. In train mode no cache flows through
+    (saves the O(L * B * H * P * N) state stash); prefill/decode emit the
+    per-layer conv histories + SSM states."""
+    train = mode == "train"
+
+    def body(carry, xs):
+        hc = carry
+        lp = xs[0]
+        lc = None if train else xs[1]
+        hc, new_c = ssm_block_apply(cfg, lp, hc, ctx=ctx, cache=lc, mode=mode)
+        return hc, (None if train else new_c)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+    if train:
+        return jax.lax.scan(body, h, (blocks,))
+    if cache is None:  # prefill: fresh histories/states
+        nl = jax.tree.leaves(blocks)[0].shape[0]
+        k = cfg.ssm_conv - 1
+        b = h.shape[0]
+        g, hg = cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups
+        cache = (
+            jnp.zeros((nl, b, k, cfg.d_inner), h.dtype),
+            jnp.zeros((nl, b, k, cfg.ssm_groups * cfg.ssm_state), h.dtype),
+            jnp.zeros((nl, b, k, cfg.ssm_groups * cfg.ssm_state), h.dtype),
+            jnp.zeros((nl, b, g, hg, cfg.ssm_state, cfg.ssm_head_dim),
+                      h.dtype),
+        )
+    return jax.lax.scan(body, h, (blocks, cache))
+
+
+def mamba_lm_apply(cfg: ModelConfig, params, tokens, *,
+                   ctx: ShardCtx = NO_SHARD, cache=None, mode="train"):
+    h = embed_tokens(params["embed"], tokens, cfg.adtype)
+    h = ctx.constrain(h, "dp", None, None)
+    h, new_cache = _scan_blocks(cfg, params["blocks"], h, ctx, cache, mode)
+    h = apply_norm(cfg, h, params["final_norm"])
+    logits = logits_out(cfg, params, h, ctx)
+    return logits, new_cache
+
+
+def mamba_lm_loss(cfg, params, batch, *, ctx: ShardCtx = NO_SHARD):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    if cfg.ce_chunk:
+        from repro.models.layers import fused_cross_entropy
+        h = embed_tokens(params["embed"], inp, cfg.adtype)
+        h = ctx.constrain(h, "dp", None, None)
+        h, _ = _scan_blocks(cfg, params["blocks"], h, ctx, None, "train")
+        h = apply_norm(cfg, h, params["final_norm"])
+        loss = fused_cross_entropy(cfg, params, h, labels, ctx)
+        return loss, {"loss": loss}
+    logits, _ = mamba_lm_apply(cfg, params, inp, ctx=ctx)
+    loss = cross_entropy(logits, labels)
+    return loss, {"loss": loss}
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    """Decode cache ShapeDtypeStructs (conv histories + SSM state)."""
+    k = cfg.ssm_conv - 1
+    g, hg = cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups
+    dt = cfg.adtype
+    l = cfg.n_layers
+    return (
+        jax.ShapeDtypeStruct((l, batch, k, cfg.d_inner), dt),
+        jax.ShapeDtypeStruct((l, batch, k, cfg.ssm_groups * cfg.ssm_state), dt),
+        jax.ShapeDtypeStruct((l, batch, k, cfg.ssm_groups * cfg.ssm_state), dt),
+        jax.ShapeDtypeStruct((l, batch, g, hg, cfg.ssm_state,
+                              cfg.ssm_head_dim), dt),
+    )
+
+
+def mamba_cache_logical(cfg: ModelConfig):
+    return (
+        ("layers", "batch", None, "ssm_inner"),
+        ("layers", "batch", None, "state"),
+        ("layers", "batch", None, "state"),
+        ("layers", "batch", None, "ssm_heads", "state", "head_dim"),
+    )
+
+
+# --------------------------------------------------------------------------
+# Zamba2 hybrid
+# --------------------------------------------------------------------------
+
+
+def _num_shared(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_layers // max(cfg.attn_every, 1))
+
+
+def zamba_decls(cfg: ModelConfig):
+    d = cfg.d_model
+    ns = _num_shared(cfg)
+    tree = {
+        "embed": embed_init((cfg.vocab, d), ("vocab", "embed"), cfg.pdtype),
+        "blocks": ssm_block_decls(cfg, layers=cfg.n_layers),
+        "shared": {
+            "w_in": dense_init((2 * d, d), ("embed", "embed2"), cfg.pdtype,
+                               fan_in=2 * d),
+            "attn_norm": norm_init(cfg, (d,), ("embed",)),
+            "attn": attn_init(cfg),
+            "mlp_norm": norm_init(cfg, (d,), ("embed",)),
+            "mlp": mlp_init(cfg),
+            "w_out": dense_init((ns, d, d), ("layers", "embed", "embed2"),
+                                cfg.pdtype, fan_in=d),
+        },
+        "final_norm": norm_init(cfg, (d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = dense_init((d, cfg.vocab), ("embed", "vocab"),
+                                     cfg.pdtype, fan_in=d)
+    return tree
+
+
+def _shared_block(cfg, sp, use_idx, h, h0, positions, ctx,
+                  kv=None, start=0, mode="train"):
+    """The weight-shared transformer block, applied at `use_idx`."""
+    u = jnp.concatenate([h, h0], axis=-1) @ sp["w_in"]
+    a_in = apply_norm(cfg, u, sp["attn_norm"])
+    q, k, v = attn_qkv(cfg, sp["attn"], a_in, positions)
+    if mode == "decode":
+        kc, vc = kv
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, start, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, start, 0, 0))
+        kv_len = jnp.full((h.shape[0],), 0, jnp.int32) + start + q.shape[1]
+        out = attention(cfg, q, kc, vc, positions, kv_len=kv_len,
+                        causal=True, ctx=ctx)
+        new_kv = (kc, vc)
+    else:
+        out = attention(cfg, q, k, v, positions, causal=True, ctx=ctx)
+        new_kv = (k, v)
+    u = u + attn_out(sp["attn"], out).astype(u.dtype)
+    u = u + mlp_apply(cfg, sp["mlp"], apply_norm(cfg, u, sp["mlp_norm"]), ctx)
+    return h + u @ sp["w_out"][use_idx], new_kv
+
+
+def zamba_apply(cfg: ModelConfig, params, tokens, *, ctx: ShardCtx = NO_SHARD,
+                cache=None, mode="train", cache_len: int = 0):
+    """cache = {"ssm": mamba caches, "kv": (k, v) stacked (ns, ...), "pos"}."""
+    b, s = tokens.shape
+    ns = _num_shared(cfg)
+    every = max(cfg.attn_every, 1)
+    start = cache["pos"] if mode == "decode" else 0
+    pos0 = jnp.arange(s)[None] + (start if mode == "decode" else 0)
+    positions = jnp.broadcast_to(pos0, (b, s))
+
+    h = embed_tokens(params["embed"], tokens, cfg.adtype)
+    h = ctx.constrain(h, "dp", None, None)
+    h0 = h
+
+    ssm_cache = cache["ssm"] if cache is not None else None
+    new_ssm, new_kv_k, new_kv_v = [], [], []
+    use = 0
+    for seg0 in range(0, cfg.n_layers, every):
+        seg1 = min(seg0 + every, cfg.n_layers)
+        seg_blocks = jax.tree.map(lambda x: x[seg0:seg1], params["blocks"])
+        seg_cache = (jax.tree.map(lambda x: x[seg0:seg1], ssm_cache)
+                     if ssm_cache is not None else None)
+        h, seg_new = _scan_blocks(cfg, seg_blocks, h, ctx, seg_cache, mode)
+        new_ssm.append(seg_new)
+        if use < ns:
+            kv = None
+            if mode == "decode":
+                kv = (cache["kv"][0][use], cache["kv"][1][use])
+            h, nkv = _shared_block(cfg, params["shared"], use, h, h0,
+                                   positions, ctx, kv=kv, start=start,
+                                   mode=mode)
+            if mode == "prefill" and cache_len:
+                pad = cache_len - s
+                nkv = tuple(jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                            for t in nkv)
+            new_kv_k.append(nkv[0])
+            new_kv_v.append(nkv[1])
+            use += 1
+
+    h = apply_norm(cfg, h, params["final_norm"])
+    logits = logits_out(cfg, params, h, ctx)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm),
+            "kv": (jnp.stack(new_kv_k), jnp.stack(new_kv_v)),
+            "pos": (start + s) if mode == "decode" else jnp.asarray(s, jnp.int32),
+        }
+    return logits, new_cache
+
+
+def zamba_loss(cfg, params, batch, *, ctx: ShardCtx = NO_SHARD):
+    tokens = batch["tokens"]
+    logits, _ = zamba_apply(cfg, params, tokens[:, :-1], ctx=ctx)
+    loss = cross_entropy(logits, tokens[:, 1:])
+    return loss, {"loss": loss}
+
+
+def zamba_cache_shape(cfg: ModelConfig, batch: int, cache_len: int):
+    ns = _num_shared(cfg)
+    kv = (ns, batch, cache_len, cfg.kv_heads, cfg.hd)
+    return {
+        "ssm": mamba_cache_shape(cfg, batch),
+        "kv": (jax.ShapeDtypeStruct(kv, cfg.adtype),
+               jax.ShapeDtypeStruct(kv, cfg.adtype)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def zamba_cache_logical(cfg: ModelConfig):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"ssm": mamba_cache_logical(cfg), "kv": (kv, kv), "pos": ()}

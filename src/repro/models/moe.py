@@ -1,0 +1,102 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based one-hot dispatch.
+
+SPMD-friendly (static shapes): tokens are split into fixed-size groups;
+each group dispatches into (E, C) capacity slots via one-hot einsums (the
+Switch/Mesh-TF formulation), experts are sharded over the `model` mesh axis
+(expert parallelism) and groups over (`pod`, `data`), so the dispatch
+einsum lowers to the expected all-to-all pattern. Overflowing tokens are
+dropped (capacity_factor controls the drop rate); the router aux loss
+pushes toward balanced load.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, NO_SHARD, ShardCtx
+from repro.models.layers import dense_init
+
+
+def moe_init(cfg: ModelConfig, layers: Optional[int] = None):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    lead = (layers,) if layers else ()
+    llog = ("layers",) if layers else ()
+    p = {
+        "router": dense_init(lead + (d, e), llog + ("embed", "experts"),
+                             jnp.float32, fan_in=d),
+        "wu": dense_init(lead + (e, d, f),
+                         llog + ("experts", "embed", "expert_mlp"),
+                         cfg.pdtype, fan_in=d),
+        "wo": dense_init(lead + (e, f, d),
+                         llog + ("experts", "expert_mlp", "embed2"),
+                         cfg.pdtype, fan_in=f,
+                         scale=1.0 / np.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.act.endswith("_glu"):
+        p["wg"] = dense_init(lead + (e, d, f),
+                             llog + ("experts", "embed", "expert_mlp"),
+                             cfg.pdtype, fan_in=d)
+    return p
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(np.ceil(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(4, -(-c // 4) * 4)  # multiple of 4, >= 4
+
+
+def moe_apply(cfg: ModelConfig, p, x: jnp.ndarray,
+              ctx: ShardCtx = NO_SHARD):
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    group = min(cfg.moe_group, t)
+    if t % group:
+        raise ValueError(f"tokens {t} not divisible by moe group {group}")
+    g = t // group
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, group)
+
+    xg = x.reshape(g, group, d)
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)            # (G, Sg, E)
+    gate_w, gate_i = jax.lax.top_k(probs, k)           # (G, Sg, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((g, e), jnp.float32)
+    dispatch = jnp.zeros((g, group, e, cap), x.dtype)
+    combine = jnp.zeros((g, group, e, cap), jnp.float32)
+    for j in range(k):
+        oh = jax.nn.one_hot(gate_i[..., j], e, dtype=jnp.float32)
+        pos = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]
+        keep = oh * (pos < cap)
+        counts = counts + keep.sum(axis=1)
+        slot = jax.nn.one_hot(
+            jnp.minimum(pos, cap - 1).astype(jnp.int32), cap,
+            dtype=jnp.float32) * keep[..., None]       # (G, Sg, E, C)
+        dispatch = dispatch + slot.astype(x.dtype)
+        combine = combine + slot * gate_w[..., j, None, None]
+
+    exp_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    exp_in = ctx.constrain(exp_in, "tp", "dp", None, None)
+    u = jnp.einsum("egcd,edf->egcf", exp_in, p["wu"].astype(x.dtype))
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(jnp.einsum(
+            "egcd,edf->egcf", exp_in, p["wg"].astype(x.dtype))) * u
+    elif cfg.act == "gelu_glu":
+        h = jax.nn.gelu(jnp.einsum(
+            "egcd,edf->egcf", exp_in, p["wg"].astype(x.dtype)),
+            approximate=True) * u
+    else:
+        h = jax.nn.gelu(u, approximate=True)
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(x.dtype))
+    out_e = ctx.constrain(out_e, "tp", "dp", None, None)
+    y = jnp.einsum("egcd,gsec->gsd", out_e, combine.astype(x.dtype))
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * P_e.
+    frac = dispatch.astype(jnp.float32).sum(axis=(1, 3)) / group  # (G, E)
+    mean_p = probs.mean(axis=1)                                   # (G, E)
+    aux = e * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+    return y.reshape(b, s, d), aux

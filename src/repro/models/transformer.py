@@ -1,0 +1,185 @@
+"""Decoder-only transformer LM (dense, GQA, optional MoE / dense+MoE).
+
+One scanned block implementation serves training (no cache), prefill
+(emits the KV cache), and decode (consumes + updates the cache). Layers
+are stacked on a leading `layers` axis and iterated with lax.scan; the
+block is rematerialized (jax.checkpoint) under cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig, NO_SHARD, ShardCtx
+from repro.models.layers import (
+    apply_norm, attn_init, attn_out, attn_qkv, attention, cross_entropy,
+    dense_init, embed_init, embed_tokens, logits_out, mlp_apply, mlp_init,
+    norm_init)
+
+
+def lm_decls(cfg: ModelConfig):
+    """Declarative parameter tree (see layers.materialize/decl_shapes)."""
+    l, d, v = cfg.n_layers, cfg.d_model, cfg.vocab
+    blocks = {
+        "attn_norm": norm_init(cfg, (l, d), ("layers", "embed")),
+        "attn": attn_init(cfg, layers=l),
+        "mlp_norm": norm_init(cfg, (l, d), ("layers", "embed")),
+    }
+    if cfg.n_experts:
+        blocks["moe"] = moe_mod.moe_init(cfg, layers=l)
+        if cfg.moe_dense_ff:
+            blocks["mlp"] = mlp_init(cfg, d_ff=cfg.moe_dense_ff, layers=l)
+    elif cfg.d_ff:
+        blocks["mlp"] = mlp_init(cfg, layers=l)
+    tree = {
+        "embed": embed_init((v, d), ("vocab", "embed"), cfg.pdtype),
+        "blocks": blocks,
+        "final_norm": norm_init(cfg, (d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = dense_init((d, v), ("embed", "vocab"), cfg.pdtype,
+                                     fan_in=d)
+    return tree
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _block(cfg, ctx, h, aux, lp, kc, vc, positions, start, mode):
+    a_in = apply_norm(cfg, h, lp["attn_norm"])
+    q, k, v = attn_qkv(cfg, lp["attn"], a_in, positions)
+    if mode == "decode":
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, start, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, start, 0, 0))
+        kv_len = jnp.full((h.shape[0],), 0, jnp.int32) + start + q.shape[1]
+        out = attention(cfg, q, kc, vc, positions, kv_len=kv_len,
+                        causal=True, ctx=ctx)
+        ys = (kc, vc)
+    else:
+        out = attention(cfg, q, k, v, positions, causal=True, ctx=ctx)
+        ys = (k, v) if mode == "prefill" else None
+    h = h + attn_out(lp["attn"], out).astype(h.dtype)
+    m_in = apply_norm(cfg, h, lp["mlp_norm"])
+    delta = None
+    if "mlp" in lp:
+        delta = mlp_apply(cfg, lp["mlp"], m_in, ctx)
+    if "moe" in lp:
+        mo, a = moe_mod.moe_apply(cfg, lp["moe"], m_in, ctx)
+        delta = mo if delta is None else delta + mo
+        aux = aux + a
+    # With shard_residual the scan-carried stream (and hence the remat
+    # stash, the dominant HBM resident in training) is sharded over the
+    # model axis; XLA re-gathers it at each projection.
+    h = ctx.constrain(h + delta, "dp", None,
+                      "tp" if cfg.shard_residual else None)
+    return h, aux, ys
+
+
+def forward_hidden(cfg: ModelConfig, params, h, positions, *,
+                   ctx: ShardCtx = NO_SHARD, cache=None, start=0,
+                   mode: str = "train"):
+    """Run the scanned block stack. Returns (h, aux, cache_ys)."""
+
+    def body(carry, xs):
+        hc, aux = carry
+        lp = xs[0]
+        kc, vc = (xs[1], xs[2]) if mode == "decode" else (None, None)
+        hc, aux, ys = _block(cfg, ctx, hc, aux, lp, kc, vc,
+                             positions, start, mode)
+        return (hc, aux), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg),
+                              prevent_cse=False)
+    xs = (params["blocks"],)
+    if mode == "decode":
+        xs = (params["blocks"], cache["k"], cache["v"])
+    (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs)
+    return h, aux, ys
+
+
+def lm_apply(cfg: ModelConfig, params, tokens, *, ctx: ShardCtx = NO_SHARD,
+             cache=None, start=0, mode: str = "train"):
+    """tokens (B, S) -> (logits (B, S, V), aux, cache_ys)."""
+    b, s = tokens.shape
+    pos0 = jnp.arange(s)[None] if mode != "decode" else start + jnp.arange(s)[None]
+    positions = jnp.broadcast_to(pos0, (b, s))
+    h = embed_tokens(params["embed"], tokens, cfg.adtype)
+    h = ctx.constrain(h, "dp", None, None)
+    h, aux, ys = forward_hidden(cfg, params, h, positions, ctx=ctx,
+                                cache=cache, start=start, mode=mode)
+    h = apply_norm(cfg, h, params["final_norm"])
+    logits = logits_out(cfg, params, h, ctx)
+    return logits, aux, ys
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, ctx: ShardCtx = NO_SHARD):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    if cfg.ce_chunk:
+        # fused CE path: full (B, S, V) logits never materialize (§Perf)
+        b, s = inp.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h = embed_tokens(params["embed"], inp, cfg.adtype)
+        h = ctx.constrain(h, "dp", None, None)
+        h, aux, _ = forward_hidden(cfg, params, h, positions, ctx=ctx)
+        h = apply_norm(cfg, h, params["final_norm"])
+        from repro.models.layers import fused_cross_entropy
+        loss = fused_cross_entropy(cfg, params, h, labels, ctx)
+    else:
+        logits, aux, _ = lm_apply(cfg, params, inp, ctx=ctx)
+        loss = cross_entropy(logits, labels)
+    total = loss + cfg.aux_loss_coef * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def lm_prefill(cfg: ModelConfig, params, tokens, *, cache_len: int,
+               ctx: ShardCtx = NO_SHARD):
+    """Prefill: logits for the prompt + a KV cache padded to cache_len."""
+    b, s = tokens.shape
+    logits, _, (k, v) = lm_apply(cfg, params, tokens, ctx=ctx, mode="prefill")
+    pad = cache_len - s
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def lm_decode(cfg: ModelConfig, params, tokens, cache, *,
+              ctx: ShardCtx = NO_SHARD):
+    """One decode step: tokens (B, 1) + cache -> (logits, updated cache)."""
+    logits, _, (k, v) = lm_apply(cfg, params, tokens, ctx=ctx,
+                                 cache=cache, start=cache["pos"],
+                                 mode="decode")
+    return logits, {"k": k, "v": v, "pos": cache["pos"] + tokens.shape[1]}
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs for a decode-step cache (dry-run input specs)."""
+    shp = (cfg.n_layers, batch, cache_len, cfg.kv_heads, cfg.hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shp, cfg.adtype),
+        "v": jax.ShapeDtypeStruct(shp, cfg.adtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def kv_cache_logical(cfg: ModelConfig):
+    """Logical axes for the cache (sharded like activations)."""
+    return {"k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+            "pos": ()}

@@ -1,0 +1,194 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, only the transformer backbone is modeled: `input_specs`
+provides precomputed frame embeddings (B, src_seq, D) standing in for the
+conv1d+GELU audio frontend. Encoder: bidirectional attention + learned
+positions; decoder: causal self-attention + cross-attention into the
+encoder output. Serving caches both the self-attn KV and the (computed
+once at prefill) cross-attn KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, NO_SHARD, ShardCtx
+from repro.models.layers import (
+    apply_norm, attn_init, attn_out, attn_qkv, attention, cross_entropy,
+    dense_init, embed_init, embed_tokens, logits_out, mlp_apply, mlp_init,
+    norm_init)
+
+
+def whisper_decls(cfg: ModelConfig):
+    d = cfg.d_model
+    el, dl = cfg.enc_layers, cfg.n_layers
+
+    def _stack(n):
+        return {
+            "attn_norm": norm_init(cfg, (n, d), ("layers", "embed")),
+            "attn": attn_init(cfg, layers=n),
+            "mlp_norm": norm_init(cfg, (n, d), ("layers", "embed")),
+            "mlp": mlp_init(cfg, layers=n),
+        }
+
+    dec = _stack(dl)
+    dec["xattn_norm"] = norm_init(cfg, (dl, d), ("layers", "embed"))
+    dec["xattn"] = attn_init(cfg, layers=dl)
+    return {
+        "enc_pos": embed_init((cfg.src_seq, d), ("seq", "embed"), cfg.pdtype),
+        "enc_blocks": _stack(el),
+        "enc_final_norm": norm_init(cfg, (d,), ("embed",)),
+        "embed": embed_init((cfg.vocab, d), ("vocab", "embed"), cfg.pdtype),
+        "dec_pos": embed_init((4096 * 16, d), ("seq", "embed"), cfg.pdtype),
+        "dec_blocks": dec,
+        "final_norm": norm_init(cfg, (d,), ("embed",)),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, *, ctx: ShardCtx = NO_SHARD):
+    """frames (B, src_seq, D) stub embeddings -> encoder output (B, S, D)."""
+    b, s, _ = frames.shape
+    h = frames.astype(cfg.adtype) + params["enc_pos"][None, :s].astype(cfg.adtype)
+    h = ctx.constrain(h, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(hc, lp):
+        a_in = apply_norm(cfg, hc, lp["attn_norm"])
+        q, k, v = attn_qkv(cfg, lp["attn"], a_in, positions, use_rope=False)
+        out = attention(cfg, q, k, v, positions, causal=False, ctx=ctx)
+        hc = hc + attn_out(lp["attn"], out).astype(hc.dtype)
+        m_in = apply_norm(cfg, hc, lp["mlp_norm"])
+        hc = ctx.constrain(hc + mlp_apply(cfg, lp["mlp"], m_in, ctx), "dp", None, None)
+        return hc, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return apply_norm(cfg, h, params["enc_final_norm"])
+
+
+def decode_stack(cfg: ModelConfig, params, tokens, enc_out, *,
+                 ctx: ShardCtx = NO_SHARD, cache=None, start=0, mode="train"):
+    """Decoder over target tokens with cross-attention into enc_out.
+
+    cache = {"k","v" (self), "xk","xv" (cross), "pos"} for decode mode;
+    in prefill mode the cross KV is computed from enc_out and emitted.
+    """
+    b, s = tokens.shape
+    pos0 = jnp.arange(s)[None] + (start if mode == "decode" else 0)
+    positions = jnp.broadcast_to(pos0, (b, s))
+    h = embed_tokens(params["embed"], tokens, cfg.adtype)
+    if mode == "decode":  # start is traced: dynamic_slice
+        ppos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], start, s, axis=0)
+    else:
+        ppos = params["dec_pos"][:s]
+    h = h + ppos[None].astype(h.dtype)
+    h = ctx.constrain(h, "dp", None, None)
+    ep = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                          (b, enc_out.shape[1])) if enc_out is not None else None
+
+    def body(carry, xs):
+        hc = carry
+        lp = xs[0]
+        a_in = apply_norm(cfg, hc, lp["attn_norm"])
+        q, k, v = attn_qkv(cfg, lp["attn"], a_in, positions, use_rope=False)
+        if mode == "decode":
+            kc, vc = xs[1], xs[2]
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, start, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, start, 0, 0))
+            kv_len = jnp.full((b,), 0, jnp.int32) + start + s
+            out = attention(cfg, q, kc, vc, positions, kv_len=kv_len,
+                            causal=True, ctx=ctx)
+            self_kv = (kc, vc)
+        else:
+            out = attention(cfg, q, k, v, positions, causal=True, ctx=ctx)
+            self_kv = (k, v)
+        hc = hc + attn_out(lp["attn"], out).astype(hc.dtype)
+
+        # cross attention
+        x_in = apply_norm(cfg, hc, lp["xattn_norm"])
+        xq = (x_in @ lp["xattn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+        if mode == "decode":
+            xk, xv = xs[3], xs[4]
+        else:
+            xk = (enc_out @ lp["xattn"]["wk"]).reshape(
+                b, -1, cfg.kv_heads, cfg.hd)
+            xv = (enc_out @ lp["xattn"]["wv"]).reshape(
+                b, -1, cfg.kv_heads, cfg.hd)
+        out = attention(cfg, xq, xk, xv, positions, causal=False, ctx=ctx)
+        hc = hc + attn_out(lp["xattn"], out).astype(hc.dtype)
+
+        m_in = apply_norm(cfg, hc, lp["mlp_norm"])
+        hc = ctx.constrain(hc + mlp_apply(cfg, lp["mlp"], m_in, ctx),
+                           "dp", None, None)
+        ys = None
+        if mode == "prefill":
+            ys = (self_kv[0], self_kv[1], xk, xv)
+        elif mode == "decode":
+            ys = (self_kv[0], self_kv[1])
+        return hc, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    xs = (params["dec_blocks"],)
+    if mode == "decode":
+        xs = (params["dec_blocks"], cache["k"], cache["v"],
+              cache["xk"], cache["xv"])
+    h, ys = jax.lax.scan(body, h, xs)
+    h = apply_norm(cfg, h, params["final_norm"])
+    # whisper ties output logits to the token embedding table
+    logits = ctx.constrain(h @ params["embed"].T.astype(h.dtype),
+                           "dp", None, "tp")
+    return logits, ys
+
+
+def whisper_loss(cfg, params, batch, *, ctx: ShardCtx = NO_SHARD):
+    enc_out = encode(cfg, params, batch["frames"], ctx=ctx)
+    tokens = batch["tokens"]
+    logits, _ = decode_stack(cfg, params, tokens[:, :-1], enc_out, ctx=ctx)
+    loss = cross_entropy(logits, tokens[:, 1:])
+    return loss, {"loss": loss}
+
+
+def whisper_prefill(cfg, params, frames, tokens, *, cache_len: int,
+                    ctx: ShardCtx = NO_SHARD):
+    enc_out = encode(cfg, params, frames, ctx=ctx)
+    logits, (k, v, xk, xv) = decode_stack(cfg, params, tokens, enc_out,
+                                          ctx=ctx, mode="prefill")
+    s = tokens.shape[1]
+    pad = cache_len - s
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv,
+             "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def whisper_decode(cfg, params, tokens, cache, *, ctx: ShardCtx = NO_SHARD):
+    logits, (k, v) = decode_stack(cfg, params, tokens, None, ctx=ctx,
+                                  cache=cache, start=cache["pos"],
+                                  mode="decode")
+    new = dict(cache, k=k, v=v, pos=cache["pos"] + tokens.shape[1])
+    return logits, new
+
+
+def whisper_cache_shape(cfg: ModelConfig, batch: int, cache_len: int):
+    l = cfg.n_layers
+    self_kv = (l, batch, cache_len, cfg.kv_heads, cfg.hd)
+    cross_kv = (l, batch, cfg.src_seq, cfg.kv_heads, cfg.hd)
+    return {
+        "k": jax.ShapeDtypeStruct(self_kv, cfg.adtype),
+        "v": jax.ShapeDtypeStruct(self_kv, cfg.adtype),
+        "xk": jax.ShapeDtypeStruct(cross_kv, cfg.adtype),
+        "xv": jax.ShapeDtypeStruct(cross_kv, cfg.adtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def whisper_cache_logical(cfg: ModelConfig):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ()}

@@ -1,0 +1,58 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound data parallelism).
+
+`compressed_psum` implements an all-gather-based all-reduce over int8
+payloads inside shard_map: each rank quantizes its local gradient to int8
+with a per-tensor scale (1 byte/element on the wire vs 4 for f32 ring
+all-reduce), all-gathers the quantized shards, and reduces locally in f32.
+`ef_quantize/ef_residual` provide the error-feedback loop: the
+quantization residual is added back into the next step's gradient, which
+restores convergence (the standard EF-SGD correction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize(g: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback quantization: returns (q, scale, new_err)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    new_err = corrected - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """Mean over `axis_name` of int8-quantized g (call inside shard_map).
+
+    Wire cost: 1 byte/element (all-gather of int8) + 4 bytes/rank (scale),
+    vs 4 bytes/element for an f32 all-reduce. Returns (mean_g, new_err).
+    """
+    q, scale, new_err = ef_quantize(g, err)
+    qs = jax.lax.all_gather(q, axis_name)          # (P, ...) int8 on wire
+    ss = jax.lax.all_gather(scale, axis_name)      # (P,)
+    n = qs.shape[0]
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+    return total / n, new_err
+
+
+def compressed_psum_tree(grads, errs, axis_name: str):
+    out = jax.tree.map(
+        lambda g, e: compressed_psum(g, e, axis_name), grads, errs)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+    mean_g = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+    new_e = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+    return mean_g, new_e

@@ -1,0 +1,151 @@
+"""Self-contained optimizers (no optax dependency): AdamW and Adafactor.
+
+Mixed-precision convention: params may be bf16; gradients are cast to f32
+inside the update; AdamW moments are f32; Adafactor keeps factored f32
+row/col second-moment statistics (the only optimizer whose states fit a
+480B-parameter model on a 512-chip pod — see configs/arctic_480b.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def _lr(self, step):
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup, 1))
+        return self.lr * warm
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+    def state_logical(self, param_logical):
+        """Optimizer-state logical axes (moments shard like their params)."""
+        return {"m": param_logical, "v": param_logical, "step": ()}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: float = 1e-3
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    warmup: int = 100
+
+    def init(self, params):
+        def zero_state(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"fac": jax.tree.map(zero_state, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        warm = jnp.minimum(1.0, step.astype(jnp.float32) / max(self.warmup, 1))
+        lr = self.lr * warm
+
+        def upd(p, g, st):
+            g2 = g * g + self.eps
+            if p.ndim >= 2:
+                vr = self.decay * st["vr"] + (1 - self.decay) * g2.mean(-1)
+                vc = self.decay * st["vc"] + (1 - self.decay) * g2.mean(-2)
+                denom = (vr / jnp.maximum(
+                    vr.mean(-1, keepdims=True), self.eps))[..., None] * \
+                    vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, self.eps))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = self.decay * st["v"] + (1 - self.decay) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, self.eps))
+                new_st = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+        is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        out = jax.tree.map(upd, params, grads, state["fac"],
+                           is_leaf=lambda x: is_state(x) if isinstance(x, dict)
+                           else False)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        new_f = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_p, {"fac": new_f, "step": step}, gnorm
+
+    def state_logical(self, param_logical):
+        def fac_logical(logical):
+            if len(logical) >= 2:
+                return {"vr": logical[:-1], "vc": logical[:-2] + logical[-1:]}
+            return {"v": logical}
+
+        fac = jax.tree.map(
+            fac_logical, param_logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        return {"fac": fac, "step": ()}
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,95 @@
+"""Train step + train state, family-agnostic (built on models.api.Model)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.config import NO_SHARD, ShardCtx
+from repro.optim.optimizers import AdamW, global_norm
+
+
+def make_train_step(model: Model, opt, ctx: ShardCtx = NO_SHARD) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With cfg.grad_accum > 1 the global batch is split into microbatches
+    scanned sequentially; gradients are averaged before the optimizer
+    update. Activation memory scales down by the accumulation factor while
+    weights stream from HBM once per microbatch (§Perf memory lever)."""
+    accum = max(1, model.cfg.grad_accum)
+
+    def grad_of(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, ctx)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def step_fn(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(step_fn, (g0, jnp.zeros(())),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {"loss": loss}
+        new_params, new_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       param_norm=global_norm(new_params))
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, ctx: ShardCtx = NO_SHARD) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, ctx)
+        return dict(metrics, loss=loss)
+
+    return eval_step
+
+
+class StepWatchdog:
+    """Straggler/hang detection: tracks a running step-time estimate and
+    flags steps slower than `factor` x the median of recent steps. At real
+    multi-host scale the flag feeds the coordinator's restart policy; here
+    it surfaces in metrics/logs (and is unit-tested)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.times: list = []
+        self.window = window
+        self._t0: Optional[float] = None
+        self.flagged = 0
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> bool:
+        dt = time.monotonic() - self._t0
+        slow = False
+        if len(self.times) >= 5:
+            med = sorted(self.times)[len(self.times) // 2]
+            slow = dt > self.factor * med
+            if slow:
+                self.flagged += 1
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return slow

@@ -1,0 +1,72 @@
+"""Barycentric interpolation invariants (Sec. 2.1-2.3)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cheby
+
+
+def test_cheb_points_endpoints():
+    s = cheby.cheb_points_1d(8)
+    assert float(s[0]) == pytest.approx(1.0)
+    assert float(s[-1]) == pytest.approx(-1.0)
+    assert np.all(np.diff(np.asarray(s)) < 0)  # descending (Eq. 6 ordering)
+
+
+def test_bary_weights_signs_and_halving():
+    w = np.asarray(cheby.bary_weights_1d(6))
+    assert w[0] == 0.5 and w[-1] == 0.5  # (-1)^6 * 1/2
+    assert np.all(np.abs(w[1:-1]) == 1.0)
+    assert np.all(np.sign(w) == [1, -1, 1, -1, 1, -1, 1])
+    w5 = np.asarray(cheby.bary_weights_1d(5))
+    assert w5[-1] == -0.5  # (-1)^5 * 1/2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    degree=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_interpolation_exact_for_polynomials(degree, seed, ):
+    """p_n reproduces any polynomial of degree <= n exactly (f64)."""
+    import jax
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        r = np.random.default_rng(seed)
+        coeffs = r.uniform(-1, 1, degree + 1)
+        f = np.polynomial.polynomial.Polynomial(coeffs)
+        s = np.asarray(cheby.cheb_points_1d(degree, jnp.float64))
+        fvals = jnp.asarray(f(s))
+        y = r.uniform(-1, 1, 32)
+        got = cheby.interp_1d(fvals, jnp.asarray(y), degree)
+        np.testing.assert_allclose(np.asarray(got), f(y), rtol=1e-10, atol=1e-10)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_lagrange_rows_partition_of_unity(rng):
+    y = jnp.asarray(rng.uniform(-1, 1, 64).astype(np.float32))
+    s = cheby.cheb_points_1d(7)
+    w = cheby.bary_weights_1d(7)
+    rows = cheby.lagrange_rows(y, s, w)
+    np.testing.assert_allclose(np.asarray(rows.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_exact_hit_gives_one_hot():
+    s = cheby.cheb_points_1d(5)
+    w = cheby.bary_weights_1d(5)
+    rows = cheby.lagrange_rows(s, s, w)  # evaluate at the nodes themselves
+    np.testing.assert_allclose(np.asarray(rows), np.eye(6), atol=0)
+
+
+def test_cluster_grid_ordering():
+    lo = jnp.asarray([0.0, 10.0, 100.0])
+    hi = jnp.asarray([1.0, 11.0, 101.0])
+    g = np.asarray(cheby.cluster_grid(lo, hi, 1))  # 8 corners
+    # k3 fastest: first two rows differ only in z
+    assert g.shape == (8, 3)
+    assert g[0, 0] == g[1, 0] and g[0, 1] == g[1, 1] and g[0, 2] != g[1, 2]
+    assert g[:, 0].min() == 0.0 and g[:, 0].max() == 1.0
+    assert g[:, 2].min() == 100.0 and g[:, 2].max() == 101.0

@@ -1,0 +1,72 @@
+"""Interaction-list completeness & MAC properties (hypothesis).
+
+The strongest correctness property of a treecode: for EVERY target batch,
+the union of its approx-cluster particle ranges and direct-leaf particle
+ranges partitions the source set EXACTLY once — nothing missed, nothing
+double-counted — and every approx pair satisfies Eq. 13."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interaction import build_interaction_lists
+from repro.core.tree import build_batches, build_tree
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(50, 1200),
+       leaf=st.sampled_from([16, 32, 64]),
+       theta=st.sampled_from([0.5, 0.7, 0.9]),
+       degree=st.integers(1, 6),
+       clustered=st.booleans())
+def test_lists_partition_sources_exactly_once(seed, n, leaf, theta, degree,
+                                              clustered):
+    r = np.random.default_rng(seed)
+    pts = r.uniform(-1, 1, (n, 3))
+    if clustered:
+        centers = r.uniform(-1, 1, (3, 3))
+        pts = centers[r.integers(0, 3, n)] + 0.05 * pts
+    tree = build_tree(pts, leaf)
+    batches = build_batches(pts, leaf)
+    lists = build_interaction_lists(tree, batches, theta, degree)
+
+    npts = (degree + 1) ** 3
+    for b in range(batches.num_batches):
+        covered = np.zeros(n, dtype=int)
+        for node in lists.approx[b]:
+            if node < 0:
+                continue
+            s, c = tree.start[node], tree.count[node]
+            covered[s:s + c] += 1
+            # MAC holds for every approx pair (Eq. 13)
+            dist = np.linalg.norm(batches.center[b] - tree.center[node])
+            assert batches.radius[b] + tree.radius[node] < theta * dist
+            assert npts < tree.count[node]
+        for slot in lists.direct[b]:
+            if slot < 0:
+                continue
+            node = tree.leaf_ids[slot]
+            s, c = tree.start[node], tree.count[node]
+            covered[s:s + c] += 1
+        np.testing.assert_array_equal(
+            covered, 1,
+            err_msg=f"batch {b}: sources not covered exactly once")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), theta=st.sampled_from([0.6, 0.8]))
+def test_padding_slots_all_trailing(seed, theta):
+    """-1 sentinels are trailing per row (required by the revisit-order
+    accumulation in the Pallas kernel grid)."""
+    r = np.random.default_rng(seed)
+    pts = r.uniform(-1, 1, (400, 3))
+    tree = build_tree(pts, 32)
+    batches = build_batches(pts, 32)
+    lists = build_interaction_lists(tree, batches, theta, 4)
+    for arr in (lists.approx, lists.direct):
+        for row in arr:
+            seen_pad = False
+            for v in row:
+                if v < 0:
+                    seen_pad = True
+                else:
+                    assert not seen_pad, "non-trailing padding"

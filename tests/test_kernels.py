@@ -1,0 +1,142 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes.
+
+Every Pallas kernel runs in interpret mode (the kernel body executed on
+CPU) and is compared against the independent unfactored ref.py oracle, and
+the xla backend (the production CPU path) is held to the same oracle.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.potentials import coulomb, yukawa
+from repro.kernels import ops, ref
+
+KERNELS = [coulomb(), yukawa(0.5)]
+
+
+def _case(rng, B, S, NB, C, m, dtype):
+    tgt = rng.uniform(-1, 1, (B, NB, 3)).astype(dtype)
+    src = rng.uniform(-1, 1, (C, m, 3)).astype(dtype)
+    q = rng.uniform(-1, 1, (C, m)).astype(dtype)
+    idx = rng.integers(-1, C, (B, S)).astype(np.int32)
+    return jnp.asarray(idx), jnp.asarray(tgt), jnp.asarray(src), jnp.asarray(q)
+
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "xla"])
+@pytest.mark.parametrize("B,S,NB,C,m", [
+    (1, 1, 8, 1, 8),
+    (3, 5, 16, 7, 32),
+    (2, 4, 40, 3, 24),     # NB not a multiple of the tile
+    (4, 2, 128, 2, 200),
+])
+def test_batch_cluster_eval_matches_ref(rng, backend, B, S, NB, C, m):
+    idx, tgt, src, q = _case(rng, B, S, NB, C, m, np.float32)
+    for kern in KERNELS:
+        want = ref.ref_batch_cluster_eval(idx, tgt, src, q, kern)
+        got = ops.batch_cluster_eval(
+            idx, tgt, src, q, kernel=kern, backend=backend, target_tile=32)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_batch_cluster_eval_f64(rng, x64):
+    idx, tgt, src, q = _case(rng, 2, 3, 16, 4, 16, np.float64)
+    for backend in ("pallas_interpret", "xla"):
+        for kern in KERNELS:
+            want = ref.ref_batch_cluster_eval(idx, tgt, src, q, kern)
+            got = ops.batch_cluster_eval(
+                idx, tgt, src, q, kernel=kern, backend=backend, target_tile=16)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_batch_cluster_eval_kahan(rng):
+    idx, tgt, src, q = _case(rng, 2, 8, 16, 8, 64, np.float32)
+    kern = coulomb()
+    want = ref.ref_batch_cluster_eval(idx, tgt, src, q, kern)
+    got = ops.batch_cluster_eval(
+        idx, tgt, src, q, kernel=kern, backend="pallas_interpret",
+        target_tile=16, kahan=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_batch_cluster_all_empty_slots(rng):
+    idx = jnp.full((2, 3), -1, jnp.int32)
+    _, tgt, src, q = _case(rng, 2, 3, 8, 2, 8, np.float32)
+    for backend in ("pallas_interpret", "xla"):
+        got = ops.batch_cluster_eval(
+            idx, tgt, src, q, kernel=coulomb(), backend=backend, target_tile=8)
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_self_interaction_masked(rng):
+    # A target coincident with a source must not produce inf/nan.
+    tgt = jnp.asarray([[[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]]])
+    src = jnp.asarray([[[0.0, 0.0, 0.0], [0.0, 1.0, 0.0]]])
+    q = jnp.ones((1, 2), jnp.float32)
+    idx = jnp.zeros((1, 1), jnp.int32)
+    for backend in ("pallas_interpret", "xla"):
+        got = np.asarray(ops.batch_cluster_eval(
+            idx, tgt, src, q, kernel=coulomb(), backend=backend, target_tile=8))
+        assert np.isfinite(got).all()
+        # target 0: only the off-origin source contributes (r = 1)
+        np.testing.assert_allclose(got[0, 0], 1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "xla"])
+@pytest.mark.parametrize("C,m,degree", [
+    (1, 8, 1), (3, 32, 2), (5, 64, 4), (2, 100, 3),  # m not tile-multiple
+])
+def test_modified_charges_matches_ref(rng, backend, C, m, degree):
+    pts = rng.uniform(0, 1, (C, m, 3)).astype(np.float32)
+    q = rng.uniform(-1, 1, (C, m)).astype(np.float32)
+    lo = pts.min(1) - 0.0
+    hi = pts.max(1) + 0.0
+    want = ref.ref_modified_charges(
+        jnp.asarray(pts), jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi), degree)
+    got = ops.modified_charges(
+        jnp.asarray(pts), jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi),
+        degree=degree, backend=backend, particle_tile=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-4)
+
+
+def test_modified_charges_exact_hits(rng, x64):
+    """Sources ON the Chebyshev nodes (guaranteed by min bounding boxes) —
+    the removable-singularity path of Sec. 2.3."""
+    from repro.core import cheby
+    degree = 4
+    lo = np.zeros(3)
+    hi = np.ones(3)
+    grid = np.asarray(cheby.cluster_grid(jnp.asarray(lo), jnp.asarray(hi), degree))
+    extra = rng.uniform(0, 1, (7, 3))
+    pts = np.concatenate([grid, extra])[None].astype(np.float64)
+    q = rng.uniform(-1, 1, (1, pts.shape[1])).astype(np.float64)
+    want = ref.ref_modified_charges(
+        jnp.asarray(pts), jnp.asarray(q), jnp.asarray(lo[None]), jnp.asarray(hi[None]), degree)
+    for backend in ("pallas_interpret", "xla"):
+        got = ops.modified_charges(
+            jnp.asarray(pts), jnp.asarray(q), jnp.asarray(lo[None]),
+            jnp.asarray(hi[None]), degree=degree, backend=backend, particle_tile=64)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+
+def test_modified_charges_reproduce_far_field(rng, x64):
+    """End-to-end Eq. 11 check: sum_k G(x, s_k) qhat_k ~= sum_j G(x, y_j) q_j
+    for a well-separated target (f64, high degree -> near machine epsilon)."""
+    from repro.core import cheby
+    degree = 12
+    pts = rng.uniform(0, 1, (1, 64, 3))
+    q = rng.uniform(-1, 1, (1, 64))
+    lo, hi = pts.min(1), pts.max(1)
+    qhat = ops.modified_charges(
+        jnp.asarray(pts), jnp.asarray(q), jnp.asarray(lo), jnp.asarray(hi),
+        degree=degree, backend="xla")
+    x = jnp.asarray([[5.0, 4.0, 3.0]])
+    kern = coulomb()
+    exact = float((kern.pairwise(x, jnp.asarray(pts[0])) @ jnp.asarray(q[0]))[0])
+    approx = float(ref.ref_cluster_approx_potential(
+        x, jnp.asarray(lo[0]), jnp.asarray(hi[0]), qhat[0], degree, kern)[0])
+    assert abs(approx - exact) / abs(exact) < 1e-12

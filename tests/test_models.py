@@ -1,0 +1,149 @@
+"""Model-substrate invariants: SSD duality, attention paths, cache
+consistency, fused-CE / grad-accum equivalence (hypothesis where cheap)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import mamba2 as mb
+from repro.models import transformer as tf
+from repro.models.api import Model
+from repro.models.config import ModelConfig
+from repro.models.layers import materialize
+
+
+def _tiny(**kw):
+    base = dict(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                d_ff=64, vocab=64, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([4, 8, 16]),
+       length=st.integers(5, 40))
+def test_ssd_chunked_equals_recurrent(seed, chunk, length):
+    """State-space duality: the chunked (matmul) form equals the
+    recurrence for arbitrary lengths/chunk sizes (incl. ragged tails)."""
+    cfg = ModelConfig(name="s", family="ssm", d_model=32, ssm_state=8,
+                      ssm_head_dim=8, ssm_chunk=chunk, remat=False)
+    r = np.random.default_rng(seed)
+    B, H, P, N = 2, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x = jnp.asarray(r.standard_normal((B, length, H, P)), jnp.float32)
+    bm = jnp.asarray(r.standard_normal((B, length, N)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((B, length, N)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.01, 0.3, (B, length, H)), jnp.float32)
+    ah = -jnp.exp(jnp.asarray(r.standard_normal(H) * 0.3, jnp.float32))
+    y1, s1 = mb.ssd_chunked(cfg, x, bm, c, dt, ah)
+    y2, s2 = mb.ssd_recurrent(cfg, x, bm, c, dt, ah)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_attention_equals_dense():
+    cfg = _tiny(attn_dense_max=8, attn_chunk=8)
+    cfg_dense = dataclasses.replace(cfg, attn_dense_max=4096)
+    params = materialize(tf.lm_decls(cfg), jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 37), 0, cfg.vocab)
+    l1, _, _ = tf.lm_apply(cfg, params, tokens)
+    l2, _, _ = tf.lm_apply(cfg_dense, params, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_decode_matches_full_forward():
+    cfg = _tiny(qkv_bias=True, rope="half")
+    params = materialize(tf.lm_decls(cfg), jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 20), 0, cfg.vocab)
+    full, _, _ = tf.lm_apply(cfg, params, tokens)
+    pre, cache = tf.lm_prefill(cfg, params, tokens[:, :12], cache_len=20)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :12]),
+                               rtol=2e-3, atol=2e-4)
+    outs = []
+    for i in range(12, 20):
+        lg, cache = tf.lm_decode(cfg, params, tokens[:, i:i + 1], cache)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full[:, 12:]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_fused_ce_equals_dense_ce():
+    cfg = _tiny()
+    cfg_f = dataclasses.replace(cfg, ce_chunk=8)
+    params = materialize(tf.lm_decls(cfg), jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 33), 0,
+                                          cfg.vocab)}
+    l1, _ = tf.lm_loss(cfg, params, batch)
+    l2, _ = tf.lm_loss(cfg_f, params, batch)
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+
+
+def test_grad_accum_equals_full_batch():
+    from repro.optim.optimizers import AdamW
+    from repro.training.step import make_train_step
+    cfg = _tiny()
+    model = Model(cfg)
+    params = materialize(model.decls(), jax.random.key(0))
+    opt = AdamW(lr=1e-3, warmup=1)
+    st0 = opt.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 17), 0,
+                                          cfg.vocab)}
+    p1, _, m1 = make_train_step(model, opt)(params, st0, batch)
+    model4 = Model(dataclasses.replace(cfg, grad_accum=4))
+    p4, _, m4 = make_train_step(model4, opt)(params, st0, batch)
+    assert float(jnp.abs(m1["loss"] - m4["loss"])) < 1e-5
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 5e-5
+
+
+def test_shard_residual_unsharded_noop():
+    """shard_residual only adds constraints; math identical off-mesh."""
+    cfg = _tiny()
+    cfg_s = dataclasses.replace(cfg, shard_residual=True)
+    params = materialize(tf.lm_decls(cfg), jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 9), 0, cfg.vocab)
+    l1, _, _ = tf.lm_apply(cfg, params, tokens)
+    l2, _, _ = tf.lm_apply(cfg_s, params, tokens)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_moe_router_capacity_invariants():
+    from repro.models.moe import moe_apply, moe_init
+    cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=16,
+                      d_ff=32, vocab=32, n_experts=4, top_k=2,
+                      moe_group=32, remat=False)
+    params = materialize(moe_init(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16))
+    y, aux = moe_apply(cfg, params, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all() and jnp.isfinite(aux)
+    # aux >= 1 iff perfectly balanced would give exactly 1 for top-1;
+    # for top-k it's bounded below by k * (uniform product) — just check
+    # positivity and scale sanity here.
+    assert 0.0 < float(aux) < cfg.n_experts
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rope_preserves_norm(seed):
+    from repro.models.layers import rope
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((2, 5, 3, 16)), jnp.float32)
+    pos = jnp.asarray(r.integers(0, 1000, (2, 5)))
+    y = rope(x, pos, 10000.0, 1.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative-position property: equal shifts leave q.k invariant
+    y0 = rope(x, pos * 0, 10000.0, 1.0)
+    y7 = rope(x, pos * 0 + 7, 10000.0, 1.0)
+    dot0 = np.einsum("bshd,bshd->bsh", np.asarray(y0), np.asarray(y0))
+    dot7 = np.einsum("bshd,bshd->bsh", np.asarray(y7), np.asarray(y7))
+    np.testing.assert_allclose(dot0, dot7, rtol=1e-4)

@@ -1,0 +1,91 @@
+"""Tree / batch construction invariants (Sec. 2.4)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import build_batches, build_tree
+
+
+def _random_points(seed, n, clustered=False):
+    r = np.random.default_rng(seed)
+    pts = r.uniform(-1, 1, (n, 3))
+    if clustered:
+        centers = r.uniform(-1, 1, (4, 3))
+        pts = centers[r.integers(0, 4, n)] + 0.05 * pts
+    return pts
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(10, 800),
+    leaf=st.integers(4, 64),
+    clustered=st.booleans(),
+)
+def test_tree_partition_invariants(seed, n, leaf, clustered):
+    pts = _random_points(seed, n, clustered)
+    t = build_tree(pts, leaf)
+
+    # perm is a permutation
+    assert sorted(t.perm.tolist()) == list(range(n))
+    # leaves tile [0, n) exactly once, in order
+    starts = t.start[t.leaf_ids]
+    counts = t.count[t.leaf_ids]
+    assert starts[0] == 0
+    np.testing.assert_array_equal(starts[1:], (starts + counts)[:-1])
+    assert starts[-1] + counts[-1] == n
+    # leaf sizes respect N_L (degenerate zero-extent nodes excepted)
+    ext = (t.hi - t.lo).max(axis=1)
+    ok = (t.count[t.leaf_ids] <= leaf) | (ext[t.leaf_ids] == 0)
+    assert ok.all()
+    # shrunk boxes contain their particles
+    sorted_pts = pts[t.perm]
+    for node in range(t.num_nodes):
+        s, c = t.start[node], t.count[node]
+        sub = sorted_pts[s:s + c]
+        assert (sub >= t.lo[node] - 1e-12).all()
+        assert (sub <= t.hi[node] + 1e-12).all()
+    # children tile the parent range
+    for node in range(t.num_nodes):
+        kids = t.children[node][t.children[node] >= 0]
+        if len(kids) == 0:
+            assert t.is_leaf[node]
+            continue
+        ks = sorted((t.start[k], t.count[k]) for k in kids)
+        assert ks[0][0] == t.start[node]
+        cursor = t.start[node]
+        for s, c in ks:
+            assert s == cursor
+            cursor += c
+        assert cursor == t.start[node] + t.count[node]
+
+
+def test_aspect_ratio_split_count():
+    # A pencil-shaped cloud should split in 2 (only the long dim), not 8.
+    r = np.random.default_rng(0)
+    pts = np.stack([r.uniform(-1, 1, 500),
+                    r.uniform(-0.01, 0.01, 500),
+                    r.uniform(-0.01, 0.01, 500)], axis=1)
+    t = build_tree(pts, 64)
+    kids = t.children[0][t.children[0] >= 0]
+    assert len(kids) == 2
+
+
+def test_radius_is_half_diagonal():
+    pts = np.array([[0, 0, 0], [2, 0, 0], [0, 2, 0], [0, 0, 2.0]])
+    t = build_tree(pts, 8)
+    np.testing.assert_allclose(t.radius[0], 0.5 * np.sqrt(12.0))
+
+
+def test_batches_match_tree_leaves():
+    pts = _random_points(7, 300)
+    b = build_batches(pts, 32)
+    t = build_tree(pts, 32)
+    assert b.num_batches == t.num_leaves
+    np.testing.assert_array_equal(b.start, t.start[t.leaf_ids])
+
+
+def test_duplicate_points_terminate():
+    pts = np.zeros((100, 3))
+    t = build_tree(pts, 8)  # must not hang; degenerate leaf allowed
+    assert t.num_leaves >= 1
+    assert t.count[0] == 100
