@@ -28,7 +28,7 @@ import json, time
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.api import TreecodeConfig
 from repro.core.direct import direct_sum
-from repro.distributed.bltc import prepare_distributed, distributed_execute
+from repro.distributed.bltc import ShardedPlan
 
 P = {P}; N = {N}
 rng = np.random.default_rng(0)
@@ -38,12 +38,12 @@ cfg = TreecodeConfig(theta=0.8, degree={degree}, leaf_size={leaf},
                      backend="xla")
 
 t0 = time.time()
-plan = prepare_distributed(pts, cfg, P)
+plan = ShardedPlan.build(pts, cfg, P)   # unified-API sharded plan
 setup_s = time.time() - t0
 
-phi = distributed_execute(plan, q, cfg)  # compile + run
+phi = plan.execute(q)  # compile + run
 t0 = time.time()
-phi = distributed_execute(plan, q, cfg)
+phi = plan.execute(q)
 jax.block_until_ready(phi)
 device_s = time.time() - t0
 

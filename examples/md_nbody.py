@@ -1,11 +1,12 @@
 """End-to-end driver: N-body dynamics with treecode forces.
 
-Velocity-Verlet integration of a softened Coulomb system; forces are the
-exact gradient of the *treecode-approximated* potential with respect to
-the target coordinates, obtained with three forward-mode JVPs through the
-jitted evaluation pipeline (the BLTC is differentiable JAX code — no
-finite differences, no extra kernels). The tree is rebuilt every step as
-particles move, exactly like production treecode MD.
+Velocity-Verlet integration of a softened Coulomb system using the
+first-class force entry point: `plan.potential_and_forces(q)` returns the
+potentials and F_i = -q_i grad phi(x_i), where the gradient is the exact
+derivative of the *treecode-approximated* potential (a custom VJP backed
+by three forward-mode JVPs through the jitted pipeline — no finite
+differences, no extra kernels). The tree is rebuilt every step via
+`plan.replan` as particles move, exactly like production treecode MD.
 
     PYTHONPATH=src python examples/md_nbody.py [--n 1500] [--steps 200]
 """
@@ -13,32 +14,9 @@ import argparse
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import eval as ceval
 from repro.core.api import TreecodeConfig, TreecodeSolver
-
-
-def forces(solver, plan, points, charges, eps2=1e-4):
-    """F_i = -q_i grad_x phi(x_i) via 3 JVPs through the evaluation."""
-    arrays = dict(plan.arrays)
-    cfg = solver.config
-
-    def phi_of_tgt(tgt):
-        a = dict(arrays, tgt_batched=tgt)
-        return ceval.execute(a, jnp.asarray(charges), degree=cfg.degree,
-                             kernel=solver._kernel, backend="xla",
-                             precompute=cfg.precompute)
-
-    tgt = arrays["tgt_batched"]
-    grads = []
-    for d in range(3):
-        tangent = jnp.zeros_like(tgt).at[..., d].set(1.0)
-        _, dphi = jax.jvp(phi_of_tgt, (tgt,), (tangent,))
-        grads.append(dphi)
-    g = jnp.stack(grads, axis=-1)           # (N, 3) dphi/dx_i
-    return -jnp.asarray(charges)[:, None] * g
 
 
 def potential_energy(phi, charges):
@@ -62,16 +40,17 @@ def main():
         theta=0.8, degree=6, leaf_size=128, precompute="hierarchical"))
 
     t0 = time.time()
-    plan = solver.plan(x, x)
-    f = np.asarray(forces(solver, plan, x, q))
+    plan = solver.plan(x, nranks=1)
+    phi, f = plan.potential_and_forces(q)
+    f = np.asarray(f)
     for step in range(args.steps):
         v += 0.5 * args.dt * f / mass
         x += args.dt * v
-        plan = solver.plan(x, x)               # rebuild tree (moving pts)
-        f = np.asarray(forces(solver, plan, x, q))
+        plan = plan.replan(x)                  # rebuild tree (moving pts)
+        phi, f = plan.potential_and_forces(q)
+        f = np.asarray(f)
         v += 0.5 * args.dt * f / mass
         if step % max(1, args.steps // 10) == 0:
-            phi = solver.execute(plan, q)
             pe = potential_energy(phi, q)
             ke = 0.5 * mass * float((v * v).sum())
             print(f"step {step:4d}  KE {ke:10.6f}  PE {pe:10.6f}  "

@@ -1,0 +1,41 @@
+"""Version-adaptive shims over jax APIs that moved between releases.
+
+The distributed and checkpoint code targets the modern spellings
+(`jax.shard_map(..., check_vma=...)`, `jax.sharding.AxisType`,
+`jax.tree.flatten_with_path`); older jaxlibs (e.g. 0.4.x in the
+evaluation container) ship the same functionality under
+`jax.experimental.shard_map` / `check_rep` / `jax.tree_util`. Everything
+in-repo goes through this module so a single import works everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6 spelling
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+else:  # pragma: no cover - exercised on old jax only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(shape, axis_names):
+    """`jax.make_mesh` with Auto axis types where the installed jax has
+    explicit-sharding axis types; plain mesh otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def tree_flatten_with_path(tree):
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)

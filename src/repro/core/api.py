@@ -1,27 +1,60 @@
-"""Public composable API: the barycentric Lagrange treecode solver.
+"""Unified public API: one solver facade over every execution strategy.
 
-Typical use::
+`TreecodeSolver` is the single entry point for fast summation
+phi_i = sum_j G(x_i, y_j) q_j. `solver.plan(...)` returns an execution
+plan — `SingleDevicePlan` for one device, `ShardedPlan` (RCB domain
+decomposition + locally essential trees via shard_map) for nranks >= 2 —
+and every plan implements the same protocol:
+
+    plan.execute(charges)               -> phi          (input order)
+    plan.potential_and_forces(charges)  -> (phi, F)     F_i = -q_i grad phi_i
+    plan.stats()                        -> dict of geometry/cost counters
+    plan.replan(points)                 -> new plan, same config (MD)
+
+Typical single-shot use::
 
     from repro.core.api import TreecodeConfig, TreecodeSolver
     solver = TreecodeSolver(TreecodeConfig(theta=0.8, degree=8))
     phi = solver(targets, sources, charges)
 
-or, for iterative/boundary-element use where geometry is fixed and charges
-change every application::
+Iterative / boundary-element use (fixed geometry, many charge vectors —
+the plan keeps everything geometric on device, and with
+``donate_charges=True`` the single-device executor recycles the charge
+buffer instead of re-allocating; the sharded path stages charges
+host-side, where donation does not apply)::
 
     plan = solver.plan(targets, sources)
-    phi1 = solver.execute(plan, charges1)
-    phi2 = solver.execute(plan, charges2)
+    phi1 = plan.execute(charges1)
+    phi2 = plan.execute(charges2)
+
+Molecular dynamics (moving particles, forces)::
+
+    plan = solver.plan(points)                  # targets == sources
+    phi, forces = plan.potential_and_forces(charges)
+    plan = plan.replan(new_points)              # rebuild tree, same config
+
+Multi-device: pass ``nranks=P`` (or a one-axis ``mesh``) explicitly, or
+let ``plan`` auto-detect from `jax.device_count()` when targets are the
+sources. Kernels are pluggable: ``TreecodeConfig.kernel`` accepts a
+registry name (see `repro.core.potentials.register_kernel`) or a
+user-constructed `Kernel` instance.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Protocol, Tuple, Union, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import eval as _eval
-from repro.core.potentials import get_kernel
+from repro.core.potentials import Kernel, resolve_kernel
+
+_BACKENDS = ("auto", "pallas", "pallas_interpret", "xla")
+_PRECOMPUTES = ("direct", "hierarchical")
+_APPROX_R2 = ("diff", "matmul")
+_DTYPES = ("auto", "float32", "float64")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,26 +65,191 @@ class TreecodeConfig:
     batch_size: N_B (paper default N_B == N_L). `precompute` selects the
     paper-faithful per-cluster modified-charge computation ("direct") or the
     exact hierarchical upward pass ("hierarchical", beyond-paper).
+
+    `kernel` is a registry name or a `Kernel` instance; `dtype` pins the
+    working precision ("auto" follows the input arrays); `donate_charges`
+    lets the single-device `execute` consume the device charge buffer so
+    iterative loops don't re-allocate (no effect on sharded plans, which
+    stage charges host-side).
     """
 
     theta: float = 0.7
     degree: int = 8
     leaf_size: int = 256
     batch_size: int = 0          # 0 -> same as leaf_size (paper setting)
-    kernel: str = "coulomb"
+    kernel: Union[str, Kernel] = "coulomb"
     kappa: float = 0.5           # Yukawa inverse Debye length
     backend: str = "auto"        # pallas | pallas_interpret | xla | auto
     kahan: bool = False
     precompute: str = "direct"   # direct | hierarchical
     approx_r2: str = "diff"      # diff | matmul (MXU form, beyond-paper)
+    dtype: str = "auto"          # auto | float32 | float64
+    donate_charges: bool = False
+
+    def __post_init__(self):
+        def bad(msg):
+            raise ValueError(f"TreecodeConfig: {msg}")
+
+        if not (isinstance(self.theta, (int, float))
+                and 0.0 < float(self.theta) <= 1.0):
+            bad(f"theta must be in (0, 1], got {self.theta!r}")
+        if not (isinstance(self.degree, int) and self.degree >= 1):
+            bad(f"degree must be an int >= 1, got {self.degree!r}")
+        if not (isinstance(self.leaf_size, int) and self.leaf_size > 0):
+            bad(f"leaf_size must be > 0, got {self.leaf_size!r}")
+        if not (isinstance(self.batch_size, int) and self.batch_size >= 0):
+            bad(f"batch_size must be >= 0 (0 = leaf_size), "
+                f"got {self.batch_size!r}")
+        if self.backend not in _BACKENDS:
+            bad(f"unknown backend {self.backend!r}; choose from {_BACKENDS}")
+        if self.precompute not in _PRECOMPUTES:
+            bad(f"unknown precompute {self.precompute!r}; "
+                f"choose from {_PRECOMPUTES}")
+        if self.approx_r2 not in _APPROX_R2:
+            bad(f"unknown approx_r2 {self.approx_r2!r}; "
+                f"choose from {_APPROX_R2}")
+        if self.dtype not in _DTYPES:
+            bad(f"unknown dtype {self.dtype!r}; choose from {_DTYPES}")
+        if not isinstance(self.kernel, (str, Kernel)):
+            bad(f"kernel must be a registry name or a Kernel instance, "
+                f"got {type(self.kernel).__name__}")
 
     def resolved_batch_size(self) -> int:
         return self.batch_size or self.leaf_size
 
-    def make_kernel(self):
-        if self.kernel == "yukawa":
-            return get_kernel("yukawa", kappa=self.kappa)
-        return get_kernel(self.kernel)
+    def make_kernel(self) -> Kernel:
+        if isinstance(self.kernel, str) and self.kernel == "yukawa":
+            return resolve_kernel("yukawa", kappa=self.kappa)
+        return resolve_kernel(self.kernel)
+
+    def exec_opts(self, kernel: Kernel) -> dict:
+        """Static options consumed by the jitted executors."""
+        return dict(degree=self.degree, kernel=kernel, backend=self.backend,
+                    kahan=self.kahan, precompute=self.precompute,
+                    approx_r2=self.approx_r2)
+
+
+@runtime_checkable
+class Plan(Protocol):
+    """Common executor protocol implemented by every planning strategy."""
+
+    def execute(self, charges) -> jnp.ndarray:
+        """Potentials at the plan's targets, in input order."""
+
+    def potential_and_forces(self, charges, weights=None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(phi, F) with F_i = -w_i * grad_x phi(x_i), sources fixed."""
+
+    def stats(self) -> dict:
+        """Geometry / cost counters (strategy, sizes, padding waste...)."""
+
+    def replan(self, targets, sources=None) -> "Plan":
+        """Rebuild geometry for moved particles under the same config."""
+
+
+def _resolve_dtype(config: TreecodeConfig, arr: np.ndarray) -> np.dtype:
+    if config.dtype == "auto":
+        dt = np.dtype(arr.dtype)
+        if dt == np.dtype(np.float64) and not jax.config.jax_enable_x64:
+            # jax canonicalizes f64 to f32 when x64 is off; report the
+            # precision the device will actually compute in.
+            return np.dtype(np.float32)
+        return dt if dt in (np.dtype(np.float32), np.dtype(np.float64)) \
+            else np.dtype(np.float32)
+    if config.dtype == "float64" and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "TreecodeConfig(dtype='float64') requires x64 mode: set "
+            "jax.config.update('jax_enable_x64', True) before planning")
+    return np.dtype(config.dtype)
+
+
+class SingleDevicePlan:
+    """Plan over the single-device pipeline (`repro.core.eval`)."""
+
+    nranks = 1
+
+    def __init__(self, config: TreecodeConfig, kernel: Kernel,
+                 inner: _eval.Plan, dtype: np.dtype):
+        self.config = config
+        self.kernel = kernel
+        self.inner = inner
+        self.dtype = dtype
+
+    # -- convenience passthroughs kept from the old `eval.Plan` surface
+    @property
+    def arrays(self) -> dict:
+        return self.inner.arrays
+
+    @property
+    def padding_waste(self) -> float:
+        return self.inner.padding_waste
+
+    @property
+    def num_targets(self) -> int:
+        return self.inner.num_targets
+
+    @property
+    def num_sources(self) -> int:
+        return self.inner.num_sources
+
+    def _charges(self, charges) -> jnp.ndarray:
+        q = jnp.asarray(charges)
+        if q.dtype != self.dtype:
+            q = q.astype(self.dtype)
+        return q
+
+    def execute(self, charges) -> jnp.ndarray:
+        fn = (_eval.execute_donating if self.config.donate_charges
+              else _eval.execute)
+        return fn(self.inner.arrays, self._charges(charges),
+                  **self.config.exec_opts(self.kernel))
+
+    def potential_and_forces(self, charges, weights=None):
+        q = self._charges(charges)
+        if weights is None:
+            if self.num_targets != self.num_sources:
+                raise ValueError(
+                    "potential_and_forces: targets != sources, so per-target "
+                    "weights cannot default to the source charges; pass "
+                    "weights= explicitly (q of each target)")
+            w = q
+        else:
+            w = self._charges(weights)
+        return _eval.potential_and_forces(
+            self.inner.arrays, q, w, **self.config.exec_opts(self.kernel))
+
+    def stats(self) -> dict:
+        tree = self.inner.tree
+        return dict(
+            strategy="single_device",
+            nranks=1,
+            num_targets=self.inner.num_targets,
+            num_sources=self.inner.num_sources,
+            num_nodes=tree.num_nodes,
+            num_leaves=tree.num_leaves,
+            tree_depth=int(tree.level.max()),
+            num_batches=self.inner.batches.num_batches,
+            padding_waste=self.inner.padding_waste,
+            dtype=str(self.dtype),
+        )
+
+    def replan(self, targets, sources=None) -> "SingleDevicePlan":
+        return _plan_single(self.config, self.kernel, targets,
+                            targets if sources is None else sources)
+
+
+def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
+                 sources) -> SingleDevicePlan:
+    targets = np.asarray(targets)
+    sources = np.asarray(sources)
+    dtype = _resolve_dtype(config, targets)
+    inner = _eval.prepare_plan(
+        targets.astype(dtype, copy=False), sources.astype(dtype, copy=False),
+        theta=config.theta, degree=config.degree,
+        leaf_size=config.leaf_size, batch_size=config.resolved_batch_size())
+    if config.precompute == "hierarchical":
+        inner = _eval.add_hierarchical_tables(inner)
+    return SingleDevicePlan(config, kernel, inner, dtype)
 
 
 class TreecodeSolver:
@@ -61,25 +259,70 @@ class TreecodeSolver:
         self.config = config
         self._kernel = config.make_kernel()
 
-    def plan(self, targets: np.ndarray, sources: np.ndarray) -> _eval.Plan:
-        cfg = self.config
-        plan = _eval.prepare_plan(
-            targets, sources,
-            theta=cfg.theta, degree=cfg.degree,
-            leaf_size=cfg.leaf_size, batch_size=cfg.resolved_batch_size(),
-        )
-        if cfg.precompute == "hierarchical":
-            plan = _eval.add_hierarchical_tables(plan)
-        return plan
+    @property
+    def kernel(self) -> Kernel:
+        return self._kernel
 
-    def execute(self, plan: _eval.Plan, charges) -> jnp.ndarray:
-        cfg = self.config
-        return _eval.execute(
-            plan.arrays, jnp.asarray(charges),
-            degree=cfg.degree, kernel=self._kernel, backend=cfg.backend,
-            kahan=cfg.kahan, precompute=cfg.precompute,
-            approx_r2=cfg.approx_r2,
-        )
+    def plan(self, targets, sources=None, *, mesh=None,
+             nranks: Optional[int] = None) -> Plan:
+        """Build an execution plan for this geometry.
+
+        sources defaults to targets (the N-body setting). Strategy choice:
+        an explicit `mesh` (one sharding axis) or `nranks` wins; otherwise
+        nranks is auto-detected from `jax.device_count()` when targets are
+        the sources, and falls back to single-device for disjoint
+        target/source sets (the sharded path assumes the paper's
+        targets == sources test setting).
+        """
+        same = sources is None or sources is targets
+        if mesh is not None and nranks is not None:
+            raise ValueError("pass either mesh= or nranks=, not both")
+        axis = "data"
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    f"sharded plans shard over exactly one mesh axis; got "
+                    f"axes {tuple(mesh.axis_names)}")
+            axis = mesh.axis_names[0]
+            p = mesh.devices.size
+        elif nranks is not None:
+            p = int(nranks)
+            if p < 1:
+                raise ValueError(f"nranks must be >= 1, got {nranks}")
+        else:
+            # Auto-detect, clamped to what the geometry can feed: RCB
+            # needs at least one particle per rank.
+            p = jax.device_count() if same else 1
+            n = np.asarray(targets).shape[0]
+            if n < p:
+                p = 1
+
+        if p == 1:
+            return _plan_single(self.config, self._kernel, targets,
+                                targets if sources is None else sources)
+
+        if not same:
+            raise ValueError(
+                "sharded planning (nranks >= 2) requires targets == sources; "
+                "pass nranks=1 for disjoint target/source sets")
+        if mesh is None and p > jax.device_count():
+            raise ValueError(
+                f"nranks={p} exceeds the {jax.device_count()} visible "
+                "device(s); pass a mesh spanning the target hardware or "
+                "lower nranks")
+        from repro.distributed.bltc import ShardedPlan
+        points = np.asarray(targets)
+        dtype = _resolve_dtype(self.config, points)
+        return ShardedPlan.build(points.astype(dtype, copy=False),
+                                 self.config, p, mesh=mesh, axis=axis,
+                                 kernel=self._kernel)
+
+    # -- protocol delegations (kept so existing call sites read naturally)
+    def execute(self, plan: Plan, charges) -> jnp.ndarray:
+        return plan.execute(charges)
+
+    def potential_and_forces(self, plan: Plan, charges, weights=None):
+        return plan.potential_and_forces(charges, weights)
 
     def __call__(self, targets, sources, charges) -> jnp.ndarray:
-        return self.execute(self.plan(targets, sources), charges)
+        return self.plan(targets, sources).execute(charges)

@@ -234,11 +234,11 @@ def compute_qhat_hierarchical(arrays, q_sorted, *, degree, backend):
     return qhat
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("degree", "kernel", "backend", "kahan", "precompute",
-                     "approx_r2"))
-def execute(
+_EXEC_OPTS = ("degree", "kernel", "backend", "kahan", "precompute",
+              "approx_r2")
+
+
+def _execute_impl(
     arrays: dict,
     charges: jnp.ndarray,
     *,
@@ -276,6 +276,132 @@ def execute(
 
     phi = (phi_a + phi_d).reshape(-1)
     return phi[arrays["gather_index"]]
+
+
+#: Jitted executor (geometry reused across charge vectors).
+execute = jax.jit(_execute_impl, static_argnames=_EXEC_OPTS)
+
+#: Same, but the charges buffer is donated to the computation so iterative
+#: (boundary-element) loops that feed device-resident charge vectors don't
+#: re-allocate; the caller's array is invalidated after the call.
+execute_donating = jax.jit(_execute_impl, static_argnames=_EXEC_OPTS,
+                           donate_argnums=(1,))
+
+
+# ---------------------------------------------------------------------------
+# Differentiation w.r.t. target coordinates (forces)
+# ---------------------------------------------------------------------------
+#
+# phi_i depends on the *target* slab only through target i's own coordinates
+# (each padded batch slot holds exactly one target), so the Jacobian
+# d phi / d tgt_batched is diagonal in the target index. Three forward-mode
+# JVPs with per-axis unit tangents therefore recover the full per-target
+# gradient; reverse mode through the pipeline would instead transpose every
+# gather into a scatter-add over the padded tables — much more memory
+# traffic for the same diagonal. The custom VJP below exploits this so
+# `jax.grad` of any scalar in phi stays cheap.
+
+
+def _target_gradient(arrays, charges, opts: dict):
+    """(phi, g) with g_i = d phi_i / d x_i, sources held fixed."""
+    opts = dict(opts, backend=ops.autodiff_backend(opts["backend"]))
+    tgt = arrays["tgt_batched"]
+
+    def phi_of(t):
+        return _execute_impl(dict(arrays, tgt_batched=t), charges, **opts)
+
+    phi, grads = None, []
+    for d in range(3):
+        tangent = jnp.zeros_like(tgt).at[..., d].set(1.0)
+        phi, dphi = jax.jvp(phi_of, (tgt,), (tangent,))
+        grads.append(dphi)
+    return phi, jnp.stack(grads, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=_EXEC_OPTS)
+def potential_and_gradient(arrays, charges, *, degree, kernel,
+                           backend="auto", kahan=False, precompute="direct",
+                           approx_r2="diff"):
+    """Potentials and their per-target spatial gradient, input order."""
+    return _target_gradient(arrays, charges, dict(
+        degree=degree, kernel=kernel, backend=backend, kahan=kahan,
+        precompute=precompute, approx_r2=approx_r2))
+
+
+def _zero_cotangent(x):
+    if jnp.issubdtype(jnp.result_type(x), jnp.inexact):
+        return jnp.zeros_like(x)
+    return np.zeros(jnp.shape(x), jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _phi_from_targets(opts: Tuple, tgt_batched, arrays, charges):
+    o = dict(zip(_EXEC_OPTS, opts))
+    return _execute_impl(dict(arrays, tgt_batched=tgt_batched), charges, **o)
+
+
+def _phi_fwd(opts, tgt_batched, arrays, charges):
+    o = dict(zip(_EXEC_OPTS, opts))
+    phi = _execute_impl(dict(arrays, tgt_batched=tgt_batched), charges, **o)
+    return phi, (tgt_batched, arrays, charges)
+
+
+def _phi_bwd(opts, res, u):
+    tgt, arrays, charges = res
+    o = dict(zip(_EXEC_OPTS, opts))
+    _, g = _target_gradient(dict(arrays, tgt_batched=tgt), charges, o)
+    flat = jnp.zeros((tgt.shape[0] * tgt.shape[1], 3), g.dtype)
+    tbar = flat.at[arrays["gather_index"]].set(u[:, None] * g)
+    # phi is linear in the charges, so that cotangent is an exact transpose
+    # (dead-code-eliminated under jit when the caller only needs d/d tgt).
+    o_ad = dict(o, backend=ops.autodiff_backend(o["backend"]))
+    _, q_vjp = jax.vjp(
+        lambda q: _execute_impl(dict(arrays, tgt_batched=tgt), q, **o_ad),
+        charges)
+    (qbar,) = q_vjp(u)
+    arrays_bar = jax.tree.map(_zero_cotangent, arrays)
+    return tbar.reshape(tgt.shape), arrays_bar, qbar
+
+
+_phi_from_targets.defvjp(_phi_fwd, _phi_bwd)
+
+
+def differentiable_execute(arrays, charges, *, degree, kernel,
+                           backend="auto", kahan=False, precompute="direct",
+                           approx_r2="diff"):
+    """`execute` with an efficient custom VJP w.r.t. target coordinates.
+
+    Differentiable in `arrays["tgt_batched"]` (forces, target-position
+    optimization) and in `charges`; source geometry is treated as fixed,
+    matching the treecode convention that the tree is rebuilt — not
+    differentiated — when sources move.
+    """
+    opts = (degree, kernel, backend, kahan, precompute, approx_r2)
+    return _phi_from_targets(opts, arrays["tgt_batched"], arrays, charges)
+
+
+@functools.partial(jax.jit, static_argnames=_EXEC_OPTS)
+def potential_and_forces(arrays, charges, weights, *, degree, kernel,
+                         backend="auto", kahan=False, precompute="direct",
+                         approx_r2="diff"):
+    """(phi, F) with F_i = -weights_i * d phi_i / d x_i, input order.
+
+    With targets == sources and weights == charges this is the physical
+    force -q_i grad phi(x_i): by symmetry of G the source-side variation
+    contributes exactly the target-side term, so holding sources fixed and
+    doubling via the energy convention is not needed. Implemented as
+    `jax.grad` of sum(weights * phi) through the custom-VJP executor.
+    """
+    opts = (degree, kernel, backend, kahan, precompute, approx_r2)
+
+    def weighted(t):
+        phi = _phi_from_targets(opts, t, arrays, charges)
+        return jnp.sum(phi * weights), phi
+
+    (_, phi), wg = jax.value_and_grad(weighted, has_aux=True)(
+        arrays["tgt_batched"])
+    forces = -wg.reshape(-1, 3)[arrays["gather_index"]]
+    return phi, forces
 
 
 def add_hierarchical_tables(plan: Plan) -> Plan:

@@ -75,7 +75,46 @@ def yukawa(kappa: float = 0.5) -> Kernel:
 _REGISTRY = {"coulomb": coulomb, "yukawa": yukawa}
 
 
+def register_kernel(name: str, factory: Callable[..., Kernel],
+                    overwrite: bool = False) -> None:
+    """Register a user kernel factory under `name`.
+
+    The factory is called as ``factory(**params)`` and must return a
+    `Kernel`. Once registered the name is accepted anywhere a built-in
+    kernel name is (e.g. ``TreecodeConfig(kernel="my_kernel")``). The
+    treecode only ever *evaluates* G, so any smooth non-oscillatory
+    kernel works at the same MAC/degree accuracy tradeoffs.
+    """
+    if name in _REGISTRY and not overwrite:
+        raise KeyError(f"kernel {name!r} already registered "
+                       "(pass overwrite=True to replace)")
+    _REGISTRY[name] = factory
+
+
+def registered_kernels() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
 def get_kernel(name: str, **params) -> Kernel:
     if name not in _REGISTRY:
         raise KeyError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**params)
+    kern = _REGISTRY[name](**params)
+    if not isinstance(kern, Kernel):
+        raise TypeError(f"kernel factory {name!r} returned "
+                        f"{type(kern).__name__}, expected Kernel")
+    return kern
+
+
+def resolve_kernel(kernel, **params) -> Kernel:
+    """Accept either a registry name or a ready `Kernel` instance.
+
+    `Kernel` is a frozen dataclass (hashable, compared by fields), so a
+    user-constructed instance is jit-stable: passing an equal kernel to a
+    jitted entry point hits the compile cache.
+    """
+    if isinstance(kernel, Kernel):
+        return kernel
+    if isinstance(kernel, str):
+        return get_kernel(kernel, **params)
+    raise TypeError(f"kernel must be a name or Kernel, got "
+                    f"{type(kernel).__name__}")

@@ -14,19 +14,27 @@ plus the two collectives. Per-rank structures are padded to common shapes
 (see DESIGN.md on the static-LET tradeoff); every sentinel slot contributes
 exactly zero. With targets == sources (the paper's test setting) the result
 matches the single-device treecode to the same MAC error tolerance.
+
+`ShardedPlan` implements the solver-wide execution-plan protocol
+(`execute` / `potential_and_forces` / `stats` / `replan`); build one via
+``TreecodeSolver.plan(points, nranks=P)``. Arbitrary N is supported: RCB
+produces near-balanced slabs and shorter slabs are zero-padded to the
+common width (padded slots carry zero charge and are never gathered).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import cheby
 from repro.core import eval as ceval
 from repro.core.api import TreecodeConfig
+from repro.core.potentials import Kernel
 from repro.core.tree import Tree
 from repro.distributed.rcb import RCB, rcb_partition
 from repro.kernels import ops
@@ -35,16 +43,6 @@ from repro.kernels import ops
 def _pad_to(a: np.ndarray, shape: Tuple[int, ...], value=0) -> np.ndarray:
     pads = [(0, s - d) for s, d in zip(shape, a.shape)]
     return np.pad(a, pads, constant_values=value)
-
-
-@dataclasses.dataclass
-class DistPlan:
-    arrays: Dict[str, jnp.ndarray]      # leading dim P (shardable)
-    perm_rounds: Tuple[Tuple[int, Tuple[Tuple[int, int], ...]], ...]
-    degree: int
-    nranks: int
-    rcb: RCB
-    scratch_node: int                   # padded node row (zero q_hat)
 
 
 def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
@@ -86,271 +84,415 @@ def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
     return approx, halo_need
 
 
-def prepare_distributed(points: np.ndarray, cfg: TreecodeConfig,
-                        nranks: int) -> DistPlan:
-    points = np.asarray(points)
-    dtype = points.dtype
-    rcb = rcb_partition(points, nranks)
-    per = points.shape[0] // nranks
+@dataclasses.dataclass
+class ShardedPlan:
+    """RCB + shard_map execution plan conforming to the solver protocol."""
 
-    plans = []
-    for r in range(nranks):
-        slab = points[rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]]
-        plans.append(ceval.prepare_plan(
-            slab, slab, theta=cfg.theta, degree=cfg.degree,
-            leaf_size=cfg.leaf_size, batch_size=cfg.resolved_batch_size()))
+    config: TreecodeConfig
+    kernel: Kernel
+    arrays: Dict[str, jnp.ndarray]      # leading dim P (shardable)
+    perm_rounds: Tuple[Tuple[int, Tuple[Tuple[int, int], ...]], ...]
+    depth: int                          # modified-charge level count
+    nranks: int
+    rcb: RCB
+    scratch_node: int                   # padded node row (zero q_hat)
+    per_pad: int                        # common padded slab width
+    num_points: int
+    padding_waste: float                # mean over per-rank local plans
+    dtype: np.dtype
+    mesh: Optional[object] = None
+    axis: str = "data"
+    _fn: Optional[object] = dataclasses.field(default=None, repr=False)
 
-    # ---- common padded shapes across ranks
-    def amax(f):
-        return max(f(pl) for pl in plans)
+    # -- protocol aliases
+    @property
+    def num_targets(self) -> int:
+        return self.num_points
 
-    b_pad = amax(lambda pl: pl.arrays["tgt_batched"].shape[0])
-    nb_pad = amax(lambda pl: pl.arrays["tgt_batched"].shape[1])
-    l_pad = amax(lambda pl: pl.arrays["leaf_gather"].shape[0])
-    nl_pad = amax(lambda pl: pl.arrays["leaf_gather"].shape[1])
-    m_nodes = amax(lambda pl: pl.arrays["node_lo"].shape[0])
-    m_pad = m_nodes + 1                       # + scratch row
-    a_pad = amax(lambda pl: pl.arrays["approx_idx"].shape[1])
-    d_pad = amax(lambda pl: pl.arrays["direct_idx"].shape[1])
-    depth = amax(lambda pl: len(pl.arrays["bucket_gather"]))
-    c_pads = [1] * depth
-    g_pads = [1] * depth
-    for lvl in range(depth):
-        for pl in plans:
-            bg = pl.arrays["bucket_gather"]
-            if lvl < len(bg):
-                c_pads[lvl] = max(c_pads[lvl], bg[lvl].shape[0])
-                g_pads[lvl] = max(g_pads[lvl], bg[lvl].shape[1])
+    @property
+    def num_sources(self) -> int:
+        return self.num_points
 
-    remote_approx, halo_need = _remote_lists(cfg, plans, rcb, m_pad)
+    # ------------------------------------------------------------------
+    # host-side construction
+    # ------------------------------------------------------------------
 
-    # ---- halo schedule: one collective_permute round per rank offset
-    offsets = sorted({r - s for (s, r) in halo_need})
-    h_pads = []
-    for off in offsets:
-        h = max((len(v) for (s, r), v in halo_need.items()
-                 if r - s == off), default=1)
-        h_pads.append(max(h, 1))
-    halo_total = sum(h_pads)
+    @classmethod
+    def build(cls, points: np.ndarray, cfg: TreecodeConfig, nranks: int,
+              *, mesh=None, axis: str = "data",
+              kernel: Optional[Kernel] = None) -> "ShardedPlan":
+        points = np.asarray(points)
+        dtype = points.dtype
+        rcb = rcb_partition(points, nranks)
+        counts = rcb.counts()
+        per_pad = int(counts.max())
 
-    # received-halo slot of (s -> r) leaves, per destination rank
-    halo_slot: Dict[Tuple[int, int], Dict[int, int]] = {}
-    base = 0
-    for off, hp in zip(offsets, h_pads):
-        for (s, r), slots in halo_need.items():
-            if r - s != off:
-                continue
-            halo_slot[(s, r)] = {slot: base + i
-                                 for i, slot in enumerate(sorted(slots))}
-        base += hp
-
-    # remote direct lists: batches -> received halo leaf slots
-    remote_direct = [[] for _ in range(nranks)]
-    for r in range(nranks):
-        batches = plans[r].batches
-        for s in range(nranks):
-            if s == r or (s, r) not in halo_slot:
-                continue
-            tree = plans[s].tree
-            npts = (cfg.degree + 1) ** 3
-            for b in range(batches.num_batches):
-                bc, br = batches.center[b], batches.radius[b]
-                stack = [0]
-                while stack:
-                    node = stack.pop()
-                    dist = np.linalg.norm(bc - tree.center[node])
-                    ok = (br + tree.radius[node]) < cfg.theta * dist
-                    if ok and npts < tree.count[node]:
-                        continue
-                    if not ok and not tree.is_leaf[node]:
-                        stack.extend(int(k) for k in tree.children[node]
-                                     if k >= 0)
-                        continue
-                    if tree.is_leaf[node]:
-                        slots = [int(tree.leaf_index[node])]
-                    else:
-                        slots = tree.leaves_in_range(
-                            int(tree.start[node]),
-                            int(tree.count[node])).tolist()
-                    for sl in slots:
-                        remote_direct[r].append(
-                            (b, halo_slot[(s, r)][sl]))
-
-    def _pad_pairs(pairs_per_rank):
-        """(batch, value) pair lists -> (P, B_pad, w) -1-padded arrays."""
-        perb = [[[] for _ in range(b_pad)] for _ in range(nranks)]
-        w = 1
-        for r, pairs in enumerate(pairs_per_rank):
-            for b, v in pairs:
-                perb[r][b].append(v)
-                w = max(w, len(perb[r][b]))
-        out = np.full((nranks, b_pad, w), -1, np.int64)
+        plans = []
         for r in range(nranks):
-            for b in range(b_pad):
-                row = perb[r][b]
-                out[r, b, :len(row)] = row
-        return out
+            slab = points[rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]]
+            plans.append(ceval.prepare_plan(
+                slab, slab, theta=cfg.theta, degree=cfg.degree,
+                leaf_size=cfg.leaf_size,
+                batch_size=cfg.resolved_batch_size()))
 
-    remote_approx_idx = _pad_pairs(remote_approx)
-    remote_direct_idx = _pad_pairs(remote_direct)
+        # ---- common padded shapes across ranks
+        def amax(f):
+            return max(f(pl) for pl in plans)
 
-    # ---- halo send tables (leaf slots each rank sends, per round)
-    halo_send = []
-    for off, hp in zip(offsets, h_pads):
-        tbl = np.full((nranks, hp), -1, np.int64)
-        for (s, r), slots in halo_need.items():
-            if r - s != off:
-                continue
-            ordered = sorted(slots)
-            tbl[s, :len(ordered)] = ordered
-        halo_send.append(tbl)
-
-    perm_rounds = tuple(
-        (off, tuple((s, s + off) for s in range(nranks)
-                    if 0 <= s + off < nranks))
-        for off in offsets)
-
-    # ---- stack per-rank padded arrays
-    def stack(field, shape, value=0, recompute=None):
-        outs = []
-        for pl in plans:
-            a = np.asarray(pl.arrays[field])
-            if recompute is not None:
-                a = recompute(pl, a)
-            outs.append(_pad_to(a, shape, value))
-        return np.stack(outs)
-
-    def fix_gather_index(pl, gi):
-        old_nb = pl.arrays["tgt_batched"].shape[1]
-        row, slot = gi // old_nb, gi % old_nb
-        return (row * nb_pad + slot).astype(np.int32)
-
-    arrays = {
-        "src_sorted": stack("src_sorted", (per, 3)),
-        "charges_perm": np.stack(  # rank-local sort permutation
-            [np.asarray(pl.arrays["src_perm"]) for pl in plans]),
-        "tgt_batched": stack("tgt_batched", (b_pad, nb_pad, 3)),
-        "gather_index": stack("gather_index", (per,),
-                              recompute=fix_gather_index),
-        "leaf_gather": stack("leaf_gather", (l_pad, nl_pad), value=-1),
-        "node_lo": stack("node_lo", (m_pad, 3)),
-        "node_hi": stack("node_hi", (m_pad, 3), value=1),
-        "approx_idx": stack("approx_idx", (b_pad, a_pad), value=-1),
-        "direct_idx": stack("direct_idx", (b_pad, d_pad), value=-1),
-        "remote_approx_idx": remote_approx_idx.astype(np.int32),
-        "remote_direct_idx": remote_direct_idx.astype(np.int32),
-    }
-    for lvl in range(depth):
-        gs, ns = [], []
-        for pl in plans:
-            bg, bn = pl.arrays["bucket_gather"], pl.arrays["bucket_nodes"]
-            if lvl < len(bg):
-                g = _pad_to(np.asarray(bg[lvl]),
-                            (c_pads[lvl], g_pads[lvl]), -1)
-                n = _pad_to(np.asarray(bn[lvl]), (c_pads[lvl],),
-                            m_nodes)  # scratch
-            else:
-                g = np.full((c_pads[lvl], g_pads[lvl]), -1, np.int32)
-                n = np.full((c_pads[lvl],), m_nodes, np.int32)
-            gs.append(g)
-            ns.append(n)
-        arrays[f"bucket_gather_{lvl}"] = np.stack(gs).astype(np.int32)
-        arrays[f"bucket_nodes_{lvl}"] = np.stack(ns).astype(np.int32)
-    for i, tbl in enumerate(halo_send):
-        arrays[f"halo_send_{i}"] = tbl.astype(np.int32)
-
-    arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
-    arrays["_depth"] = depth  # static, popped before shard_map
-    return DistPlan(arrays=arrays, perm_rounds=perm_rounds,
-                    degree=cfg.degree, nranks=nranks, rcb=rcb,
-                    scratch_node=m_nodes)
-
-
-def distributed_execute(plan: DistPlan, charges: np.ndarray,
-                        cfg: TreecodeConfig, mesh=None,
-                        axis: str = "data") -> jnp.ndarray:
-    """Potentials at all points (input order), SPMD over `axis`."""
-    kernel = cfg.make_kernel()
-    degree = plan.degree
-    p = plan.nranks
-    depth = plan.arrays["_depth"]
-    arrays = {k: v for k, v in plan.arrays.items() if k != "_depth"}
-    if mesh is None:
-        mesh = jax.make_mesh((p,), (axis,),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-
-    # rank-major charges: (P, N/P), each slab sorted into its tree order
-    per = charges.shape[0] // p
-    q_rank = np.asarray(charges)[plan.rcb.perm].reshape(p, per)
-    backend = "xla" if cfg.backend == "auto" else cfg.backend
-
-    def spmd(args, q):
-        a = {k: v[0] for k, v in args.items()}   # strip sharded lead dim
-        q_sorted = q[0][a["charges_perm"]]
-
-        # local modified charges (scratch row stays zero: gather all -1)
-        lo, hi = a["node_lo"], a["node_hi"]
-        qhat = jnp.zeros((lo.shape[0], (degree + 1) ** 3), q_sorted.dtype)
+        b_pad = amax(lambda pl: pl.arrays["tgt_batched"].shape[0])
+        nb_pad = amax(lambda pl: pl.arrays["tgt_batched"].shape[1])
+        l_pad = amax(lambda pl: pl.arrays["leaf_gather"].shape[0])
+        nl_pad = amax(lambda pl: pl.arrays["leaf_gather"].shape[1])
+        m_nodes = amax(lambda pl: pl.arrays["node_lo"].shape[0])
+        m_pad = m_nodes + 1                       # + scratch row
+        a_pad = amax(lambda pl: pl.arrays["approx_idx"].shape[1])
+        d_pad = amax(lambda pl: pl.arrays["direct_idx"].shape[1])
+        depth = amax(lambda pl: len(pl.arrays["bucket_gather"]))
+        c_pads = [1] * depth
+        g_pads = [1] * depth
         for lvl in range(depth):
-            gidx = a[f"bucket_gather_{lvl}"]
-            nodes = a[f"bucket_nodes_{lvl}"]
-            center = 0.5 * (lo[nodes] + hi[nodes])
-            pts, qb = ceval._gathered(a["src_sorted"], q_sorted, gidx,
-                                      fill=center)
-            qh = ops.modified_charges(pts, qb, lo[nodes], hi[nodes],
-                                      degree=degree, backend=backend)
-            qhat = qhat.at[nodes].add(qh)  # scratch row may accumulate; ok
+            for pl in plans:
+                bg = pl.arrays["bucket_gather"]
+                if lvl < len(bg):
+                    c_pads[lvl] = max(c_pads[lvl], bg[lvl].shape[0])
+                    g_pads[lvl] = max(g_pads[lvl], bg[lvl].shape[1])
 
-        grids = cheby.cluster_grid(lo, hi, degree)
-        tgt = a["tgt_batched"]
-        phi = ops.batch_cluster_eval(a["approx_idx"], tgt, grids, qhat,
-                                     kernel=kernel, backend=backend)
-        leaf_pts, leaf_q = ceval._gathered(
-            a["src_sorted"], q_sorted, a["leaf_gather"])
-        phi += ops.batch_cluster_eval(a["direct_idx"], tgt, leaf_pts,
-                                      leaf_q, kernel=kernel, backend=backend)
+        remote_approx, halo_need = _remote_lists(cfg, plans, rcb, m_pad)
 
-        # LET phase 1: gather every rank's tree metadata + q_hat
-        g_lo = jax.lax.all_gather(lo, axis)        # (P, M, 3)
-        g_hi = jax.lax.all_gather(hi, axis)
-        g_qhat = jax.lax.all_gather(qhat, axis)    # (P, M, K3)
-        g_grids = cheby.cluster_grid(g_lo.reshape(-1, 3),
-                                     g_hi.reshape(-1, 3), degree)
-        phi += ops.batch_cluster_eval(
-            a["remote_approx_idx"], tgt, g_grids,
-            g_qhat.reshape(-1, (degree + 1) ** 3),
-            kernel=kernel, backend=backend)
+        # ---- halo schedule: one collective_permute round per rank offset
+        offsets = sorted({r - s for (s, r) in halo_need})
+        h_pads = []
+        for off in offsets:
+            h = max((len(v) for (s, r), v in halo_need.items()
+                     if r - s == off), default=1)
+            h_pads.append(max(h, 1))
 
-        # LET phase 2: halo leaf exchange (one permute per rank offset)
-        recv_pts, recv_q = [], []
-        for i, (off, pairs) in enumerate(plan.perm_rounds):
-            send_idx = a[f"halo_send_{i}"]         # (H,) leaf slots
-            safe = jnp.maximum(send_idx, 0)
-            valid = (send_idx >= 0)[:, None]
-            sp = jnp.where(valid[..., None], leaf_pts[safe], 0.0)
-            sq = jnp.where(valid, leaf_q[safe], 0.0)
-            rp = jax.lax.ppermute(sp, axis, pairs)
-            rq = jax.lax.ppermute(sq, axis, pairs)
-            recv_pts.append(rp)
-            recv_q.append(rq)
-        if recv_pts:
-            halo_pts = jnp.concatenate(recv_pts, axis=0)
-            halo_q = jnp.concatenate(recv_q, axis=0)
+        # received-halo slot of (s -> r) leaves, per destination rank
+        halo_slot: Dict[Tuple[int, int], Dict[int, int]] = {}
+        base = 0
+        for off, hp in zip(offsets, h_pads):
+            for (s, r), slots in halo_need.items():
+                if r - s != off:
+                    continue
+                halo_slot[(s, r)] = {slot: base + i
+                                     for i, slot in enumerate(sorted(slots))}
+            base += hp
+
+        # remote direct lists: batches -> received halo leaf slots
+        remote_direct = [[] for _ in range(nranks)]
+        for r in range(nranks):
+            batches = plans[r].batches
+            for s in range(nranks):
+                if s == r or (s, r) not in halo_slot:
+                    continue
+                tree = plans[s].tree
+                npts = (cfg.degree + 1) ** 3
+                for b in range(batches.num_batches):
+                    bc, br = batches.center[b], batches.radius[b]
+                    stack = [0]
+                    while stack:
+                        node = stack.pop()
+                        dist = np.linalg.norm(bc - tree.center[node])
+                        ok = (br + tree.radius[node]) < cfg.theta * dist
+                        if ok and npts < tree.count[node]:
+                            continue
+                        if not ok and not tree.is_leaf[node]:
+                            stack.extend(int(k) for k in tree.children[node]
+                                         if k >= 0)
+                            continue
+                        if tree.is_leaf[node]:
+                            slots = [int(tree.leaf_index[node])]
+                        else:
+                            slots = tree.leaves_in_range(
+                                int(tree.start[node]),
+                                int(tree.count[node])).tolist()
+                        for sl in slots:
+                            remote_direct[r].append(
+                                (b, halo_slot[(s, r)][sl]))
+
+        def _pad_pairs(pairs_per_rank):
+            """(batch, value) pair lists -> (P, B_pad, w) -1-padded arrays."""
+            perb = [[[] for _ in range(b_pad)] for _ in range(nranks)]
+            w = 1
+            for r, pairs in enumerate(pairs_per_rank):
+                for b, v in pairs:
+                    perb[r][b].append(v)
+                    w = max(w, len(perb[r][b]))
+            out = np.full((nranks, b_pad, w), -1, np.int64)
+            for r in range(nranks):
+                for b in range(b_pad):
+                    row = perb[r][b]
+                    out[r, b, :len(row)] = row
+            return out
+
+        remote_approx_idx = _pad_pairs(remote_approx)
+        remote_direct_idx = _pad_pairs(remote_direct)
+
+        # ---- halo send tables (leaf slots each rank sends, per round)
+        halo_send = []
+        for off, hp in zip(offsets, h_pads):
+            tbl = np.full((nranks, hp), -1, np.int64)
+            for (s, r), slots in halo_need.items():
+                if r - s != off:
+                    continue
+                ordered = sorted(slots)
+                tbl[s, :len(ordered)] = ordered
+            halo_send.append(tbl)
+
+        perm_rounds = tuple(
+            (off, tuple((s, s + off) for s in range(nranks)
+                        if 0 <= s + off < nranks))
+            for off in offsets)
+
+        # ---- stack per-rank padded arrays
+        def stack(field, shape, value=0, recompute=None):
+            outs = []
+            for pl in plans:
+                a = np.asarray(pl.arrays[field])
+                if recompute is not None:
+                    a = recompute(pl, a)
+                outs.append(_pad_to(a, shape, value))
+            return np.stack(outs)
+
+        def fix_gather_index(pl, gi):
+            old_nb = pl.arrays["tgt_batched"].shape[1]
+            row, slot = gi // old_nb, gi % old_nb
+            return (row * nb_pad + slot).astype(np.int32)
+
+        arrays = {
+            "src_sorted": stack("src_sorted", (per_pad, 3)),
+            "charges_perm": stack("src_perm", (per_pad,)),
+            "tgt_batched": stack("tgt_batched", (b_pad, nb_pad, 3)),
+            "gather_index": stack("gather_index", (per_pad,),
+                                  recompute=fix_gather_index),
+            "leaf_gather": stack("leaf_gather", (l_pad, nl_pad), value=-1),
+            "node_lo": stack("node_lo", (m_pad, 3)),
+            "node_hi": stack("node_hi", (m_pad, 3), value=1),
+            "approx_idx": stack("approx_idx", (b_pad, a_pad), value=-1),
+            "direct_idx": stack("direct_idx", (b_pad, d_pad), value=-1),
+            "remote_approx_idx": remote_approx_idx.astype(np.int32),
+            "remote_direct_idx": remote_direct_idx.astype(np.int32),
+        }
+        for lvl in range(depth):
+            gs, ns = [], []
+            for pl in plans:
+                bg, bn = pl.arrays["bucket_gather"], pl.arrays["bucket_nodes"]
+                if lvl < len(bg):
+                    g = _pad_to(np.asarray(bg[lvl]),
+                                (c_pads[lvl], g_pads[lvl]), -1)
+                    n = _pad_to(np.asarray(bn[lvl]), (c_pads[lvl],),
+                                m_nodes)  # scratch
+                else:
+                    g = np.full((c_pads[lvl], g_pads[lvl]), -1, np.int32)
+                    n = np.full((c_pads[lvl],), m_nodes, np.int32)
+                gs.append(g)
+                ns.append(n)
+            arrays[f"bucket_gather_{lvl}"] = np.stack(gs).astype(np.int32)
+            arrays[f"bucket_nodes_{lvl}"] = np.stack(ns).astype(np.int32)
+        for i, tbl in enumerate(halo_send):
+            arrays[f"halo_send_{i}"] = tbl.astype(np.int32)
+
+        arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+        waste = float(np.mean([pl.padding_waste for pl in plans]))
+        return cls(config=cfg, kernel=kernel or cfg.make_kernel(),
+                   arrays=arrays, perm_rounds=perm_rounds, depth=depth,
+                   nranks=nranks, rcb=rcb, scratch_node=m_nodes,
+                   per_pad=per_pad, num_points=points.shape[0],
+                   padding_waste=waste, dtype=np.dtype(dtype),
+                   mesh=mesh, axis=axis)
+
+    # ------------------------------------------------------------------
+    # device execution
+    # ------------------------------------------------------------------
+
+    def _spmd_fn(self):
+        """Jitted shard_map executable (arrays, q_rank) -> phi_rank, built
+        once per plan and reused across charge vectors."""
+        if self._fn is not None:
+            return self._fn
+        kernel, degree, p = self.kernel, self.config.degree, self.nranks
+        depth, axis = self.depth, self.axis
+        perm_rounds = self.perm_rounds
+        cfg = self.config
+        backend = "xla" if cfg.backend == "auto" else cfg.backend
+        mesh = self.mesh
+        if mesh is None:
+            mesh = compat.make_mesh((p,), (axis,))
+            self.mesh = mesh
+
+        def spmd(args, q):
+            a = {k: v[0] for k, v in args.items()}  # strip sharded lead dim
+            q_sorted = q[0][a["charges_perm"]]
+
+            # local modified charges (scratch row stays zero: gather all -1)
+            lo, hi = a["node_lo"], a["node_hi"]
+            qhat = jnp.zeros((lo.shape[0], (degree + 1) ** 3),
+                             q_sorted.dtype)
+            for lvl in range(depth):
+                gidx = a[f"bucket_gather_{lvl}"]
+                nodes = a[f"bucket_nodes_{lvl}"]
+                center = 0.5 * (lo[nodes] + hi[nodes])
+                pts, qb = ceval._gathered(a["src_sorted"], q_sorted, gidx,
+                                          fill=center)
+                qh = ops.modified_charges(pts, qb, lo[nodes], hi[nodes],
+                                          degree=degree, backend=backend)
+                qhat = qhat.at[nodes].add(qh)  # scratch row may accumulate
+
+            grids = cheby.cluster_grid(lo, hi, degree)
+            tgt = a["tgt_batched"]
+            phi = ops.batch_cluster_eval(a["approx_idx"], tgt, grids, qhat,
+                                         kernel=kernel, backend=backend)
+            leaf_pts, leaf_q = ceval._gathered(
+                a["src_sorted"], q_sorted, a["leaf_gather"])
+            phi += ops.batch_cluster_eval(a["direct_idx"], tgt, leaf_pts,
+                                          leaf_q, kernel=kernel,
+                                          backend=backend)
+
+            # LET phase 1: gather every rank's tree metadata + q_hat
+            g_lo = jax.lax.all_gather(lo, axis)        # (P, M, 3)
+            g_hi = jax.lax.all_gather(hi, axis)
+            g_qhat = jax.lax.all_gather(qhat, axis)    # (P, M, K3)
+            g_grids = cheby.cluster_grid(g_lo.reshape(-1, 3),
+                                         g_hi.reshape(-1, 3), degree)
             phi += ops.batch_cluster_eval(
-                a["remote_direct_idx"], tgt, halo_pts, halo_q,
+                a["remote_approx_idx"], tgt, g_grids,
+                g_qhat.reshape(-1, (degree + 1) ** 3),
                 kernel=kernel, backend=backend)
 
-        out = phi.reshape(-1)[a["gather_index"]]
-        return out[None]
+            # LET phase 2: halo leaf exchange (one permute per rank offset)
+            recv_pts, recv_q = [], []
+            for i, (off, pairs) in enumerate(perm_rounds):
+                send_idx = a[f"halo_send_{i}"]         # (H,) leaf slots
+                safe = jnp.maximum(send_idx, 0)
+                valid = (send_idx >= 0)[:, None]
+                sp = jnp.where(valid[..., None], leaf_pts[safe], 0.0)
+                sq = jnp.where(valid, leaf_q[safe], 0.0)
+                rp = jax.lax.ppermute(sp, axis, pairs)
+                rq = jax.lax.ppermute(sq, axis, pairs)
+                recv_pts.append(rp)
+                recv_q.append(rq)
+            if recv_pts:
+                halo_pts = jnp.concatenate(recv_pts, axis=0)
+                halo_q = jnp.concatenate(recv_q, axis=0)
+                phi += ops.batch_cluster_eval(
+                    a["remote_direct_idx"], tgt, halo_pts, halo_q,
+                    kernel=kernel, backend=backend)
 
-    specs = {k: jax.sharding.PartitionSpec(axis) for k in arrays}
-    fn = jax.jit(jax.shard_map(
-        spmd, mesh=mesh,
-        in_specs=(specs, jax.sharding.PartitionSpec(axis)),
-        out_specs=jax.sharding.PartitionSpec(axis),
-        check_vma=False))
-    phi_rank = fn(arrays, jnp.asarray(q_rank))     # (P, N/P) slab order
-    phi_flat = np.asarray(phi_rank).reshape(-1)
-    out = np.empty_like(phi_flat)
-    out[plan.rcb.perm] = phi_flat
-    return jnp.asarray(out)
+            out = phi.reshape(-1)[a["gather_index"]]
+            return out[None]
+
+        spec = jax.sharding.PartitionSpec(self.axis)
+        specs = {k: spec for k in self.arrays}
+        self._fn = jax.jit(compat.shard_map(
+            spmd, mesh=mesh, in_specs=(specs, spec), out_specs=spec))
+        return self._fn
+
+    def _rank_charges(self, charges) -> np.ndarray:
+        """(P, per_pad) rank-major charge slabs, zero-padded."""
+        charges = np.asarray(charges, self.dtype)
+        q_rank = np.zeros((self.nranks, self.per_pad), self.dtype)
+        starts = self.rcb.starts
+        for r in range(self.nranks):
+            idx = self.rcb.perm[starts[r]:starts[r + 1]]
+            q_rank[r, :len(idx)] = charges[idx]
+        return q_rank
+
+    def _unrank(self, per_rank: np.ndarray) -> np.ndarray:
+        """Scatter (P, per_pad, ...) rank-major results to input order."""
+        starts = self.rcb.starts
+        out = np.empty((self.num_points,) + per_rank.shape[2:],
+                       per_rank.dtype)
+        for r in range(self.nranks):
+            idx = self.rcb.perm[starts[r]:starts[r + 1]]
+            out[idx] = per_rank[r, :len(idx)]
+        return out
+
+    def execute(self, charges) -> jnp.ndarray:
+        """Potentials at all points (input order), SPMD over the mesh.
+
+        Charges are staged host-side into rank-major padded slabs, so
+        `TreecodeConfig.donate_charges` does not apply here (the
+        single-device plan honors it)."""
+        fn = self._spmd_fn()
+        phi_rank = fn(self.arrays, jnp.asarray(self._rank_charges(charges)))
+        return jnp.asarray(self._unrank(np.asarray(phi_rank)))
+
+    def potential_and_forces(self, charges, weights=None):
+        """(phi, F): forces from three forward JVPs through the SPMD
+        program w.r.t. the target slab (collectives are linear, so the
+        tangents flow through all_gather/ppermute exactly)."""
+        fn = self._spmd_fn()
+        q_rank = jnp.asarray(self._rank_charges(charges))
+        rest = {k: v for k, v in self.arrays.items() if k != "tgt_batched"}
+        tgt = self.arrays["tgt_batched"]
+
+        def phi_of(t):
+            return fn(dict(rest, tgt_batched=t), q_rank)
+
+        phi_rank, grads = None, []
+        for d in range(3):
+            tangent = jnp.zeros_like(tgt).at[..., d].set(1.0)
+            phi_rank, dphi = jax.jvp(phi_of, (tgt,), (tangent,))
+            grads.append(dphi)
+        g_rank = jnp.stack(grads, axis=-1)          # (P, per_pad, 3)
+        phi = self._unrank(np.asarray(phi_rank))
+        g = self._unrank(np.asarray(g_rank))
+        w = np.asarray(charges if weights is None else weights, self.dtype)
+        return jnp.asarray(phi), jnp.asarray(-w[:, None] * g)
+
+    def stats(self) -> dict:
+        counts = self.rcb.counts()
+        return dict(
+            strategy="sharded",
+            nranks=self.nranks,
+            num_targets=self.num_points,
+            num_sources=self.num_points,
+            rank_counts=counts.tolist(),
+            slab_pad=self.per_pad,
+            halo_rounds=len(self.perm_rounds),
+            padding_waste=self.padding_waste,
+            dtype=str(self.dtype),
+        )
+
+    def replan(self, targets, sources=None) -> "ShardedPlan":
+        if sources is not None and sources is not targets:
+            raise ValueError("sharded plans require targets == sources")
+        points = np.asarray(targets, self.dtype)
+        return ShardedPlan.build(points, self.config, self.nranks,
+                                 mesh=self.mesh, axis=self.axis,
+                                 kernel=self.kernel)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat aliases for the pre-unification API (PR 1). `DistPlan`,
+# `prepare_distributed` and `distributed_execute` are thin shims over
+# `ShardedPlan`; prefer `TreecodeSolver.plan(points, nranks=P)`.
+# ---------------------------------------------------------------------------
+
+DistPlan = ShardedPlan
+
+
+def prepare_distributed(points: np.ndarray, cfg: TreecodeConfig,
+                        nranks: int) -> ShardedPlan:
+    """Deprecated alias: build a `ShardedPlan`."""
+    return ShardedPlan.build(np.asarray(points), cfg, nranks)
+
+
+def distributed_execute(plan: ShardedPlan, charges: np.ndarray,
+                        cfg: TreecodeConfig = None, mesh=None,
+                        axis: str = "data") -> jnp.ndarray:
+    """Deprecated alias for ``plan.execute(charges)``.
+
+    The plan executes with the config captured at build time; passing a
+    *different* cfg here (the old API allowed varying it between prepare
+    and execute) is rejected loudly instead of silently ignored.
+    """
+    if cfg is not None and cfg != plan.config:
+        raise ValueError(
+            "distributed_execute received a cfg that differs from the one "
+            "the plan was built with; rebuild via TreecodeSolver.plan "
+            "(plans now bind their config at build time)")
+    if mesh is not None and plan.mesh is None:
+        plan.mesh = mesh
+        plan.axis = axis
+    return plan.execute(charges)

@@ -2,8 +2,10 @@
 
 Splits particles into P contiguous, count-balanced slabs by recursively
 bisecting along the longest extent at the index proportional to the rank
-counts on each side (so with N divisible by P every rank owns exactly N/P
-particles — the balance property Fig. 2 illustrates)."""
+counts on each side. Arbitrary N is supported: the proportional split
+makes every rank own floor(N/P) or ceil(N/P) particles (the balance
+property Fig. 2 illustrates, without the paper's N % P == 0 restriction).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -29,16 +31,21 @@ class RCB:
 
 def rcb_partition(points: np.ndarray, nranks: int) -> RCB:
     n = points.shape[0]
-    if n % nranks:
-        raise ValueError(f"N={n} must be divisible by P={nranks}")
+    if nranks < 1:
+        raise ValueError(f"nranks must be >= 1, got {nranks}")
+    if n < nranks:
+        raise ValueError(f"cannot split N={n} particles over P={nranks} "
+                         "ranks (every rank needs at least one particle)")
     perm = np.arange(n)
     bounds = [None] * nranks
+    counts = np.zeros(nranks, np.int64)
 
     def recurse(start, count, r0, r1):
         if r1 - r0 == 1:
             idx = perm[start:start + count]
             pts = points[idx]
             bounds[r0] = (pts.min(0), pts.max(0))
+            counts[r0] = count
             return
         idx = perm[start:start + count]
         pts = points[idx]
@@ -46,12 +53,15 @@ def rcb_partition(points: np.ndarray, nranks: int) -> RCB:
         order = np.argsort(pts[:, dim], kind="stable")
         perm[start:start + count] = idx[order]
         rmid = (r0 + r1) // 2
-        left = count * (rmid - r0) // (r1 - r0)
+        # Round the cut to the nearest proportional index so leftover
+        # particles spread one-per-rank (|count_r - N/P| <= 1 overall).
+        left = int(round(count * (rmid - r0) / (r1 - r0)))
+        left = min(max(left, rmid - r0), count - (r1 - rmid))
         recurse(start, left, r0, rmid)
         recurse(start + left, count - left, rmid, r1)
 
     recurse(0, n, 0, nranks)
-    starts = np.arange(nranks + 1) * (n // nranks)
+    starts = np.concatenate([[0], np.cumsum(counts)])
     rank_of = np.empty(n, np.int64)
     for r in range(nranks):
         rank_of[perm[starts[r]:starts[r + 1]]] = r

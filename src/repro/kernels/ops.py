@@ -35,6 +35,14 @@ def _resolve(backend: str) -> str:
     return default_backend() if backend == "auto" else backend
 
 
+def autodiff_backend(backend: str) -> str:
+    """Backend to use under jvp/vjp: the Pallas kernel bodies have no AD
+    rules, so derivative evaluations run the mathematically identical XLA
+    path (same masking, same accumulation order up to reassociation)."""
+    resolved = _resolve(backend)
+    return "xla" if resolved in ("pallas", "pallas_interpret") else resolved
+
+
 def _pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0):
     size = x.shape[axis]
     rem = (-size) % multiple

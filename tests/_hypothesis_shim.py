@@ -1,0 +1,82 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The container that runs tier-1 may lack the real package (no network / no
+pip). This shim implements exactly the subset the suite uses — `given` with
+keyword strategies, `settings(max_examples=..., deadline=...)`, and the
+`integers` / `sampled_from` / `booleans` strategies — drawing examples from
+a per-test seeded PRNG so runs are reproducible. With the real hypothesis
+installed (CI), this module is never imported; see conftest.py.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_stream(self, rng):
+        while True:
+            yield self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, booleans=_booleans)
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Record max_examples on the decorated test (order-independent with
+    `given`: whichever wrapper runs reads the attribute off itself)."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise NotImplementedError(
+            "shim `given` supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s._draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide strategy-supplied parameters from pytest's fixture resolution
+        # (real hypothesis does the same signature rewrite).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in kw_strategies])
+        return wrapper
+
+    return deco

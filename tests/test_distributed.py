@@ -50,29 +50,72 @@ def test_rcb_uneven_rank_count():
     assert (r.counts() == 100).all()
 
 
+@pytest.mark.parametrize("n,p", [(1000, 4), (2047, 2), (101, 7)])
+def test_rcb_arbitrary_n(n, p):
+    """N % P != 0 splits near-balanced (counts within 1 of N/P)."""
+    rng = np.random.default_rng(2)
+    pts = rng.uniform(-1, 1, (n, 3))
+    r = rcb_partition(pts, p)
+    counts = r.counts()
+    assert counts.sum() == n
+    assert counts.min() >= n // p - 1 and counts.max() <= -(-n // p) + 1
+    assert sorted(r.perm.tolist()) == list(range(n))
+
+
+def test_rcb_rejects_empty_ranks():
+    pts = np.zeros((3, 3))
+    with pytest.raises(ValueError):
+        rcb_partition(pts, 4)
+
+
 @pytest.mark.parametrize("nranks", [2, 4])
-def test_distributed_matches_direct_sum(nranks):
+def test_sharded_plan_matches_direct_sum(nranks):
     _run_sub(f"""
         import numpy as np, jax, jax.numpy as jnp
-        from repro.core.api import TreecodeConfig
+        from repro.core.api import TreecodeConfig, TreecodeSolver
         from repro.core.direct import direct_sum
-        from repro.distributed.bltc import prepare_distributed, distributed_execute
         rng = np.random.default_rng(0)
         N = 2048
         pts = rng.uniform(-1, 1, (N, 3)).astype(np.float32)
         q = rng.uniform(-1, 1, N).astype(np.float32)
-        cfg = TreecodeConfig(theta=0.7, degree=5, leaf_size=64, backend="xla")
+        solver = TreecodeSolver(TreecodeConfig(
+            theta=0.7, degree=5, leaf_size=64, backend="xla"))
         phi_ds = direct_sum(jnp.asarray(pts), jnp.asarray(pts), jnp.asarray(q),
-                            kernel=cfg.make_kernel())
-        plan = prepare_distributed(pts, cfg, {nranks})
-        phi = distributed_execute(plan, q, cfg)
+                            kernel=solver.kernel)
+        plan = solver.plan(pts, nranks={nranks})
+        st = plan.stats()
+        assert st["strategy"] == "sharded" and st["nranks"] == {nranks}, st
+        phi = plan.execute(q)
         err = float(jnp.linalg.norm(phi_ds - phi) / jnp.linalg.norm(phi_ds))
         print("err", err)
         assert err < 5e-4, err
     """, devices=nranks)
 
 
-def test_distributed_yukawa():
+def test_sharded_plan_uneven_particle_count():
+    """N % P != 0 goes through the padded-slab path end to end."""
+    _run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.api import TreecodeConfig, TreecodeSolver
+        from repro.core.direct import direct_sum
+        rng = np.random.default_rng(7)
+        N = 1999   # prime; 4 ranks get 500/500/500/499
+        pts = rng.uniform(-1, 1, (N, 3)).astype(np.float32)
+        q = rng.uniform(-1, 1, N).astype(np.float32)
+        solver = TreecodeSolver(TreecodeConfig(
+            theta=0.7, degree=5, leaf_size=64, backend="xla"))
+        phi_ds = direct_sum(jnp.asarray(pts), jnp.asarray(pts), jnp.asarray(q),
+                            kernel=solver.kernel)
+        plan = solver.plan(pts, nranks=4)
+        phi = plan.execute(q)
+        err = float(jnp.linalg.norm(phi_ds - phi) / jnp.linalg.norm(phi_ds))
+        print("err", err)
+        assert err < 5e-4, err
+    """)
+
+
+def test_distributed_yukawa_via_legacy_alias():
+    """The pre-unification entry points still work as thin shims."""
     _run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.api import TreecodeConfig
@@ -119,6 +162,7 @@ def test_compressed_psum_dp_training():
     _run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.optim.compression import compressed_psum_tree
         mesh = jax.make_mesh((4,), ("data",))
         rng = np.random.default_rng(0)
@@ -136,10 +180,10 @@ def test_compressed_psum_dp_training():
                 {"w": g}, {"w": err[0]}, "data")
             return w - 0.1 * g_mean["w"], new_err["w"][None]
 
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(compat.shard_map(
             step, mesh=mesh,
             in_specs=(P(), P("data"), P("data"), P("data")),
-            out_specs=(P(), P("data")), check_vma=False))
+            out_specs=(P(), P("data"))))
         w = jnp.zeros(8)
         err = jnp.zeros((4, 8))   # per-rank EF buffers
         for _ in range(300):

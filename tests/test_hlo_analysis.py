@@ -54,8 +54,9 @@ def test_elementwise_flops_counted():
 def test_collectives_counted_with_trips(tmp_path):
     """psum inside a scanned body over a 1-device mesh still appears in
     HLO as all-reduce; the analyzer multiplies by the trip count."""
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("d",))
 
     def f(xs):
         def body(c, x):
@@ -63,10 +64,9 @@ def test_collectives_counted_with_trips(tmp_path):
         out, _ = jax.lax.scan(body, jnp.zeros(xs.shape[1:]), xs)
         return out
 
-    sm = jax.shard_map(f, mesh=mesh,
-                       in_specs=jax.sharding.PartitionSpec(),
-                       out_specs=jax.sharding.PartitionSpec(),
-                       check_vma=False)
+    sm = compat.shard_map(f, mesh=mesh,
+                          in_specs=jax.sharding.PartitionSpec(),
+                          out_specs=jax.sharding.PartitionSpec())
     c = jax.jit(sm).lower(jnp.zeros((6, 8))).compile()
     t = analyze(c.as_text())
     total = sum(v["count"] for v in t.collectives.values())
