@@ -1,0 +1,141 @@
+"""MD step benchmark: refit-vs-rebuild engine against the naive baseline.
+
+Runs the same trajectory twice from identical initial conditions:
+
+  - "refit":   `Simulation(rebuild="auto")` — device tree refit between
+    host rebuilds (every K steps / on drift trigger), capacity-padded
+    shape-stable replans, fully device-resident inner step;
+  - "rebuild": `Simulation(rebuild="always")` — a host tree build +
+    re-pad every step, the behaviour of the pre-dynamics example loop.
+
+Emits BENCH_md_step.json with ms/step for both modes, refit/rebuild/
+retrace counters, energy drift, and the relative trajectory deviation
+between the two modes (both are MAC-accurate force approximations of the
+same system, so they agree to treecode tolerance over the run).
+
+    PYTHONPATH=src python benchmarks/md_step.py \
+        [--n 1500] [--steps 200] [--refit-interval 25] [--check]
+
+`--check` asserts the smoke thresholds (used by CI): >= 1 refit without
+a rebuild, energy drift below --drift-tol, trajectory deviation below
+--traj-tol, retraces <= 2 after the first step, rebuilds <= steps/K, and
+refit ms/step < rebuild ms/step.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
+from repro.dynamics import Simulation  # noqa: E402
+
+
+def build_sim(x, q, args, rebuild):
+    solver = TreecodeSolver(TreecodeConfig(
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size))
+    return Simulation(solver.plan(x), q, dt=args.dt,
+                      integrator=args.integrator,
+                      refit_interval=args.refit_interval, rebuild=rebuild)
+
+
+def run_mode(x, q, args, rebuild):
+    sim = build_sim(x, q, args, rebuild)
+    sim.step()                       # compile + first step (excluded)
+    t0 = time.time()
+    sim.run(args.steps - 1, record_every=max(1, args.steps // 20))
+    steady = time.time() - t0
+    s = sim.stats()
+    return sim, dict(
+        mode=rebuild,
+        ms_per_step=steady / max(args.steps - 1, 1) * 1e3,
+        steady_seconds=steady,
+        steps=s["steps"],
+        refits=s["refits"],
+        rebuilds=s["rebuilds"],
+        rebuilds_drift=s["rebuilds_drift"],
+        rebuilds_interval=s["rebuilds_interval"],
+        retraces=s["retraces"],
+        energy_drift=sim.log.drift(),
+        momentum_drift=sim.log.momentum_drift(),
+        mac_slack=s["mac_slack"],
+        last_drift=s["last_drift"],
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1500)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dt", type=float, default=2e-4)
+    ap.add_argument("--theta", type=float, default=0.8)
+    ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--leaf-size", type=int, default=64)
+    ap.add_argument("--integrator", default="velocity_verlet")
+    ap.add_argument("--refit-interval", type=int, default=25)
+    ap.add_argument("--out", default="BENCH_md_step.json")
+    ap.add_argument("--check", action="store_true",
+                    help="assert smoke thresholds (CI)")
+    ap.add_argument("--drift-tol", type=float, default=1e-3)
+    ap.add_argument("--traj-tol", type=float, default=1e-2)
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
+    q = (rng.uniform(-1, 1, args.n) * 0.05).astype(np.float32)
+
+    sim_r, refit = run_mode(x, q, args, "auto")
+    sim_b, rebuild = run_mode(x, q, args, "always")
+
+    xr, xb = np.asarray(sim_r.state.x), np.asarray(sim_b.state.x)
+    traj_dev = float(np.max(np.linalg.norm(xr - xb, axis=1))
+                     / max(np.max(np.linalg.norm(xb, axis=1)), 1e-30))
+    speedup = rebuild["ms_per_step"] / max(refit["ms_per_step"], 1e-30)
+
+    result = dict(
+        bench="md_step",
+        n=args.n, steps=args.steps, dt=args.dt,
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        integrator=args.integrator, refit_interval=args.refit_interval,
+        refit=refit, rebuild=rebuild,
+        speedup=speedup, trajectory_deviation=traj_dev,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"refit:   {refit['ms_per_step']:8.1f} ms/step  "
+          f"rebuilds {refit['rebuilds']}  refits {refit['refits']}  "
+          f"retraces {refit['retraces']}  "
+          f"drift {refit['energy_drift']:.2e}")
+    print(f"rebuild: {rebuild['ms_per_step']:8.1f} ms/step  "
+          f"rebuilds {rebuild['rebuilds']}")
+    print(f"speedup {speedup:.2f}x  trajectory deviation {traj_dev:.2e}")
+    print(f"wrote {args.out}")
+
+    if args.check:
+        k = args.refit_interval
+        checks = {
+            "at least one refit without rebuild": refit["refits"] >= 1,
+            f"rebuilds <= steps/K = {args.steps // k}":
+                refit["rebuilds"] <= max(args.steps // k, 1),
+            "retraces <= 2 after first step": refit["retraces"] <= 2,
+            f"energy drift < {args.drift_tol}":
+                refit["energy_drift"] < args.drift_tol,
+            f"trajectory deviation < {args.traj_tol}":
+                traj_dev < args.traj_tol,
+            "refit faster than rebuild-every-step": speedup > 1.0,
+        }
+        failed = [name for name, ok in checks.items() if not ok]
+        for name, ok in checks.items():
+            print(f"  [{'ok' if ok else 'FAIL'}] {name}")
+        if failed:
+            raise SystemExit(f"md_step checks failed: {failed}")
+        print("all md_step checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,26 +1,31 @@
-"""End-to-end driver: N-body dynamics with treecode forces.
+"""End-to-end driver: N-body dynamics on the device-resident MD engine.
 
-Velocity-Verlet integration of a softened Coulomb system using the
-first-class force entry point: `plan.potential_and_forces(q)` returns the
-potentials and F_i = -q_i grad phi(x_i), where the gradient is the exact
-derivative of the *treecode-approximated* potential (a custom VJP backed
-by three forward-mode JVPs through the jitted pipeline — no finite
-differences, no extra kernels). The tree is rebuilt every step via
-`plan.replan` as particles move, exactly like production treecode MD.
+The `repro.dynamics.Simulation` engine replaces the rebuild-every-step
+loop this example used to run by hand:
+
+  - the jitted inner step fuses integrator half-kicks, the device tree
+    refit, and the treecode force evaluation (a custom VJP through the
+    jitted pipeline) — forces never visit the host between half-kicks,
+    and there is no per-step `np.asarray(f)` round-trip;
+  - the host tree is rebuilt only every `--refit-interval` steps (or
+    earlier if particle drift exhausts the MAC slack budget), and each
+    rebuild is re-padded into fixed buffer capacities so the compiled
+    step executable is reused instead of retraced;
+  - `--rebuild always` recovers the old naive behaviour for comparison.
 
     PYTHONPATH=src python examples/md_nbody.py [--n 1500] [--steps 200]
+        [--integrator velocity_verlet|leapfrog|langevin]
+        [--refit-interval 25] [--rebuild auto|always|never]
+        [--checkpoint DIR]
 """
 import argparse
 import time
 
 import numpy as np
-import jax.numpy as jnp
 
+from repro.checkpoint.store import Checkpointer
 from repro.core.api import TreecodeConfig, TreecodeSolver
-
-
-def potential_energy(phi, charges):
-    return 0.5 * float(jnp.sum(jnp.asarray(charges) * phi))
+from repro.dynamics import Simulation
 
 
 def main():
@@ -28,35 +33,66 @@ def main():
     ap.add_argument("--n", type=int, default=1500)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--dt", type=float, default=2e-4)
+    ap.add_argument("--theta", type=float, default=0.8)
+    ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--leaf-size", type=int, default=64)
+    ap.add_argument("--integrator", default="velocity_verlet")
+    ap.add_argument("--temperature", type=float, default=0.05,
+                    help="langevin target temperature")
+    ap.add_argument("--friction", type=float, default=1.0,
+                    help="langevin friction")
+    ap.add_argument("--refit-interval", type=int, default=25)
+    ap.add_argument("--rebuild", default="auto",
+                    choices=("auto", "always", "never"))
+    ap.add_argument("--checkpoint", default=None,
+                    help="directory for trajectory checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     x = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
     q = (rng.uniform(-1, 1, args.n) * 0.05).astype(np.float32)
-    v = np.zeros_like(x)
-    mass = 1.0
 
     solver = TreecodeSolver(TreecodeConfig(
-        theta=0.8, degree=6, leaf_size=128, precompute="hierarchical"))
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size))
+    plan = solver.plan(x)
 
+    params = {}
+    if args.integrator == "langevin":
+        params = dict(friction=args.friction, temperature=args.temperature)
+    ckpt = Checkpointer(args.checkpoint) if args.checkpoint else None
+    sim = Simulation(plan, q, dt=args.dt, integrator=args.integrator,
+                     integrator_params=params,
+                     refit_interval=args.refit_interval,
+                     rebuild=args.rebuild,
+                     checkpointer=ckpt,
+                     checkpoint_every=args.checkpoint_every)
+
+    record_every = max(1, args.steps // 10)
     t0 = time.time()
-    plan = solver.plan(x, nranks=1)
-    phi, f = plan.potential_and_forces(q)
-    f = np.asarray(f)
-    for step in range(args.steps):
-        v += 0.5 * args.dt * f / mass
-        x += args.dt * v
-        plan = plan.replan(x)                  # rebuild tree (moving pts)
-        phi, f = plan.potential_and_forces(q)
-        f = np.asarray(f)
-        v += 0.5 * args.dt * f / mass
-        if step % max(1, args.steps // 10) == 0:
-            pe = potential_energy(phi, q)
-            ke = 0.5 * mass * float((v * v).sum())
-            print(f"step {step:4d}  KE {ke:10.6f}  PE {pe:10.6f}  "
-                  f"E {ke + pe:10.6f}", flush=True)
-    print(f"{args.steps} MD steps in {time.time()-t0:.1f}s "
-          f"({(time.time()-t0)/args.steps*1e3:.0f} ms/step)")
+
+    def report(s):
+        if s.steps % record_every:
+            return
+        d = s.log.last()
+        print(f"step {s.steps:4d}  KE {d['kinetic']:10.6f}  "
+              f"PE {d['potential']:10.6f}  E {d['energy']:10.6f}  "
+              f"T {d['temperature']:8.5f}", flush=True)
+
+    sim.run(args.steps, record_every=record_every, callback=report)
+    elapsed = time.time() - t0
+
+    s = sim.stats()
+    print(f"\n{args.steps} MD steps in {elapsed:.1f}s "
+          f"({elapsed / args.steps * 1e3:.0f} ms/step)")
+    print(f"refits {s['refits']}  rebuilds {s['rebuilds']} "
+          f"(drift {s['rebuilds_drift']}, interval {s['rebuilds_interval']})"
+          f"  retraces {s['retraces']}")
+    print(f"energy drift {sim.log.drift():.2e}  "
+          f"momentum drift {sim.log.momentum_drift():.2e}")
+    if ckpt is not None:
+        ckpt.wait()
+        print(f"checkpoints under {args.checkpoint}")
 
 
 if __name__ == "__main__":

@@ -53,8 +53,12 @@ def _write(ckpt_dir: str, step: int, host_items: dict, meta: dict,
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "meta": meta, "leaves": {}}
-    for key, arr in host_items.items():
-        fname = f"{abs(hash(key)) & 0xFFFFFFFF:08x}.npy"
+    # Leaf files are numbered, not hash-named: `hash(str)` is salted per
+    # process (PYTHONHASHSEED) and 32-bit-truncated hashes can collide,
+    # silently aliasing two leaves. Restore resolves names through the
+    # manifest, so old hash-named checkpoints keep loading.
+    for i, (key, arr) in enumerate(host_items.items()):
+        fname = f"{i:05d}.npy"
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"][key] = {
             "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
@@ -128,3 +132,15 @@ class Checkpointer:
                         else jax.numpy.asarray(arr))
         leaves = [out[k] for k in items.keys()]
         return jax.tree.unflatten(treedef, leaves), step, manifest["meta"]
+
+    def maybe_restore(self, like: Any, step: Optional[int] = None,
+                      shardings: Any = None):
+        """`restore`, but None instead of raising when no checkpoint
+        exists — the resume-or-start idiom of long-running MD drivers:
+
+            got = ckpt.maybe_restore(sim.state._asdict())
+            if got is not None: ...
+        """
+        if (step if step is not None else latest_step(self.dir)) is None:
+            return None
+        return self.restore(like, step=step, shardings=shardings)

@@ -143,8 +143,11 @@ class Plan(Protocol):
     def stats(self) -> dict:
         """Geometry / cost counters (strategy, sizes, padding waste...)."""
 
-    def replan(self, targets, sources=None) -> "Plan":
-        """Rebuild geometry for moved particles under the same config."""
+    def replan(self, targets, sources=None, **kwargs) -> "Plan":
+        """Rebuild geometry for moved particles under the same config.
+
+        Implementations may accept keyword-only extensions (e.g. the
+        single-device `capacities=` for shape-stable MD replans)."""
 
 
 def _resolve_dtype(config: TreecodeConfig, arr: np.ndarray) -> np.dtype:
@@ -218,8 +221,20 @@ class SingleDevicePlan:
         return _eval.potential_and_forces(
             self.inner.arrays, q, w, **self.config.exec_opts(self.kernel))
 
+    @property
+    def mac_slack(self) -> float:
+        """Min over approx pairs of theta*R - (r_B + r_C): the drift budget
+        within which a topology-preserving refit keeps the MAC valid."""
+        return self.inner.mac_slack
+
+    @property
+    def capacities(self):
+        """`repro.core.eval.Capacities` when capacity-padded, else None."""
+        return self.inner.capacities
+
     def stats(self) -> dict:
         tree = self.inner.tree
+        caps = self.inner.capacities
         return dict(
             strategy="single_device",
             nranks=1,
@@ -231,15 +246,31 @@ class SingleDevicePlan:
             num_batches=self.inner.batches.num_batches,
             padding_waste=self.inner.padding_waste,
             dtype=str(self.dtype),
+            mac_slack=self.inner.mac_slack,
+            capacity_padded=caps is not None,
+            **({"capacities": dataclasses.asdict(caps)} if caps else {}),
         )
 
-    def replan(self, targets, sources=None) -> "SingleDevicePlan":
+    def replan(self, targets, sources=None, *,
+               capacities="keep") -> "SingleDevicePlan":
+        """Rebuild geometry for moved particles under the same config.
+
+        `capacities="keep"` (default) re-pads into this plan's own
+        capacity budget when it has one (growing it geometrically if the
+        new geometry no longer fits), so jitted executors compiled against
+        this plan are reused by the replanned one. Pass `capacities=None`
+        to drop capacity padding, or an explicit
+        `repro.core.eval.Capacities`.
+        """
+        if capacities == "keep":
+            capacities = self.inner.capacities
         return _plan_single(self.config, self.kernel, targets,
-                            targets if sources is None else sources)
+                            targets if sources is None else sources,
+                            capacities=capacities)
 
 
 def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
-                 sources) -> SingleDevicePlan:
+                 sources, capacities=None) -> SingleDevicePlan:
     targets = np.asarray(targets)
     sources = np.asarray(sources)
     dtype = _resolve_dtype(config, targets)
@@ -249,6 +280,12 @@ def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
         leaf_size=config.leaf_size, batch_size=config.resolved_batch_size())
     if config.precompute == "hierarchical":
         inner = _eval.add_hierarchical_tables(inner)
+    if capacities is not None:
+        if capacities == "auto":
+            capacities = _eval.Capacities.for_plan(inner)
+        else:
+            capacities = capacities.grown_to_fit(inner)
+        inner = _eval.pad_plan(inner, capacities)
     return SingleDevicePlan(config, kernel, inner, dtype)
 
 
@@ -264,7 +301,7 @@ class TreecodeSolver:
         return self._kernel
 
     def plan(self, targets, sources=None, *, mesh=None,
-             nranks: Optional[int] = None) -> Plan:
+             nranks: Optional[int] = None, capacities=None) -> Plan:
         """Build an execution plan for this geometry.
 
         sources defaults to targets (the N-body setting). Strategy choice:
@@ -273,6 +310,13 @@ class TreecodeSolver:
         the sources, and falls back to single-device for disjoint
         target/source sets (the sharded path assumes the paper's
         targets == sources test setting).
+
+        `capacities` (single-device only): "auto" or a
+        `repro.core.eval.Capacities` pads the plan into a fixed buffer
+        budget so later `replan` calls keep identical array shapes and
+        reuse compiled executables (the MD setting; see
+        `repro.dynamics`). Sharded plans ignore it (their cross-rank
+        padding is already shape-maximal per build).
         """
         same = sources is None or sources is targets
         if mesh is not None and nranks is not None:
@@ -299,7 +343,8 @@ class TreecodeSolver:
 
         if p == 1:
             return _plan_single(self.config, self._kernel, targets,
-                                targets if sources is None else sources)
+                                targets if sources is None else sources,
+                                capacities=capacities)
 
         if not same:
             raise ValueError(

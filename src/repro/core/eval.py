@@ -51,6 +51,13 @@ class Plan:
     padding_waste: float         # sentinel-slot fraction of kernel work
     num_targets: int
     num_sources: int
+    # Min MAC slack of the approx lists (see InteractionLists.mac_slack):
+    # the drift budget for topology-preserving refits.
+    mac_slack: float = float("inf")
+    # When capacity-padded (see `Capacities`), the capacities the arrays
+    # were padded to, and the scratch node row absorbing sentinel writes.
+    capacities: "Capacities | None" = None
+    scratch_node: int = -1
 
 
 def prepare_plan(
@@ -138,6 +145,7 @@ def prepare_plan(
         arrays=arrays, meta=meta, tree=tree, batches=batches,
         padding_waste=float(lists.padding_waste),
         num_targets=targets.shape[0], num_sources=sources.shape[0],
+        mac_slack=float(lists.mac_slack),
     )
 
 
@@ -402,6 +410,224 @@ def potential_and_forces(arrays, charges, weights, *, degree, kernel,
         arrays["tgt_batched"])
     forces = -wg.reshape(-1, 3)[arrays["gather_index"]]
     return phi, forces
+
+
+# ---------------------------------------------------------------------------
+# Capacity padding: shape-stable replans for moving particles (MD)
+# ---------------------------------------------------------------------------
+#
+# `prepare_plan` pads every ragged structure to its immediate need, so a
+# replan over moved particles produces slightly different shapes and
+# retraces the jitted executors. `Capacities` fixes a budget per padded
+# dimension (initial need x headroom, grown geometrically when exceeded)
+# and `pad_plan` re-pads any plan into that budget: identical shapes =>
+# identical trace => the compiled executable is reused across rebuilds.
+#
+# Padding conventions (every sentinel contributes exactly zero):
+#   - node rows: lo = 0, hi = 1 (non-degenerate box), with one reserved
+#     SCRATCH row (id = num_nodes - 1) absorbing sentinel scatter writes;
+#   - gather tables (leaf_gather, bucket_gather): -1 (masked);
+#   - interaction lists (approx_idx, direct_idx): -1 (masked);
+#   - bucket_nodes / leaf_node_ids / upward_pairs: the scratch row;
+#   - target slab: zero rows, never referenced by gather_index.
+
+
+@dataclasses.dataclass(frozen=True)
+class Capacities:
+    """Fixed padded-dimension budget for shape-stable replans."""
+
+    num_batches: int
+    batch_width: int
+    num_leaves: int
+    leaf_width: int
+    num_nodes: int                    # includes the +1 scratch row
+    approx_width: int
+    direct_width: int
+    depth: int                        # modified-charge level count
+    bucket_rows: Tuple[int, ...]      # len == depth
+    bucket_widths: Tuple[int, ...]    # len == depth, powers of two
+    upward_rows: Tuple[int, ...] = () # len == depth - 1 (hierarchical)
+    headroom: float = 1.15
+    growth: float = 1.5
+
+    @property
+    def scratch_node(self) -> int:
+        return self.num_nodes - 1
+
+    @classmethod
+    def for_plan(cls, plan: "Plan", headroom: float = 1.15,
+                 growth: float = 1.5) -> "Capacities":
+        """Initial budget: the plan's own shapes inflated by `headroom`."""
+        need = _plan_dims(plan)
+
+        def h(x):
+            return _round_up(int(np.ceil(x * headroom)))
+
+        return cls(
+            num_batches=h(need["num_batches"]),
+            batch_width=h(need["batch_width"]),
+            num_leaves=h(need["num_leaves"]),
+            leaf_width=h(need["leaf_width"]),
+            num_nodes=h(need["num_nodes"]) + 1,
+            approx_width=h(need["approx_width"]),
+            direct_width=h(need["direct_width"]),
+            depth=need["depth"],
+            bucket_rows=tuple(h(r) for r in need["bucket_rows"]),
+            bucket_widths=tuple(_round_pow2(w) for w in need["bucket_widths"]),
+            upward_rows=tuple(h(r) for r in need["upward_rows"]),
+            headroom=headroom, growth=growth,
+        )
+
+    def grown_to_fit(self, plan: "Plan") -> "Capacities":
+        """Smallest capacities >= self that fit `plan`, growing any
+        insufficient dimension geometrically (never shrinks)."""
+        need = _plan_dims(plan)
+
+        def g(cap, n, rounder=_round_up):
+            if n <= cap:
+                return cap
+            return rounder(max(n, int(np.ceil(cap * self.growth))))
+
+        def gt(caps, needs, rounder=_round_up):
+            caps = tuple(caps) + tuple(
+                rounder(int(np.ceil(n * self.headroom)))
+                for n in needs[len(caps):])
+            return tuple(g(c, n, rounder) for c, n
+                         in zip(caps, tuple(needs) + (0,) * len(caps)))
+
+        return dataclasses.replace(
+            self,
+            num_batches=g(self.num_batches, need["num_batches"]),
+            batch_width=g(self.batch_width, need["batch_width"]),
+            num_leaves=g(self.num_leaves, need["num_leaves"]),
+            leaf_width=g(self.leaf_width, need["leaf_width"]),
+            num_nodes=g(self.num_nodes, need["num_nodes"] + 1),
+            approx_width=g(self.approx_width, need["approx_width"]),
+            direct_width=g(self.direct_width, need["direct_width"]),
+            depth=max(self.depth, need["depth"]),
+            bucket_rows=gt(self.bucket_rows, need["bucket_rows"]),
+            bucket_widths=gt(self.bucket_widths, need["bucket_widths"],
+                             _round_pow2),
+            upward_rows=gt(self.upward_rows, need["upward_rows"]),
+        )
+
+    def fits(self, plan: "Plan") -> bool:
+        return self.grown_to_fit(plan) == self
+
+
+def _plan_dims(plan: Plan) -> dict:
+    a = plan.arrays
+    bg = a["bucket_gather"]
+    up = a.get("upward_pairs", ())
+    return dict(
+        num_batches=a["tgt_batched"].shape[0],
+        batch_width=a["tgt_batched"].shape[1],
+        num_leaves=a["leaf_gather"].shape[0],
+        leaf_width=a["leaf_gather"].shape[1],
+        num_nodes=a["node_lo"].shape[0],
+        approx_width=a["approx_idx"].shape[1],
+        direct_width=a["direct_idx"].shape[1],
+        depth=len(bg),
+        bucket_rows=tuple(g.shape[0] for g in bg),
+        bucket_widths=tuple(g.shape[1] for g in bg),
+        upward_rows=tuple(p.shape[0] for p in up),
+    )
+
+
+def _pad2(arr: np.ndarray, shape: Tuple[int, ...], value) -> np.ndarray:
+    pads = [(0, s - d) for s, d in zip(shape, arr.shape)]
+    if any(p[1] < 0 for p in pads):
+        raise ValueError(f"cannot pad {arr.shape} into {shape}")
+    return np.pad(arr, pads + [(0, 0)] * (arr.ndim - len(shape)),
+                  constant_values=value)
+
+
+def pad_plan(plan: Plan, caps: Capacities) -> Plan:
+    """Re-pad a plan's device arrays into the fixed `caps` budget.
+
+    The returned plan computes identical potentials (every padded slot is
+    masked or scatters into the scratch node) but its array shapes depend
+    only on `caps`, so jitted executors compiled for one capacity-padded
+    plan are reused by every later one.
+    """
+    if not caps.fits(plan):
+        raise ValueError(
+            "capacities do not fit this plan; call caps.grown_to_fit(plan) "
+            "first (the growth is a deliberate, counted retrace)")
+    a = {k: np.asarray(v) for k, v in plan.arrays.items()
+         if not isinstance(v, tuple)}
+    scratch = caps.scratch_node
+
+    nb_old = a["tgt_batched"].shape[1]
+    gi = a["gather_index"].astype(np.int64)
+    if nb_old != caps.batch_width:
+        gi = (gi // nb_old) * caps.batch_width + gi % nb_old
+
+    out = dict(
+        src_sorted=a["src_sorted"],
+        src_perm=a["src_perm"],
+        tgt_batched=_pad2(a["tgt_batched"],
+                          (caps.num_batches, caps.batch_width), 0),
+        gather_index=gi.astype(np.int32),
+        leaf_gather=_pad2(a["leaf_gather"],
+                          (caps.num_leaves, caps.leaf_width), -1),
+        node_lo=_pad2(a["node_lo"], (caps.num_nodes,), 0),
+        node_hi=_pad2(a["node_hi"], (caps.num_nodes,), 1),
+        approx_idx=_pad2(a["approx_idx"],
+                         (caps.num_batches, caps.approx_width), -1),
+        direct_idx=_pad2(a["direct_idx"],
+                         (caps.num_batches, caps.direct_width), -1),
+        parent_of=_pad2(a["parent_of"], (caps.num_nodes,), scratch),
+    )
+
+    bg_old = plan.arrays["bucket_gather"]
+    bn_old = plan.arrays["bucket_nodes"]
+    bgs, bns = [], []
+    for lvl in range(caps.depth):
+        shape = (caps.bucket_rows[lvl], caps.bucket_widths[lvl])
+        if lvl < len(bg_old):
+            g = _pad2(np.asarray(bg_old[lvl]), shape, -1)
+            n = _pad2(np.asarray(bn_old[lvl]), shape[:1], scratch)
+        else:
+            g = np.full(shape, -1, np.int32)
+            n = np.full(shape[:1], scratch, np.int32)
+        bgs.append(jnp.asarray(g, jnp.int32))
+        bns.append(jnp.asarray(n, jnp.int32))
+    out["bucket_gather"] = tuple(bgs)
+    out["bucket_nodes"] = tuple(bns)
+
+    if "upward_pairs" in plan.arrays:
+        out["leaf_node_ids"] = _pad2(
+            np.asarray(plan.arrays["leaf_node_ids"]),
+            (caps.num_leaves,), scratch)
+        up_old = plan.arrays["upward_pairs"]
+        ups = []
+        for slot in range(len(caps.upward_rows)):
+            shape = (caps.upward_rows[slot], 2)
+            if slot < len(up_old):
+                p = _pad2(np.asarray(up_old[slot]), shape, scratch)
+            else:
+                p = np.full(shape, scratch, np.int32)
+            ups.append(jnp.asarray(p, jnp.int32))
+        out["upward_pairs"] = tuple(ups)
+
+    arrays = {k: (v if isinstance(v, tuple) else jnp.asarray(v))
+              for k, v in out.items()}
+    return dataclasses.replace(plan, arrays=arrays, capacities=caps,
+                               scratch_node=scratch)
+
+
+def plan_signature(plan: Plan) -> Tuple:
+    """Hashable shape/dtype signature of a plan's device arrays — equal
+    signatures mean a jitted executor compiled for one plan is reused by
+    the other (the retrace counter in `dynamics` tracks distinct values)."""
+    def leaf_sig(v):
+        return (v.shape, str(v.dtype))
+
+    return tuple(sorted(
+        (k, tuple(leaf_sig(x) for x in v) if isinstance(v, tuple)
+         else leaf_sig(v))
+        for k, v in plan.arrays.items()))
 
 
 def add_hierarchical_tables(plan: Plan) -> Plan:

@@ -38,6 +38,14 @@ class InteractionLists:
     # Diagnostics (EXPERIMENTS.md padding-overhead reporting):
     approx_counts: np.ndarray  # (B,)
     direct_counts: np.ndarray  # (B,)
+    # Min over approx pairs of theta*R - (r_B + r_C): how much every
+    # accepted MAC inequality holds by. The dynamics refit policy (see
+    # DESIGN.md §4) keeps these lists valid while particle drift since
+    # the build satisfies 2*sqrt(3)*(1 + theta)*drift < mac_slack:
+    # each box endpoint moves at most drift per coordinate, so each
+    # half-diagonal grows and each center moves by at most sqrt(3)*drift.
+    # +inf when there are no approx interactions.
+    mac_slack: float = float("inf")
 
     @property
     def padding_waste(self) -> float:
@@ -76,6 +84,7 @@ def build_interaction_lists(
 
     approx_b, approx_v = [], []
     direct_b, direct_v = [], []
+    mac_slack = float("inf")
 
     # Frontier of candidate (batch, node) pairs, starting at the root.
     fb = np.arange(nb, dtype=np.int64)
@@ -94,6 +103,8 @@ def build_interaction_lists(
         if np.any(mac):
             approx_b.append(fb[mac])
             approx_v.append(fn[mac])
+            slack = theta * R[mac] - (rb[mac] + rc[mac])
+            mac_slack = min(mac_slack, float(slack.min()))
 
         # MAC failed on distance: leaves go direct, internals recurse.
         dist_fail = ~mac & ~dist_ok
@@ -133,4 +144,5 @@ def build_interaction_lists(
     return InteractionLists(
         approx=approx, direct=direct,
         approx_counts=a_counts, direct_counts=d_counts,
+        mac_slack=mac_slack,
     )

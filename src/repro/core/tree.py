@@ -156,6 +156,31 @@ def build_tree(points: np.ndarray, leaf_size: int) -> Tree:
     )
 
 
+def refit_tree(tree: Tree, points: np.ndarray) -> Tree:
+    """Recompute box geometry for moved particles under a FIXED topology.
+
+    Keeps the permutation, particle ranges, parent/child structure and
+    leaf set of `tree`; only lo/hi/center/radius are recomputed as the
+    minimal bounding box of each node's (moved) particles — exactly what
+    `build_tree` would produce for these splits. This is the host oracle
+    for the device-side refit in `repro.dynamics.refit`: every particle
+    stays inside its refitted cluster box, so barycentric interpolation
+    remains well-posed; only MAC separation can degrade, which the
+    drift-based trigger (`InteractionLists.mac_slack`) guards.
+    """
+    pts = np.asarray(points)[tree.perm]
+    lo = np.empty_like(tree.lo)
+    hi = np.empty_like(tree.hi)
+    for node in range(tree.num_nodes):
+        s, c = int(tree.start[node]), int(tree.count[node])
+        seg = pts[s:s + c]
+        lo[node] = seg.min(axis=0)
+        hi[node] = seg.max(axis=0)
+    return dataclasses.replace(
+        tree, lo=lo, hi=hi, center=0.5 * (lo + hi),
+        radius=0.5 * np.linalg.norm(hi - lo, axis=1))
+
+
 @dataclasses.dataclass
 class Batches:
     """Localized target batches (Sec. 2.4). Targets permuted batch-contiguous."""

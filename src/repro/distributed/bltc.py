@@ -48,11 +48,14 @@ def _pad_to(a: np.ndarray, shape: Tuple[int, ...], value=0) -> np.ndarray:
 def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
     """Per-rank remote interaction lists by traversing other ranks' trees
     with the same uniform MAC: approx hits -> gathered-cluster indices
-    (s * m_pad + node), direct hits -> halo leaves per (src, dst) pair."""
+    (s * m_pad + node), direct hits -> halo leaves per (src, dst) pair.
+    Also returns the min MAC slack (theta*R - (r_B + r_C)) over remote
+    approx accepts — the cross-rank part of the refit drift budget."""
     p = rcb.nranks
     npts = (cfg.degree + 1) ** 3
     approx = [[] for _ in range(p)]            # (batch, flat cluster idx)
     halo_need: Dict[Tuple[int, int], set] = {}  # (src s, dst r) -> leaf slots
+    mac_slack = float("inf")
 
     for r in range(p):
         batches = plans[r].batches
@@ -70,6 +73,10 @@ def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
                     ok = (br + tree.radius[node]) < cfg.theta * dist
                     if ok and npts < tree.count[node]:
                         approx[r].append((b, s * m_pad + node))
+                        mac_slack = min(
+                            mac_slack,
+                            float(cfg.theta * dist
+                                  - (br + tree.radius[node])))
                     elif not ok and not tree.is_leaf[node]:
                         stack.extend(
                             int(k) for k in tree.children[node] if k >= 0)
@@ -81,7 +88,7 @@ def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
                                 int(tree.start[node]),
                                 int(tree.count[node])).tolist()
                         halo_need.setdefault((s, r), set()).update(slots)
-    return approx, halo_need
+    return approx, halo_need, mac_slack
 
 
 @dataclasses.dataclass
@@ -100,6 +107,9 @@ class ShardedPlan:
     num_points: int
     padding_waste: float                # mean over per-rank local plans
     dtype: np.dtype
+    # Min MAC slack over local AND remote approx lists: the drift budget
+    # within which a topology-preserving refit keeps every list valid.
+    mac_slack: float = float("inf")
     mesh: Optional[object] = None
     axis: str = "data"
     _fn: Optional[object] = dataclasses.field(default=None, repr=False)
@@ -157,7 +167,9 @@ class ShardedPlan:
                     c_pads[lvl] = max(c_pads[lvl], bg[lvl].shape[0])
                     g_pads[lvl] = max(g_pads[lvl], bg[lvl].shape[1])
 
-        remote_approx, halo_need = _remote_lists(cfg, plans, rcb, m_pad)
+        remote_approx, halo_need, remote_slack = _remote_lists(
+            cfg, plans, rcb, m_pad)
+        mac_slack = min([remote_slack] + [pl.mac_slack for pl in plans])
 
         # ---- halo schedule: one collective_permute round per rank offset
         offsets = sorted({r - s for (s, r) in halo_need})
@@ -299,7 +311,7 @@ class ShardedPlan:
                    nranks=nranks, rcb=rcb, scratch_node=m_nodes,
                    per_pad=per_pad, num_points=points.shape[0],
                    padding_waste=waste, dtype=np.dtype(dtype),
-                   mesh=mesh, axis=axis)
+                   mesh=mesh, axis=axis, mac_slack=mac_slack)
 
     # ------------------------------------------------------------------
     # device execution
@@ -452,6 +464,7 @@ class ShardedPlan:
             halo_rounds=len(self.perm_rounds),
             padding_waste=self.padding_waste,
             dtype=str(self.dtype),
+            mac_slack=self.mac_slack,
         )
 
     def replan(self, targets, sources=None) -> "ShardedPlan":

@@ -1,0 +1,40 @@
+"""Device-resident MD dynamics over treecode plans.
+
+The subsystem the treecode exists to serve: repeated particle-interaction
+sums inside time-stepping loops. Layer cake:
+
+    Simulation (engine.py)     refit-vs-rebuild policy, capacity-stable
+        |                      replans, counters, checkpointing
+    Integrator (integrators.py)  velocity-Verlet / leapfrog / Langevin,
+        |                        split around the force evaluation
+    PlanAdapter (refit.py)     device tree refit + input-order forces
+        |                      over SingleDevicePlan and ShardedPlan
+    Plan protocol (core.api)   execute / potential_and_forces / replan
+
+Quick start::
+
+    from repro.core.api import TreecodeConfig, TreecodeSolver
+    from repro.dynamics import Simulation
+
+    plan = TreecodeSolver(TreecodeConfig(theta=0.8, degree=6)).plan(x0)
+    sim = Simulation(plan, charges, dt=2e-4, refit_interval=25)
+    sim.run(200, record_every=10)
+    sim.stats()       # refits / rebuilds / retraces / drift budget
+    sim.log.drift()   # relative energy drift
+"""
+from repro.dynamics.diagnostics import EnergyLog, summarize
+from repro.dynamics.engine import Simulation
+from repro.dynamics.integrators import (Integrator, MDState, get_integrator,
+                                        initial_state, langevin, leapfrog,
+                                        registered_integrators,
+                                        velocity_verlet)
+from repro.dynamics.refit import (PlanAdapter, make_adapter, max_drift,
+                                  refit_single_arrays, refit_sharded_arrays)
+
+__all__ = [
+    "EnergyLog", "Integrator", "MDState", "PlanAdapter", "Simulation",
+    "get_integrator", "initial_state", "langevin", "leapfrog",
+    "make_adapter", "max_drift", "refit_single_arrays",
+    "refit_sharded_arrays", "registered_integrators", "summarize",
+    "velocity_verlet",
+]

@@ -1,0 +1,99 @@
+"""Physical diagnostics of an MD trajectory: energy, momentum, temperature.
+
+All scalar computations are one jitted reduction over device state — the
+host only ever sees the handful of floats it asked for, at the cadence it
+asked for them (``Simulation.run(record_every=...)``), so diagnostics do
+not break device-residency of the inner step.
+
+Conventions: k_B = 1; the potential energy of a pairwise-interacting
+system is U = 1/2 sum_i q_i phi_i (each pair counted once); temperature
+is the equipartition estimate T = 2 KE / (3 N).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def _summary(x, v, f, phi, q, mass):
+    ke = 0.5 * jnp.sum(mass * jnp.sum(v * v, axis=-1))
+    pe = 0.5 * jnp.sum(q * phi)
+    mom = jnp.sum(mass * v, axis=0)
+    n = v.shape[0]
+    return dict(
+        kinetic=ke,
+        potential=pe,
+        energy=ke + pe,
+        momentum=mom,
+        momentum_norm=jnp.sqrt(jnp.sum(mom * mom)),
+        temperature=2.0 * ke / (3.0 * n),
+        max_speed=jnp.sqrt(jnp.max(jnp.sum(v * v, axis=-1))),
+        max_force=jnp.sqrt(jnp.max(jnp.sum(f * f, axis=-1))),
+    )
+
+
+def summarize(state, charges, masses) -> Dict[str, float]:
+    """One device reduction -> host floats for a single state."""
+    mass = jnp.asarray(masses, state.v.dtype)
+    if mass.ndim == 1:
+        mass = mass[:, None]
+    out = _summary(state.x, state.v, state.f, state.phi,
+                   jnp.asarray(charges, state.phi.dtype), mass)
+    host = {}
+    for k, val in out.items():
+        a = jax.device_get(val)
+        host[k] = a.tolist() if getattr(a, "ndim", 0) else float(a)
+    return host
+
+
+class EnergyLog:
+    """Accumulates per-step summaries; reports relative energy drift.
+
+    Drift is |E(t) - E(0)| / max(|E(0)|, eps) — the standard figure of
+    merit for symplectic integrators (should stay bounded and small for
+    velocity-Verlet at stable dt; grows linearly when dt is too large or
+    forces are inconsistent with the potential).
+    """
+
+    def __init__(self):
+        self.records: List[Dict[str, float]] = []
+
+    def record(self, step: int, summary: Dict[str, float]) -> None:
+        self.records.append(dict(summary, step=step))
+
+    @property
+    def steps(self) -> List[int]:
+        return [int(r["step"]) for r in self.records]
+
+    def drift(self) -> float:
+        """Max relative total-energy drift over the logged window."""
+        if len(self.records) < 2:
+            return 0.0
+        e0 = self.records[0]["energy"]
+        scale = max(abs(e0), 1e-30)
+        return max(abs(r["energy"] - e0) for r in self.records) / scale
+
+    def momentum_drift(self) -> float:
+        """Max absolute growth of |total momentum| over the logged window
+        (unscaled — compare only across runs of the same system)."""
+        if len(self.records) < 2:
+            return 0.0
+        p0 = self.records[0]["momentum_norm"]
+        return max(abs(r["momentum_norm"] - p0) for r in self.records)
+
+    def last(self) -> Dict[str, float]:
+        return self.records[-1] if self.records else {}
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kinetic_energy(v, mass):
+    return 0.5 * jnp.sum(mass * jnp.sum(v * v, axis=-1))
+
+
+@jax.jit
+def potential_energy(phi, q):
+    return 0.5 * jnp.sum(q * phi)

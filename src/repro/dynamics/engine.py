@@ -1,0 +1,351 @@
+"""Device-resident MD engine over treecode plans: refit when you can,
+rebuild when you must, never retrace if the capacities hold.
+
+One `Simulation.step()` is:
+
+    1. `advance`   (jit): integrator pre-step — positions move to the
+       force-evaluation point; returns the max particle drift since the
+       last host tree build (one scalar leaves the device per step).
+    2. host decision: REFIT while the drift fits the MAC slack budget
+       (2*sqrt(3)*(1+theta)*drift < safety*slack, see DESIGN.md §4) and the
+       max interval K has not elapsed; otherwise REBUILD the tree on the
+       host (the paper's CPU setup phase) — re-padded into the plan's
+       fixed `Capacities`, so the compiled step is almost always reused.
+    3. `finish`    (jit): device tree refit -> treecode forces (custom-VJP
+       gradients) -> integrator post-step. Forces never visit the host.
+
+    Rebuild count  <= steps/K + (drift-triggered rebuilds, rare at MD dt)
+    Retraces       == 0 unless a capacity grows (geometric, so O(log) in
+                      the worst case) or a sharded plan rebuilds.
+
+`stats()` reports refit/rebuild/retrace counters; `run(record_every=)`
+logs energy/momentum/temperature via one fused device reduction; the
+`Checkpointer` integration snapshots (x, v, f, phi, key) atomically and
+restores across processes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import Checkpointer
+from repro.dynamics import diagnostics as diag
+from repro.dynamics.integrators import (MDState, get_integrator,
+                                        initial_state)
+from repro.dynamics.refit import make_adapter, max_drift
+
+_REBUILD_POLICIES = ("auto", "always", "never")
+
+
+def _cache_size(fn) -> int:
+    try:
+        return fn._cache_size()
+    except Exception:
+        return 0
+
+
+class Simulation:
+    """Time integration of N interacting particles with treecode forces.
+
+    Args:
+      plan: a `TreecodeSolver` execution plan built over the particle
+        positions with targets == sources (`SingleDevicePlan` or
+        `ShardedPlan`). Single-device plans without capacity padding are
+        transparently re-padded (`capacities="auto"`) so replans reuse
+        compiled executables.
+      charges: (N,) source charges q_i (also the force weights).
+      dt: time step.
+      velocities: (N, 3) initial velocities (default zero).
+      masses: scalar or (N,) particle masses.
+      integrator: name ("velocity_verlet" | "leapfrog" | "langevin") or
+        an `Integrator`; `integrator_params` forwards factory kwargs
+        (e.g. friction/temperature for langevin).
+      refit_interval: K — max steps between host tree rebuilds (the
+        fallback when drift stays within budget).
+      drift_safety: fraction of the MAC slack budget to spend before a
+        drift-triggered rebuild (1.0 = the provable bound).
+      rebuild: "auto" (drift trigger + interval), "always" (every step,
+        the naive baseline), "never" (trust refit indefinitely —
+        exact-direct configs or testing).
+      checkpointer/checkpoint_every: trajectory snapshots via the
+        fault-tolerant `Checkpointer` (atomic, async, elastic).
+    """
+
+    def __init__(self, plan, charges, *, dt: float,
+                 velocities=None, masses=1.0,
+                 integrator="velocity_verlet",
+                 integrator_params: Optional[dict] = None,
+                 seed: int = 0,
+                 refit_interval: int = 25,
+                 drift_safety: float = 1.0,
+                 rebuild: str = "auto",
+                 checkpointer: Optional[Checkpointer] = None,
+                 checkpoint_every: int = 0):
+        if rebuild not in _REBUILD_POLICIES:
+            raise ValueError(f"rebuild must be one of {_REBUILD_POLICIES}")
+        if refit_interval < 1:
+            raise ValueError("refit_interval must be >= 1")
+        self.dt = float(dt)
+        self.refit_interval = int(refit_interval)
+        self.drift_safety = float(drift_safety)
+        self.rebuild_policy = rebuild
+        self.checkpointer = checkpointer
+        self.checkpoint_every = int(checkpoint_every)
+
+        self.adapter = make_adapter(plan)
+        if getattr(plan, "capacities", "n/a") is None:
+            # Single-device plan without capacity padding: re-pad now so
+            # every later rebuild is shape-stable.
+            plan = plan.replan(self.adapter.positions(), capacities="auto")
+            self.adapter = make_adapter(plan)
+        self.plan = self.adapter.plan
+        dtype = np.dtype(self.plan.dtype)
+
+        n = self.plan.num_targets
+        if self.plan.num_sources != n:
+            raise ValueError("dynamics requires targets == sources")
+        q = np.asarray(charges, dtype)
+        if q.shape != (n,):
+            raise ValueError(f"charges must be ({n},), got {q.shape}")
+        self.charges = jnp.asarray(q)
+        m = np.asarray(masses, dtype)
+        self.masses = jnp.asarray(m)
+        inv_m = jnp.asarray(1.0 / m)
+        self._inv_m = inv_m[:, None] if inv_m.ndim == 1 else inv_m
+
+        self.integrator = get_integrator(integrator,
+                                         **(integrator_params or {}))
+        self.state: MDState = initial_state(
+            self.adapter.positions(), velocities, seed=seed, dtype=dtype)
+        self._arrays = self.adapter.arrays
+        self._x_ref = self.state.x
+        self._slack = float(self.adapter.mac_slack)
+        self._theta = float(self.plan.config.theta)
+
+        # Counters (stats() surface).
+        self.steps = 0
+        self.refits = 0
+        self.rebuilds = 0
+        self.rebuilds_drift = 0
+        self.rebuilds_interval = 0
+        self.force_evals = 0
+        self.capacity_growths = 0
+        self._steps_since_rebuild = 0
+        self._last_drift = 0.0
+        self._baseline_compiles: Optional[int] = None
+
+        self._make_executables()
+        self._finish_history_compiles = 0  # compiles in retired finish fns
+
+        # Initial force evaluation (device): seeds f/phi for the first
+        # kick and for step-0 diagnostics.
+        self._arrays, self.state = self._init_forces(self._arrays,
+                                                     self.state)
+        self.adapter.sync_arrays(self._arrays)
+        self.force_evals += 1
+        self.log = diag.EnergyLog()
+
+    # ------------------------------------------------------------------
+    # jitted executables
+    # ------------------------------------------------------------------
+
+    def _make_executables(self):
+        integ, dt, inv_m = self.integrator, self.dt, self._inv_m
+
+        def advance(state, x_ref):
+            s1 = integ.pre(state, dt, inv_m)
+            return s1, max_drift(s1.x, x_ref)
+
+        self._advance = jax.jit(advance)
+        self._make_force_closures()
+
+    def _make_force_closures(self):
+        integ, dt, inv_m = self.integrator, self.dt, self._inv_m
+        adapter, q = self.adapter, self.charges
+        force = adapter.force_fn()
+
+        def finish(arrays, state):
+            arrays = adapter.refit(arrays, state.x)
+            phi, f = force(arrays, state.x, q, q)
+            return arrays, integ.post(state, phi, f, dt, inv_m)
+
+        def init_forces(arrays, state):
+            arrays = adapter.refit(arrays, state.x)
+            phi, f = force(arrays, state.x, q, q)
+            return arrays, state._replace(phi=phi, f=f)
+
+        self._finish = jax.jit(finish)
+        self._init_forces = jax.jit(init_forces)
+
+    def _remake_finish(self):
+        """Sharded rebuilds re-close over a new SPMD executable; retire
+        the force-dependent jits (their compiles keep counting toward
+        retraces — the `advance` jit is plan-independent and survives)."""
+        self._finish_history_compiles += _cache_size(self._finish)
+        self._finish_history_compiles += _cache_size(self._init_forces)
+        self._make_force_closures()
+
+    def _total_compiles(self) -> int:
+        return (_cache_size(self._advance) + _cache_size(self._finish)
+                + _cache_size(self._init_forces)
+                + self._finish_history_compiles)
+
+    @property
+    def retraces(self) -> int:
+        """Compilations beyond the ones paid by the end of step 1."""
+        if self._baseline_compiles is None:
+            return 0
+        return max(0, self._total_compiles() - self._baseline_compiles)
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+
+    def _drift_exceeds_budget(self, drift: float) -> bool:
+        # Provable MAC-validity bound (DESIGN.md §4): each box endpoint
+        # moves <= drift per coordinate, so radii grow and centers move
+        # by <= sqrt(3)*drift each; the MAC holds while
+        # 2*sqrt(3)*(1 + theta)*drift < slack.
+        if not math.isfinite(self._slack):
+            return False  # no approx interactions -> refit is exact
+        budget = self.drift_safety * self._slack
+        return 2.0 * math.sqrt(3.0) * (1.0 + self._theta) * drift >= budget
+
+    def step(self) -> MDState:
+        """One integration step (one force evaluation)."""
+        s1, drift_dev = self._advance(self.state, self._x_ref)
+        drift = float(drift_dev)
+        self._last_drift = drift
+
+        policy = self.rebuild_policy
+        by_drift = policy == "auto" and self._drift_exceeds_budget(drift)
+        by_interval = (policy == "auto"
+                       and self._steps_since_rebuild + 1
+                       >= self.refit_interval)
+        do_rebuild = (policy == "always" or by_drift or by_interval)
+
+        if do_rebuild:
+            invalidated = self.adapter.rebuild(np.asarray(s1.x))
+            if invalidated:
+                if self.adapter.recloses_on_rebuild:
+                    self._remake_finish()
+                else:
+                    self.capacity_growths += 1
+            self.plan = self.adapter.plan
+            self._arrays = self.adapter.arrays
+            self._x_ref = s1.x
+            self._slack = float(self.adapter.mac_slack)
+            self._steps_since_rebuild = 0
+            self.rebuilds += 1
+            if by_drift:
+                self.rebuilds_drift += 1
+            elif policy == "auto":
+                self.rebuilds_interval += 1
+        else:
+            self.refits += 1
+
+        self._arrays, self.state = self._finish(self._arrays, s1)
+        self.adapter.sync_arrays(self._arrays)
+        self.steps += 1
+        self._steps_since_rebuild += 1
+        self.force_evals += 1
+
+        if self._baseline_compiles is None:
+            self._baseline_compiles = self._total_compiles()
+
+        if (self.checkpointer is not None and self.checkpoint_every
+                and self.steps % self.checkpoint_every == 0):
+            self.save_checkpoint()
+        return self.state
+
+    def run(self, steps: int, *, record_every: int = 0,
+            callback=None) -> "Simulation":
+        """Advance `steps` steps; optionally log diagnostics every
+        `record_every` steps (including the starting state)."""
+        if record_every and not self.log.records:
+            self.log.record(self.steps, self.diagnostics())
+        for _ in range(steps):
+            self.step()
+            if record_every and self.steps % record_every == 0:
+                self.log.record(self.steps, self.diagnostics())
+            if callback is not None:
+                callback(self)
+        return self
+
+    # ------------------------------------------------------------------
+    # diagnostics / checkpointing
+    # ------------------------------------------------------------------
+
+    def diagnostics(self) -> dict:
+        if not self.integrator.phi_at_step_end and self.steps > 0:
+            # Position-Verlet leaves phi/f at the midpoint; refresh them
+            # at the current positions so the energy is consistent (one
+            # extra force evaluation, only at recording cadence).
+            self._arrays, self.state = self._init_forces(self._arrays,
+                                                         self.state)
+            self.adapter.sync_arrays(self._arrays)
+            self.force_evals += 1
+        return diag.summarize(self.state, self.charges, self.masses)
+
+    def stats(self) -> dict:
+        return dict(
+            steps=self.steps,
+            refits=self.refits,
+            rebuilds=self.rebuilds,
+            rebuilds_drift=self.rebuilds_drift,
+            rebuilds_interval=self.rebuilds_interval,
+            retraces=self.retraces,
+            compiles=self._total_compiles(),
+            capacity_growths=self.capacity_growths,
+            force_evals=self.force_evals,
+            refit_interval=self.refit_interval,
+            rebuild_policy=self.rebuild_policy,
+            integrator=self.integrator.name,
+            dt=self.dt,
+            mac_slack=self._slack,
+            last_drift=self._last_drift,
+            drift_budget=(self.drift_safety * self._slack
+                          / (2.0 * math.sqrt(3.0) * (1.0 + self._theta))),
+            plan=self.plan.stats(),
+        )
+
+    def save_checkpoint(self, background: bool = True) -> None:
+        if self.checkpointer is None:
+            raise ValueError("Simulation built without a checkpointer")
+        self.checkpointer.save(
+            self.steps, self.state._asdict(),
+            meta=dict(steps=self.steps, dt=self.dt,
+                      integrator=self.integrator.name),
+            background=background)
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+        """Restore (x, v, f, phi, key) and re-anchor the tree at the
+        restored positions (a host rebuild, counted as such)."""
+        if self.checkpointer is None:
+            raise ValueError("Simulation built without a checkpointer")
+        tree, step, _meta = self.checkpointer.restore(
+            self.state._asdict(), step=step)
+        self.state = MDState(**{k: jnp.asarray(v)
+                                for k, v in tree.items()})
+        invalidated = self.adapter.rebuild(np.asarray(self.state.x))
+        if invalidated:
+            if self.adapter.recloses_on_rebuild:
+                self._remake_finish()
+            else:
+                self.capacity_growths += 1
+        self.rebuilds += 1
+        self.plan = self.adapter.plan
+        self._arrays = self.adapter.arrays
+        self._x_ref = self.state.x
+        self._slack = float(self.adapter.mac_slack)
+        self._steps_since_rebuild = 0
+        self.steps = int(step)
+        self._arrays, self.state = self._init_forces(self._arrays,
+                                                     self.state)
+        self.adapter.sync_arrays(self._arrays)
+        self.force_evals += 1
+        return self.steps

@@ -1,0 +1,308 @@
+"""Device-side tree refit: moved particles, fixed topology.
+
+A treecode plan is (topology, geometry): the permutation, particle ranges,
+interaction lists and padded gather tables are topology; the packed
+coordinates and node bounding boxes are geometry. When particles move a
+little, only the geometry is stale — and all of it lives in the plan's
+device arrays, derived from positions by gathers/scatters and masked
+segment min/max. `refit_*` recomputes exactly that, on device, in O(N):
+
+    src_sorted   <- x[perm]                  (tree-order source slab)
+    tgt_batched  <- scatter x by gather_index (batch-packed target slab)
+    node_lo/hi   <- masked min/max over each node's bucket-gather row
+
+Chebyshev grids and modified charges are derived from node_lo/hi inside
+the jitted executors on every call, so refitting the boxes refits them
+for free. Every particle remains inside its refitted cluster box (the box
+IS the particle bounding box), so barycentric interpolation stays
+well-posed; the only thing drift can invalidate is the MAC inequality of
+the frozen approx lists, which the engine guards with the
+`mac_slack`-based trigger (see DESIGN.md §4 for the bound).
+
+`PlanAdapter` gives the engine one interface over both plan strategies:
+jit-safe `refit` and `force` (input-order positions in, input-order
+forces out — device-resident end to end), plus host-side `rebuild`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eval as _eval
+from repro.core.api import SingleDevicePlan
+
+
+def _masked_boxes(pts, valid, old_lo_rows, old_hi_rows):
+    """(rows, pad, 3) points + validity -> (rows, 3) min/max boxes.
+
+    Rows with no valid entries (pure padding) keep their old box, which
+    the padding convention fixed at the non-degenerate [0, 1]."""
+    big = jnp.asarray(jnp.finfo(pts.dtype).max, pts.dtype)
+    lo = jnp.min(jnp.where(valid[..., None], pts, big), axis=1)
+    hi = jnp.max(jnp.where(valid[..., None], pts, -big), axis=1)
+    has = jnp.any(valid, axis=1)[..., None]
+    return (jnp.where(has, lo, old_lo_rows),
+            jnp.where(has, hi, old_hi_rows))
+
+
+def refit_single_arrays(arrays: dict, x: jnp.ndarray) -> dict:
+    """Refit a single-device plan's arrays to new positions (jit-safe).
+
+    Assumes the MD setting: targets == sources == the N particles the
+    plan was built over (gather_index covers every target exactly once).
+    """
+    x = x.astype(arrays["src_sorted"].dtype)
+    src_sorted = x[arrays["src_perm"]]
+
+    lo, hi = arrays["node_lo"], arrays["node_hi"]
+    for gidx, nodes in zip(arrays["bucket_gather"], arrays["bucket_nodes"]):
+        valid = gidx >= 0
+        pts = src_sorted[jnp.maximum(gidx, 0)]
+        lo_rows, hi_rows = _masked_boxes(pts, valid, lo[nodes], hi[nodes])
+        lo = lo.at[nodes].set(lo_rows)
+        hi = hi.at[nodes].set(hi_rows)
+
+    b, nb, _ = arrays["tgt_batched"].shape
+    flat = jnp.zeros((b * nb, 3), x.dtype).at[arrays["gather_index"]].set(x)
+    return dict(arrays, src_sorted=src_sorted, node_lo=lo, node_hi=hi,
+                tgt_batched=flat.reshape(b, nb, 3))
+
+
+def refit_sharded_arrays(arrays: dict, io: dict, x: jnp.ndarray,
+                         depth: int) -> dict:
+    """Refit a sharded plan's stacked (P, ...) arrays to new positions.
+
+    The RCB rank assignment is frozen with the topology (particles may
+    drift across slab boundaries; correctness only needs each rank's
+    lists to stay MAC-valid, which the same slack bound guards). All ops
+    are batched over the rank dimension — jit/shard-map friendly.
+    """
+    x = x.astype(arrays["src_sorted"].dtype)
+    rank_gather = io["rank_gather"]                      # (P, per_pad)
+    valid_slab = rank_gather >= 0
+    x_rank = jnp.where(valid_slab[..., None],
+                       x[jnp.maximum(rank_gather, 0)], 0.0)
+    src_sorted = jnp.take_along_axis(
+        x_rank, arrays["charges_perm"][..., None].astype(jnp.int32), axis=1)
+
+    p = src_sorted.shape[0]
+    rows = jnp.arange(p)[:, None]
+    lo, hi = arrays["node_lo"], arrays["node_hi"]
+    for lvl in range(depth):
+        gidx = arrays[f"bucket_gather_{lvl}"]            # (P, C, G)
+        nodes = arrays[f"bucket_nodes_{lvl}"]            # (P, C)
+        c, g = gidx.shape[1], gidx.shape[2]
+        pts = jnp.take_along_axis(
+            src_sorted, jnp.maximum(gidx, 0).reshape(p, c * g, 1), axis=1
+        ).reshape(p, c, g, 3)
+        valid = gidx >= 0
+        old_lo = jnp.take_along_axis(lo, nodes[..., None], axis=1)
+        old_hi = jnp.take_along_axis(hi, nodes[..., None], axis=1)
+        lo_rows, hi_rows = _masked_boxes(
+            pts.reshape(p * c, g, 3), valid.reshape(p * c, g),
+            old_lo.reshape(p * c, 3), old_hi.reshape(p * c, 3))
+        lo = lo.at[rows, nodes].set(lo_rows.reshape(p, c, 3))
+        hi = hi.at[rows, nodes].set(hi_rows.reshape(p, c, 3))
+
+    _, b, nb, _ = arrays["tgt_batched"].shape
+    gi = jnp.where(valid_slab, arrays["gather_index"], b * nb)
+    flat = jnp.zeros((p, b * nb + 1, 3), x.dtype)
+    flat = flat.at[rows, gi].set(x_rank)
+    return dict(arrays, src_sorted=src_sorted, node_lo=lo, node_hi=hi,
+                tgt_batched=flat[:, :-1].reshape(-1, b, nb, 3))
+
+
+def max_drift(x: jnp.ndarray, x_ref: jnp.ndarray) -> jnp.ndarray:
+    """Max particle displacement since the reference build (jit-safe)."""
+    return jnp.sqrt(jnp.max(jnp.sum((x - x_ref) ** 2, axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# Plan adapters: one engine interface over both execution strategies
+# ---------------------------------------------------------------------------
+
+
+class PlanAdapter:
+    """Strategy-specific hooks the dynamics engine composes into its
+    jitted step. `refit` and `force` must be jit-safe; `rebuild` is the
+    host path (tree construction is a host phase, exactly as in the
+    paper) and returns True when compiled executables were invalidated."""
+
+    plan = None
+    # True when a host rebuild swaps the underlying compiled executable
+    # (sharded: new shard_map closure), so the engine must re-close and
+    # count the recompilation as a retrace.
+    recloses_on_rebuild = False
+
+    def positions(self) -> np.ndarray:
+        """Current particle positions in input order (host)."""
+        raise NotImplementedError
+
+    @property
+    def arrays(self) -> dict:
+        raise NotImplementedError
+
+    @property
+    def mac_slack(self) -> float:
+        raise NotImplementedError
+
+    def signature(self) -> Tuple:
+        raise NotImplementedError
+
+    def refit(self, arrays: dict, x) -> dict:
+        raise NotImplementedError
+
+    def force_fn(self) -> Callable:
+        """(arrays, x, q, w) -> (phi, F), all input order, jit-safe."""
+        raise NotImplementedError
+
+    def rebuild(self, x_host: np.ndarray) -> bool:
+        raise NotImplementedError
+
+    def sync_arrays(self, arrays: dict) -> None:
+        """Push engine-refitted arrays back onto the plan so direct plan
+        use (plan.execute / stats) observes the current geometry."""
+        raise NotImplementedError
+
+
+class SingleDeviceAdapter(PlanAdapter):
+    def __init__(self, plan: SingleDevicePlan):
+        self.plan = plan
+
+    def positions(self) -> np.ndarray:
+        src = np.asarray(self.plan.inner.arrays["src_sorted"])
+        out = np.empty_like(src)
+        out[self.plan.inner.tree.perm] = src
+        return out
+
+    @property
+    def arrays(self) -> dict:
+        return self.plan.inner.arrays
+
+    @property
+    def mac_slack(self) -> float:
+        return self.plan.mac_slack
+
+    def signature(self) -> Tuple:
+        return _eval.plan_signature(self.plan.inner)
+
+    def refit(self, arrays: dict, x) -> dict:
+        return refit_single_arrays(arrays, x)
+
+    def force_fn(self) -> Callable:
+        opts = self.plan.config.exec_opts(self.plan.kernel)
+
+        def force(arrays, x, q, w):
+            del x  # already refitted into arrays
+            return _eval.potential_and_forces(arrays, q, w, **opts)
+
+        return force
+
+    def rebuild(self, x_host: np.ndarray) -> bool:
+        old_sig = self.signature()
+        self.plan = self.plan.replan(x_host)   # keeps capacities, grows
+        return self.signature() != old_sig
+
+    def sync_arrays(self, arrays: dict) -> None:
+        self.plan.inner.arrays = arrays
+
+
+class ShardedAdapter(PlanAdapter):
+    recloses_on_rebuild = True
+
+    def __init__(self, plan):
+        self.plan = plan
+        self._bind()
+
+    def positions(self) -> np.ndarray:
+        plan = self.plan
+        src = np.asarray(plan.arrays["src_sorted"])      # (P, per_pad, 3)
+        perm = np.asarray(plan.arrays["charges_perm"])   # (P, per_pad)
+        rcb = plan.rcb
+        out = np.empty((plan.num_points, 3), src.dtype)
+        for r in range(plan.nranks):
+            idx = rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]
+            slab = np.empty((len(idx), 3), src.dtype)
+            # src_sorted[r, j] = slab[perm[r, j]] for real rows j.
+            slab[perm[r, :len(idx)]] = src[r, :len(idx)]
+            out[idx] = slab
+        return out
+
+    def _bind(self):
+        plan = self.plan
+        rcb = plan.rcb
+        p, per_pad = plan.nranks, plan.per_pad
+        rank_gather = np.full((p, per_pad), -1, np.int64)
+        input_pos = np.empty(plan.num_points, np.int64)
+        for r in range(p):
+            idx = rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]
+            rank_gather[r, :len(idx)] = idx
+            input_pos[idx] = r * per_pad + np.arange(len(idx))
+        self.io = dict(rank_gather=jnp.asarray(rank_gather, jnp.int32),
+                       input_pos=jnp.asarray(input_pos, jnp.int32))
+        self._fn = plan._spmd_fn()
+
+    @property
+    def arrays(self) -> dict:
+        return self.plan.arrays
+
+    @property
+    def mac_slack(self) -> float:
+        return self.plan.mac_slack
+
+    def signature(self) -> Tuple:
+        # The sharded arrays dict is a plain {name: array} mapping, so
+        # the core signature helper applies as-is.
+        return _eval.plan_signature(self.plan)
+
+    def refit(self, arrays: dict, x) -> dict:
+        return refit_sharded_arrays(arrays, self.io, x, self.plan.depth)
+
+    def force_fn(self) -> Callable:
+        fn, io = self._fn, self.io
+        dtype = self.plan.dtype
+
+        def force(arrays, x, q, w):
+            rank_gather = io["rank_gather"]
+            valid = rank_gather >= 0
+            q_rank = jnp.where(valid, q.astype(dtype)[
+                jnp.maximum(rank_gather, 0)], 0.0)
+            tgt = arrays["tgt_batched"]
+            rest = {k: v for k, v in arrays.items() if k != "tgt_batched"}
+
+            def phi_of(t):
+                return fn(dict(rest, tgt_batched=t), q_rank)
+
+            phi_rank, grads = None, []
+            for d in range(3):
+                tangent = jnp.zeros_like(tgt).at[..., d].set(1.0)
+                phi_rank, dphi = jax.jvp(phi_of, (tgt,), (tangent,))
+                grads.append(dphi)
+            g_rank = jnp.stack(grads, axis=-1)       # (P, per_pad, 3)
+            pos = io["input_pos"]
+            phi = phi_rank.reshape(-1)[pos]
+            g = g_rank.reshape(-1, 3)[pos]
+            return phi, -w[:, None].astype(dtype) * g
+
+        return force
+
+    def rebuild(self, x_host: np.ndarray) -> bool:
+        self.plan = self.plan.replan(x_host)
+        self._bind()                 # new spmd fn + io tables
+        return True                  # sharded rebuilds always re-close
+
+    def sync_arrays(self, arrays: dict) -> None:
+        self.plan.arrays = arrays
+
+
+def make_adapter(plan) -> PlanAdapter:
+    """Dispatch a plan to its dynamics adapter."""
+    if isinstance(plan, SingleDevicePlan):
+        return SingleDeviceAdapter(plan)
+    from repro.distributed.bltc import ShardedPlan
+    if isinstance(plan, ShardedPlan):
+        return ShardedAdapter(plan)
+    raise TypeError(f"no dynamics adapter for {type(plan).__name__}")

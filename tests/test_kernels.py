@@ -140,3 +140,79 @@ def test_modified_charges_reproduce_far_field(rng, x64):
     approx = float(ref.ref_cluster_approx_potential(
         x, jnp.asarray(lo[0]), jnp.asarray(hi[0]), qhat[0], degree, kern)[0])
     assert abs(approx - exact) / abs(exact) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Long-interaction-list accuracy: Kahan and MXU (matmul-r2) Pallas paths
+# vs f64 direct summation (the dynamics hot path: hundreds of list slots
+# accumulated into one f32 target tile per step).
+# ---------------------------------------------------------------------------
+
+
+def _long_list_case(rng, slots=96, nb=8, m=8):
+    """One batch against `slots` clusters: accumulation-depth stress."""
+    tgt = rng.uniform(-1, 1, (1, nb, 3)).astype(np.float32)
+    src = rng.uniform(-1, 1, (slots, m, 3)).astype(np.float32)
+    q = rng.uniform(-1, 1, (slots, m)).astype(np.float32)
+    idx = np.arange(slots, dtype=np.int32)[None, :]
+    return jnp.asarray(idx), jnp.asarray(tgt), jnp.asarray(src), jnp.asarray(q)
+
+
+def _f64_reference(idx, tgt, src, q, kern):
+    return np.asarray(ref.ref_batch_cluster_eval(
+        jnp.asarray(np.asarray(idx)),
+        jnp.asarray(np.asarray(tgt, np.float64)),
+        jnp.asarray(np.asarray(src, np.float64)),
+        jnp.asarray(np.asarray(q, np.float64)), kern))
+
+
+def test_kahan_long_list_beats_plain_f32(rng, x64):
+    """Compensated accumulation across ~100 list slots (interpret mode)
+    must not lose to plain f32 and must stay near the f32 roundoff floor
+    of a single contribution."""
+    idx, tgt, src, q = _long_list_case(rng)
+    for kern in KERNELS:
+        want = _f64_reference(idx, tgt, src, q, kern)
+        scale = np.abs(want).max()
+        errs = {}
+        for kahan in (False, True):
+            got = np.asarray(ops.batch_cluster_eval(
+                idx, tgt, src, q, kernel=kern, backend="pallas_interpret",
+                target_tile=8, kahan=kahan))
+            errs[kahan] = np.abs(got - want).max() / scale
+        assert errs[True] <= errs[False] * 1.05
+        assert errs[True] < 5e-6
+
+
+def test_matmul_r2_long_list_accuracy(rng, x64):
+    """The MXU r^2 form on MAC-separated geometry: same accuracy class
+    as the cancellation-free difference form, against the f64 oracle."""
+    idx, tgt, src, q = _long_list_case(rng)
+    # Separate sources from targets (the approximation-kernel setting —
+    # the MAC guarantees separation, so |x|^2+|y|^2-2x.y cannot cancel).
+    src = src + jnp.asarray([4.0, 0.0, 0.0], src.dtype)
+    kern = coulomb()
+    want = _f64_reference(idx, tgt, src, q, kern)
+    scale = np.abs(want).max()
+    for backend in ("pallas_interpret", "xla"):
+        errs = {}
+        for mode in ("diff", "matmul"):
+            got = np.asarray(ops.batch_cluster_eval(
+                idx, tgt, src, q, kernel=kern, backend=backend,
+                target_tile=8, r2_mode=mode))
+            errs[mode] = np.abs(got - want).max() / scale
+        assert errs["matmul"] < 1e-4, errs
+        assert errs["matmul"] <= 20.0 * errs["diff"] + 1e-6, errs
+
+
+def test_kahan_matmul_compose(rng, x64):
+    """Both beyond-paper knobs together (the fast+accurate approx-kernel
+    configuration) stay within tolerance of the f64 oracle."""
+    idx, tgt, src, q = _long_list_case(rng, slots=64)
+    src = src + jnp.asarray([0.0, 4.0, 0.0], src.dtype)
+    kern = yukawa(0.5)
+    want = _f64_reference(idx, tgt, src, q, kern)
+    got = np.asarray(ops.batch_cluster_eval(
+        idx, tgt, src, q, kernel=kern, backend="pallas_interpret",
+        target_tile=8, kahan=True, r2_mode="matmul"))
+    assert np.abs(got - want).max() / np.abs(want).max() < 1e-5
