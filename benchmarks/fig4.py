@@ -34,7 +34,9 @@ def run(n_particles=5000, thetas=(0.5, 0.7, 0.9), degrees=(1, 2, 3, 4, 6, 8),
 
     rows = []
     for kname in kernels:
-        cfg0 = TreecodeConfig(kernel=kname, kappa=0.5, backend="xla")
+        kp = {"kappa": 0.5} if kname == "yukawa" else {}
+        cfg0 = TreecodeConfig(kernel=kname, kernel_params=kp,
+                              backend="xla")
         kern = cfg0.make_kernel()
         t0 = time.time()
         phi_ds = direct_sum(jnp.asarray(pts), jnp.asarray(pts),
@@ -44,7 +46,8 @@ def run(n_particles=5000, thetas=(0.5, 0.7, 0.9), degrees=(1, 2, 3, 4, 6, 8),
         for theta in thetas:
             for n in degrees:
                 cfg = TreecodeConfig(theta=theta, degree=n, leaf_size=leaf,
-                                     kernel=kname, kappa=0.5, backend="xla",
+                                     kernel=kname, kernel_params=kp,
+                                     backend="xla",
                                      precompute=precompute)
                 solver = TreecodeSolver(cfg)
                 t0 = time.time()

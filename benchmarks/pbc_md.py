@@ -1,0 +1,139 @@
+"""Periodic-MD benchmark: minimum-image Yukawa MD in a NaCl-like box.
+
+Exercises the full space-aware stack that PR 3 opened — `PeriodicBox`
+wrapped tree builds, fold-free minimum-image MAC, min-image Pallas/XLA
+kernels, traced kernel parameters, and wrap-at-rebuild dynamics — on the
+classic molten-salt configuration: a perturbed cubic lattice of
+alternating +/- charges under a screened Coulomb (Yukawa) interaction.
+
+Emits BENCH_pbc_md.json with ms/step, refit/rebuild/retrace counters,
+energy and momentum drift, and the relative deviation against a
+rebuild-every-step run of the same trajectory.
+
+    PYTHONPATH=src python benchmarks/pbc_md.py \
+        [--m 8] [--steps 50] [--kappa 0.8] [--check]
+
+`--check` asserts the smoke thresholds (used by CI): energy drift below
+--drift-tol over the run, >= 1 refit without a rebuild, retraces <= 2
+after the first step, and every final position within one wrap of the
+primary cell.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
+from repro.core.space import PeriodicBox  # noqa: E402
+from repro.dynamics import Simulation  # noqa: E402
+
+
+def salt_box(m: int, jitter: float, seed: int = 0):
+    """NaCl-like configuration: m^3 alternating charges on a perturbed
+    cubic lattice with unit spacing, box [0, m)^3."""
+    rng = np.random.default_rng(seed)
+    g = np.stack(np.meshgrid(*[np.arange(m)] * 3, indexing="ij"),
+                 -1).reshape(-1, 3)
+    x = (g + 0.5 + jitter * rng.standard_normal(g.shape)).astype(np.float32)
+    q = (np.where(g.sum(1) % 2 == 0, 1.0, -1.0) * 0.05).astype(np.float32)
+    return x, q, float(m)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=8,
+                    help="lattice cells per edge (N = m^3)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--dt", type=float, default=2e-3)
+    ap.add_argument("--theta", type=float, default=0.7)
+    ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--leaf-size", type=int, default=32)
+    ap.add_argument("--kappa", type=float, default=0.8,
+                    help="Yukawa inverse screening length")
+    ap.add_argument("--jitter", type=float, default=0.08)
+    ap.add_argument("--refit-interval", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_pbc_md.json")
+    ap.add_argument("--check", action="store_true",
+                    help="assert smoke thresholds (CI)")
+    ap.add_argument("--drift-tol", type=float, default=1e-3)
+    args = ap.parse_args(argv)
+
+    x, q, L = salt_box(args.m, args.jitter)
+    box = PeriodicBox((L, L, L))
+    solver = TreecodeSolver(TreecodeConfig(
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        kernel="yukawa", kernel_params={"kappa": args.kappa}, space=box))
+
+    def run(rebuild):
+        sim = Simulation(solver.plan(x), q, dt=args.dt,
+                         refit_interval=args.refit_interval,
+                         rebuild=rebuild)
+        sim.step()                   # compile + first step (excluded)
+        t0 = time.time()
+        sim.run(args.steps - 1, record_every=max(1, args.steps // 10))
+        steady = time.time() - t0
+        s = sim.stats()
+        return sim, dict(
+            mode=rebuild,
+            ms_per_step=steady / max(args.steps - 1, 1) * 1e3,
+            steps=s["steps"], refits=s["refits"],
+            rebuilds=s["rebuilds"], retraces=s["retraces"],
+            energy_drift=sim.log.drift(),
+            momentum_drift=sim.log.momentum_drift(),
+            mac_slack=s["mac_slack"],
+        )
+
+    sim_r, refit = run("auto")
+    sim_b, rebuild = run("always")
+    xr, xb = np.asarray(sim_r.state.x), np.asarray(sim_b.state.x)
+    # compare modulo wrapping (the two runs may wrap at different steps)
+    d = np.asarray(box.min_image(xr - xb))
+    traj_dev = float(np.max(np.linalg.norm(d, axis=1)) / L)
+
+    n = args.m ** 3
+    result = dict(
+        bench="pbc_md",
+        n=n, box=L, steps=args.steps, dt=args.dt,
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        kernel="yukawa", kappa=args.kappa,
+        refit_interval=args.refit_interval,
+        refit=refit, rebuild=rebuild,
+        trajectory_deviation=traj_dev,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"N={n} box=[0,{L})^3 yukawa kappa={args.kappa}")
+    print(f"refit:   {refit['ms_per_step']:8.1f} ms/step  "
+          f"rebuilds {refit['rebuilds']}  refits {refit['refits']}  "
+          f"retraces {refit['retraces']}  "
+          f"drift {refit['energy_drift']:.2e}")
+    print(f"rebuild: {rebuild['ms_per_step']:8.1f} ms/step")
+    print(f"trajectory deviation {traj_dev:.2e} (box units)")
+    print(f"wrote {args.out}")
+
+    in_cell = (xr.min() > -1.0) and (xr.max() < L + 1.0)
+    if args.check:
+        checks = {
+            f"energy drift < {args.drift_tol}":
+                refit["energy_drift"] < args.drift_tol,
+            "at least one refit without rebuild": refit["refits"] >= 1,
+            "retraces <= 2 after first step": refit["retraces"] <= 2,
+            "positions within one wrap of the cell": in_cell,
+            "trajectory deviation < 1e-2 box units": traj_dev < 1e-2,
+        }
+        failed = [name for name, ok in checks.items() if not ok]
+        for name, ok in checks.items():
+            print(f"  [{'ok' if ok else 'FAIL'}] {name}")
+        if failed:
+            raise SystemExit(f"pbc_md checks failed: {failed}")
+        print("all pbc_md checks passed")
+
+
+if __name__ == "__main__":
+    main()

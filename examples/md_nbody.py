@@ -13,9 +13,16 @@ loop this example used to run by hand:
     step executable is reused instead of retraced;
   - `--rebuild always` recovers the old naive behaviour for comparison.
 
+Pass ``--box L`` for periodic boundary conditions (minimum-image
+convention in the cell [0, L)^3: the tree builds on wrapped coordinates,
+kernels fold displacements, and the engine re-wraps positions at every
+rebuild) — combine with ``--kernel yukawa --kappa 0.8`` for the classic
+screened molten-salt setting.
+
     PYTHONPATH=src python examples/md_nbody.py [--n 1500] [--steps 200]
         [--integrator velocity_verlet|leapfrog|langevin]
         [--refit-interval 25] [--rebuild auto|always|never]
+        [--box 0] [--kernel coulomb] [--kappa 0.5]
         [--checkpoint DIR]
 """
 import argparse
@@ -25,6 +32,7 @@ import numpy as np
 
 from repro.checkpoint.store import Checkpointer
 from repro.core.api import TreecodeConfig, TreecodeSolver
+from repro.core.space import FreeSpace, PeriodicBox
 from repro.dynamics import Simulation
 
 
@@ -44,17 +52,31 @@ def main():
     ap.add_argument("--refit-interval", type=int, default=25)
     ap.add_argument("--rebuild", default="auto",
                     choices=("auto", "always", "never"))
+    ap.add_argument("--box", type=float, default=0.0,
+                    help="periodic box edge L (0 = free space); particles "
+                         "start uniform in [0, L)^3")
+    ap.add_argument("--kernel", default="coulomb",
+                    choices=("coulomb", "yukawa"))
+    ap.add_argument("--kappa", type=float, default=0.5,
+                    help="yukawa inverse screening length")
     ap.add_argument("--checkpoint", default=None,
                     help="directory for trajectory checkpoints")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    x = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
+    if args.box > 0:
+        space = PeriodicBox((args.box,) * 3)
+        x = rng.uniform(0, args.box, (args.n, 3)).astype(np.float32)
+    else:
+        space = FreeSpace()
+        x = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
     q = (rng.uniform(-1, 1, args.n) * 0.05).astype(np.float32)
 
+    kparams = {"kappa": args.kappa} if args.kernel == "yukawa" else {}
     solver = TreecodeSolver(TreecodeConfig(
-        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size))
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        kernel=args.kernel, kernel_params=kparams, space=space))
     plan = solver.plan(x)
 
     params = {}

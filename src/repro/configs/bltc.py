@@ -13,7 +13,8 @@ FIG4 = tuple(
 SCALING = TreecodeConfig(theta=0.8, degree=8, leaf_size=4000,
                          kernel="coulomb")
 SCALING_YUKAWA = TreecodeConfig(theta=0.8, degree=8, leaf_size=4000,
-                                kernel="yukawa", kappa=0.5)
+                                kernel="yukawa",
+                                kernel_params={"kappa": 0.5})
 
 # Beyond-paper optimized preset (hierarchical q-hat upward pass).
 OPTIMIZED = TreecodeConfig(theta=0.8, degree=8, leaf_size=4000,

@@ -19,13 +19,27 @@ Typical single-shot use::
 
 Iterative / boundary-element use (fixed geometry, many charge vectors —
 the plan keeps everything geometric on device, and with
-``donate_charges=True`` the single-device executor recycles the charge
-buffer instead of re-allocating; the sharded path stages charges
-host-side, where donation does not apply)::
+``donate_charges=True`` the executors recycle the charge buffer instead
+of re-allocating)::
 
     plan = solver.plan(targets, sources)
     phi1 = plan.execute(charges1)
     phi2 = plan.execute(charges2)
+
+Kernel parameter sweeps (kernel protocol v2: parameter VALUES are traced,
+so every call below reuses ONE compiled executable)::
+
+    solver = TreecodeSolver(TreecodeConfig(kernel="yukawa"))
+    plan = solver.plan(points)
+    for kappa in (0.1, 0.2, 0.5, 1.0):
+        phi = plan.execute(charges, kernel_params={"kappa": kappa})
+
+Periodic boundary conditions (minimum-image convention; see
+`repro.core.space`)::
+
+    from repro.core.space import PeriodicBox
+    cfg = TreecodeConfig(kernel="yukawa", space=PeriodicBox((L, L, L)))
+    plan = TreecodeSolver(cfg).plan(points)      # built on wrapped coords
 
 Molecular dynamics (moving particles, forces)::
 
@@ -42,6 +56,7 @@ user-constructed `Kernel` instance.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Protocol, Tuple, Union, runtime_checkable
 
 import jax
@@ -50,6 +65,7 @@ import numpy as np
 
 from repro.core import eval as _eval
 from repro.core.potentials import Kernel, resolve_kernel
+from repro.core.space import FreeSpace, PeriodicBox, resolve_space
 
 _BACKENDS = ("auto", "pallas", "pallas_interpret", "xla")
 _PRECOMPUTES = ("direct", "hierarchical")
@@ -66,11 +82,18 @@ class TreecodeConfig:
     paper-faithful per-cluster modified-charge computation ("direct") or the
     exact hierarchical upward pass ("hierarchical", beyond-paper).
 
-    `kernel` is a registry name or a `Kernel` instance; `dtype` pins the
-    working precision ("auto" follows the input arrays); `donate_charges`
-    lets the single-device `execute` consume the device charge buffer so
-    iterative loops don't re-allocate (no effect on sharded plans, which
-    stage charges host-side).
+    `kernel` is a registry name or a `Kernel` instance; `kernel_params`
+    supplies its parameters (a dict of keyword arguments for registry
+    factories, e.g. ``{"kappa": 0.7}``) — these become the plan's traced
+    defaults, overridable per call via ``plan.execute(q, kernel_params=)``.
+    `space` selects the geometry: `FreeSpace()` (default, the paper's
+    setting) or `PeriodicBox(lengths)` for the minimum-image convention.
+    `dtype` pins the working precision ("auto" follows the input arrays);
+    `donate_charges` lets `execute` consume the device charge buffer so
+    iterative loops don't re-allocate.
+
+    `kappa` is a deprecated alias for ``kernel_params={"kappa": ...}``
+    (Yukawa only); passing it emits a DeprecationWarning.
     """
 
     theta: float = 0.7
@@ -78,7 +101,9 @@ class TreecodeConfig:
     leaf_size: int = 256
     batch_size: int = 0          # 0 -> same as leaf_size (paper setting)
     kernel: Union[str, Kernel] = "coulomb"
-    kappa: float = 0.5           # Yukawa inverse Debye length
+    kernel_params: tuple = ()    # dict accepted; normalized in __post_init__
+    space: object = FreeSpace()
+    kappa: Optional[float] = None  # DEPRECATED: use kernel_params=
     backend: str = "auto"        # pallas | pallas_interpret | xla | auto
     kahan: bool = False
     precompute: str = "direct"   # direct | hierarchical
@@ -113,18 +138,63 @@ class TreecodeConfig:
         if not isinstance(self.kernel, (str, Kernel)):
             bad(f"kernel must be a registry name or a Kernel instance, "
                 f"got {type(self.kernel).__name__}")
+        # Normalize kernel_params to a hashable form (the config stays a
+        # valid static jit argument): dicts become sorted (name, value)
+        # item tuples, reconstructed by make_kernel.
+        kp = self.kernel_params
+        if isinstance(kp, dict):
+            if not all(isinstance(k, str) for k in kp):
+                bad("kernel_params dict keys must be parameter names")
+            kp = ("__named__",) + tuple(sorted(kp.items())) if kp else ()
+            object.__setattr__(self, "kernel_params", kp)
+        elif not isinstance(kp, tuple):
+            bad(f"kernel_params must be a dict of named parameters or a "
+                f"tuple, got {type(kp).__name__}")
+        object.__setattr__(self, "space", resolve_space(self.space))
+        if self.kappa is not None:
+            warnings.warn(
+                "TreecodeConfig.kappa is deprecated; pass "
+                "kernel_params={'kappa': ...} instead (works for any "
+                "registered kernel and keeps sweeps recompile-free)",
+                DeprecationWarning, stacklevel=3)
 
     def resolved_batch_size(self) -> int:
         return self.batch_size or self.leaf_size
 
+    def _named_params(self) -> Optional[dict]:
+        """kernel_params as a dict when given as one, else None."""
+        kp = self.kernel_params
+        if kp and kp[0] == "__named__":
+            return dict(kp[1:])
+        return None
+
     def make_kernel(self) -> Kernel:
-        if isinstance(self.kernel, str) and self.kernel == "yukawa":
-            return resolve_kernel("yukawa", kappa=self.kappa)
-        return resolve_kernel(self.kernel)
+        named = self._named_params()
+        if isinstance(self.kernel, str):
+            params = dict(named) if named is not None else {}
+            if (self.kappa is not None and self.kernel == "yukawa"
+                    and "kappa" not in params):
+                params["kappa"] = self.kappa  # deprecated shim
+            if named is None and self.kernel_params:
+                # positional tuple for a registry name: bind post-factory
+                return resolve_kernel(self.kernel).with_params(
+                    self.kernel_params)
+            return resolve_kernel(self.kernel, **params)
+        kernel = self.kernel
+        if named is not None:
+            return kernel.with_params(named)
+        if self.kernel_params:
+            return kernel.with_params(self.kernel_params)
+        return kernel
 
     def exec_opts(self, kernel: Kernel) -> dict:
-        """Static options consumed by the jitted executors."""
-        return dict(degree=self.degree, kernel=kernel, backend=self.backend,
+        """Static options consumed by the jitted executors.
+
+        The kernel enters STRIPPED of its default parameters — parameter
+        values travel as traced arguments (see `SingleDevicePlan.execute`),
+        so the compile-cache key is parameter-free."""
+        return dict(degree=self.degree, kernel=kernel.stripped(),
+                    space=self.space, backend=self.backend,
                     kahan=self.kahan, precompute=self.precompute,
                     approx_r2=self.approx_r2)
 
@@ -133,10 +203,13 @@ class TreecodeConfig:
 class Plan(Protocol):
     """Common executor protocol implemented by every planning strategy."""
 
-    def execute(self, charges) -> jnp.ndarray:
-        """Potentials at the plan's targets, in input order."""
+    def execute(self, charges, kernel_params=None) -> jnp.ndarray:
+        """Potentials at the plan's targets, in input order.
 
-    def potential_and_forces(self, charges, weights=None
+        `kernel_params` overrides the plan's kernel parameter values for
+        this call (same pytree structure => no recompilation)."""
+
+    def potential_and_forces(self, charges, weights=None, kernel_params=None
                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(phi, F) with F_i = -w_i * grad_x phi(x_i), sources fixed."""
 
@@ -166,6 +239,12 @@ def _resolve_dtype(config: TreecodeConfig, arr: np.ndarray) -> np.dtype:
     return np.dtype(config.dtype)
 
 
+def lift_params(kernel: Kernel, dtype) -> object:
+    """Kernel defaults as traced-ready device arrays of the plan dtype."""
+    return jax.tree.map(lambda v: jnp.asarray(v, dtype=dtype),
+                        kernel.params)
+
+
 class SingleDevicePlan:
     """Plan over the single-device pipeline (`repro.core.eval`)."""
 
@@ -177,6 +256,7 @@ class SingleDevicePlan:
         self.kernel = kernel
         self.inner = inner
         self.dtype = dtype
+        self.kernel_params = lift_params(kernel, dtype)
 
     # -- convenience passthroughs kept from the old `eval.Plan` surface
     @property
@@ -195,19 +275,36 @@ class SingleDevicePlan:
     def num_sources(self) -> int:
         return self.inner.num_sources
 
+    @property
+    def space(self):
+        return self.config.space
+
     def _charges(self, charges) -> jnp.ndarray:
         q = jnp.asarray(charges)
         if q.dtype != self.dtype:
             q = q.astype(self.dtype)
         return q
 
-    def execute(self, charges) -> jnp.ndarray:
+    def _params(self, kernel_params):
+        """Per-call parameter values: None -> the plan's lifted defaults.
+
+        Dicts are normalized through the kernel's `param_names`, and every
+        leaf is cast to the plan dtype, so any two sweeps share one traced
+        structure (= one compiled executable)."""
+        if kernel_params is None:
+            return self.kernel_params
+        p = self.kernel.normalize_params(kernel_params)
+        return jax.tree.map(lambda v: jnp.asarray(v, dtype=self.dtype), p)
+
+    def execute(self, charges, kernel_params=None) -> jnp.ndarray:
         fn = (_eval.execute_donating if self.config.donate_charges
               else _eval.execute)
         return fn(self.inner.arrays, self._charges(charges),
+                  self._params(kernel_params),
                   **self.config.exec_opts(self.kernel))
 
-    def potential_and_forces(self, charges, weights=None):
+    def potential_and_forces(self, charges, weights=None,
+                             kernel_params=None):
         q = self._charges(charges)
         if weights is None:
             if self.num_targets != self.num_sources:
@@ -219,11 +316,13 @@ class SingleDevicePlan:
         else:
             w = self._charges(weights)
         return _eval.potential_and_forces(
-            self.inner.arrays, q, w, **self.config.exec_opts(self.kernel))
+            self.inner.arrays, q, w, self._params(kernel_params),
+            **self.config.exec_opts(self.kernel))
 
     @property
     def mac_slack(self) -> float:
-        """Min over approx pairs of theta*R - (r_B + r_C): the drift budget
+        """Min over approx pairs of the drift-budget margin (theta margin
+        and, for periodic spaces, the scaled fold margin): the budget
         within which a topology-preserving refit keeps the MAC valid."""
         return self.inner.mac_slack
 
@@ -246,6 +345,7 @@ class SingleDevicePlan:
             num_batches=self.inner.batches.num_batches,
             padding_waste=self.inner.padding_waste,
             dtype=str(self.dtype),
+            space=repr(self.config.space),
             mac_slack=self.inner.mac_slack,
             capacity_padded=caps is not None,
             **({"capacities": dataclasses.asdict(caps)} if caps else {}),
@@ -277,7 +377,8 @@ def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
     inner = _eval.prepare_plan(
         targets.astype(dtype, copy=False), sources.astype(dtype, copy=False),
         theta=config.theta, degree=config.degree,
-        leaf_size=config.leaf_size, batch_size=config.resolved_batch_size())
+        leaf_size=config.leaf_size, batch_size=config.resolved_batch_size(),
+        space=config.space)
     if config.precompute == "hierarchical":
         inner = _eval.add_hierarchical_tables(inner)
     if capacities is not None:
@@ -299,6 +400,10 @@ class TreecodeSolver:
     @property
     def kernel(self) -> Kernel:
         return self._kernel
+
+    @property
+    def space(self):
+        return self.config.space
 
     def plan(self, targets, sources=None, *, mesh=None,
              nranks: Optional[int] = None, capacities=None) -> Plan:
@@ -371,3 +476,8 @@ class TreecodeSolver:
 
     def __call__(self, targets, sources, charges) -> jnp.ndarray:
         return self.plan(targets, sources).execute(charges)
+
+
+# Re-exported for discoverability: the space types live in core.space.
+__all__ = ["TreecodeConfig", "TreecodeSolver", "Plan", "SingleDevicePlan",
+           "FreeSpace", "PeriodicBox"]

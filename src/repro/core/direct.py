@@ -5,6 +5,10 @@ On the GPU the paper computes this as a single launch of the batch-cluster
 direct-sum kernel with one batch of all targets and one cluster of all
 sources; `direct_sum_kernel` reproduces exactly that configuration through
 the same ops entry point used by the treecode.
+
+Space/params protocol v2: pass `space=PeriodicBox(...)` for the
+minimum-image direct sum (the f64 oracle the periodic treecode is
+validated against) and `params=` for traced kernel parameters.
 """
 from __future__ import annotations
 
@@ -14,16 +18,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.potentials import Kernel
+from repro.core.space import FREE as _FREE
 from repro.kernels import ops
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "source_chunk"))
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "space", "source_chunk"))
 def direct_sum(
     targets: jnp.ndarray,  # (NT, 3)
     sources: jnp.ndarray,  # (NS, 3)
     charges: jnp.ndarray,  # (NS,)
+    params=None,
     *,
     kernel: Kernel,
+    space=_FREE,
     source_chunk: int = 2048,
 ) -> jnp.ndarray:
     """phi (NT,) by blocked direct summation; the i == j singular term is
@@ -37,7 +45,9 @@ def direct_sum(
 
     def step(phi, args):
         s, qs = args
-        g = kernel.pairwise(targets, s)  # (NT, chunk), masked at r2 == 0
+        # (NT, chunk), masked at r2 == 0; minimum-image per pair when the
+        # space is periodic (the exact convention, no interpolation).
+        g = kernel.pairwise(targets, s, params, space)
         # Padded sources may coincide at the origin with r2 > 0 against real
         # targets, so their contribution is removed via qs == 0.
         return phi + g @ qs, None
@@ -51,8 +61,10 @@ def direct_sum_kernel(
     targets: jnp.ndarray,
     sources: jnp.ndarray,
     charges: jnp.ndarray,
+    params=None,
     *,
     kernel: Kernel,
+    space=_FREE,
     backend: str = "auto",
 ) -> jnp.ndarray:
     """Direct sum as ONE batch-cluster kernel call (paper's GPU reference).
@@ -62,6 +74,6 @@ def direct_sum_kernel(
     """
     idx = jnp.zeros((1, 1), jnp.int32)
     phi = ops.batch_cluster_eval(
-        idx, targets[None], sources[None], charges[None],
-        kernel=kernel, backend=backend)
+        idx, targets[None], sources[None], charges[None], params,
+        kernel=kernel, space=space, backend=backend)
     return phi[0]

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import cheby
 from repro.core.interaction import build_interaction_lists
 from repro.core.potentials import Kernel
+from repro.core.space import FREE as _FREE
 from repro.core.tree import Batches, Tree, build_batches, build_tree
 from repro.kernels import ops
 
@@ -58,6 +59,9 @@ class Plan:
     # were padded to, and the scratch node row absorbing sentinel writes.
     capacities: "Capacities | None" = None
     scratch_node: int = -1
+    # The Space the plan was built in (geometry wrapped at build time for
+    # periodic boxes; the executors fold displacements to minimum image).
+    space: object = _FREE
 
 
 def prepare_plan(
@@ -68,15 +72,22 @@ def prepare_plan(
     degree: int,
     leaf_size: int,
     batch_size: int,
+    space=_FREE,
 ) -> Plan:
-    """Host-side setup phase (tree build + traversal + packing)."""
-    targets = np.asarray(targets)
-    sources = np.asarray(sources)
+    """Host-side setup phase (tree build + traversal + packing).
+
+    With a periodic `space`, coordinates are wrapped into the primary
+    cell before the tree/batch build (boundary-straddling clusters split
+    by construction) and the MAC traversal uses minimum-image center
+    distances with the fold-free acceptance condition (see
+    `repro.core.interaction`)."""
+    targets = np.asarray(space.wrap(np.asarray(targets)))
+    sources = np.asarray(space.wrap(np.asarray(sources)))
     dtype = targets.dtype
 
     tree = build_tree(sources, leaf_size)
     batches = build_batches(targets, batch_size)
-    lists = build_interaction_lists(tree, batches, theta, degree)
+    lists = build_interaction_lists(tree, batches, theta, degree, space)
 
     nb_pad = _round_up(batches.max_count)
     nl_pad = _round_up(tree.max_leaf_count)
@@ -145,7 +156,7 @@ def prepare_plan(
         arrays=arrays, meta=meta, tree=tree, batches=batches,
         padding_waste=float(lists.padding_waste),
         num_targets=targets.shape[0], num_sources=sources.shape[0],
-        mac_slack=float(lists.mac_slack),
+        mac_slack=float(lists.mac_slack), space=space,
     )
 
 
@@ -242,22 +253,30 @@ def compute_qhat_hierarchical(arrays, q_sorted, *, degree, backend):
     return qhat
 
 
-_EXEC_OPTS = ("degree", "kernel", "backend", "kahan", "precompute",
+_EXEC_OPTS = ("degree", "kernel", "space", "backend", "kahan", "precompute",
               "approx_r2")
 
 
 def _execute_impl(
     arrays: dict,
     charges: jnp.ndarray,
+    params=None,
     *,
     degree: int,
     kernel: Kernel,
+    space=_FREE,
     backend: str = "auto",
     kahan: bool = False,
     precompute: str = "direct",
     approx_r2: str = "diff",
 ) -> jnp.ndarray:
-    """Potentials at the plan's targets, in the caller's input order."""
+    """Potentials at the plan's targets, in the caller's input order.
+
+    `params` (traced pytree, kernel protocol v2) carries kernel parameter
+    VALUES through the trace; None falls back to the kernel's hashable
+    defaults (the v1 behavior). The solver path always passes explicit
+    params with a params-free (`Kernel.stripped`) static kernel, so
+    parameter sweeps over an unchanged plan compile exactly once."""
     q_sorted = charges[arrays["src_perm"]]
     if precompute == "direct":
         qhat = compute_qhat_direct(
@@ -273,14 +292,15 @@ def _execute_impl(
     # The approximation kernel may use the MXU matmul form of r^2: the MAC
     # guarantees target/cluster separation, so no cancellation risk there.
     phi_a = ops.batch_cluster_eval(
-        arrays["approx_idx"], tgt, grids, qhat,
-        kernel=kernel, backend=backend, kahan=kahan, r2_mode=approx_r2)
+        arrays["approx_idx"], tgt, grids, qhat, params,
+        kernel=kernel, space=space, backend=backend, kahan=kahan,
+        r2_mode=approx_r2)
 
     leaf_pts, leaf_q = _gathered(
         arrays["src_sorted"], q_sorted, arrays["leaf_gather"])
     phi_d = ops.batch_cluster_eval(
-        arrays["direct_idx"], tgt, leaf_pts, leaf_q,
-        kernel=kernel, backend=backend, kahan=kahan)
+        arrays["direct_idx"], tgt, leaf_pts, leaf_q, params,
+        kernel=kernel, space=space, backend=backend, kahan=kahan)
 
     phi = (phi_a + phi_d).reshape(-1)
     return phi[arrays["gather_index"]]
@@ -310,13 +330,19 @@ execute_donating = jax.jit(_execute_impl, static_argnames=_EXEC_OPTS,
 # `jax.grad` of any scalar in phi stays cheap.
 
 
-def _target_gradient(arrays, charges, opts: dict):
-    """(phi, g) with g_i = d phi_i / d x_i, sources held fixed."""
+def _target_gradient(arrays, charges, params, opts: dict):
+    """(phi, g) with g_i = d phi_i / d x_i, sources held fixed.
+
+    Space-correct under `PeriodicBox` for free: the minimum-image fold
+    d - L*round(d/L) has zero derivative through `round` almost
+    everywhere, so the JVP of the folded displacement is the identity —
+    forces point along the minimum-image separation."""
     opts = dict(opts, backend=ops.autodiff_backend(opts["backend"]))
     tgt = arrays["tgt_batched"]
 
     def phi_of(t):
-        return _execute_impl(dict(arrays, tgt_batched=t), charges, **opts)
+        return _execute_impl(dict(arrays, tgt_batched=t), charges, params,
+                             **opts)
 
     phi, grads = None, []
     for d in range(3):
@@ -327,13 +353,13 @@ def _target_gradient(arrays, charges, opts: dict):
 
 
 @functools.partial(jax.jit, static_argnames=_EXEC_OPTS)
-def potential_and_gradient(arrays, charges, *, degree, kernel,
-                           backend="auto", kahan=False, precompute="direct",
-                           approx_r2="diff"):
+def potential_and_gradient(arrays, charges, params=None, *, degree, kernel,
+                           space=_FREE, backend="auto", kahan=False,
+                           precompute="direct", approx_r2="diff"):
     """Potentials and their per-target spatial gradient, input order."""
-    return _target_gradient(arrays, charges, dict(
-        degree=degree, kernel=kernel, backend=backend, kahan=kahan,
-        precompute=precompute, approx_r2=approx_r2))
+    return _target_gradient(arrays, charges, params, dict(
+        degree=degree, kernel=kernel, space=space, backend=backend,
+        kahan=kahan, precompute=precompute, approx_r2=approx_r2))
 
 
 def _zero_cotangent(x):
@@ -343,40 +369,48 @@ def _zero_cotangent(x):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _phi_from_targets(opts: Tuple, tgt_batched, arrays, charges):
+def _phi_from_targets(opts: Tuple, tgt_batched, arrays, charges, params):
     o = dict(zip(_EXEC_OPTS, opts))
-    return _execute_impl(dict(arrays, tgt_batched=tgt_batched), charges, **o)
+    return _execute_impl(dict(arrays, tgt_batched=tgt_batched), charges,
+                         params, **o)
 
 
-def _phi_fwd(opts, tgt_batched, arrays, charges):
+def _phi_fwd(opts, tgt_batched, arrays, charges, params):
     o = dict(zip(_EXEC_OPTS, opts))
-    phi = _execute_impl(dict(arrays, tgt_batched=tgt_batched), charges, **o)
-    return phi, (tgt_batched, arrays, charges)
+    phi = _execute_impl(dict(arrays, tgt_batched=tgt_batched), charges,
+                        params, **o)
+    return phi, (tgt_batched, arrays, charges, params)
 
 
 def _phi_bwd(opts, res, u):
-    tgt, arrays, charges = res
+    tgt, arrays, charges, params = res
     o = dict(zip(_EXEC_OPTS, opts))
-    _, g = _target_gradient(dict(arrays, tgt_batched=tgt), charges, o)
+    _, g = _target_gradient(dict(arrays, tgt_batched=tgt), charges, params,
+                            o)
     flat = jnp.zeros((tgt.shape[0] * tgt.shape[1], 3), g.dtype)
     tbar = flat.at[arrays["gather_index"]].set(u[:, None] * g)
     # phi is linear in the charges, so that cotangent is an exact transpose
     # (dead-code-eliminated under jit when the caller only needs d/d tgt).
     o_ad = dict(o, backend=ops.autodiff_backend(o["backend"]))
     _, q_vjp = jax.vjp(
-        lambda q: _execute_impl(dict(arrays, tgt_batched=tgt), q, **o_ad),
+        lambda q: _execute_impl(dict(arrays, tgt_batched=tgt), q, params,
+                                **o_ad),
         charges)
     (qbar,) = q_vjp(u)
     arrays_bar = jax.tree.map(_zero_cotangent, arrays)
-    return tbar.reshape(tgt.shape), arrays_bar, qbar
+    # Kernel parameters are treated as fixed constants of the force
+    # evaluation (their cotangent is zero by convention; differentiate
+    # through `potential_and_gradient` for parameter sensitivities).
+    params_bar = jax.tree.map(_zero_cotangent, params)
+    return tbar.reshape(tgt.shape), arrays_bar, qbar, params_bar
 
 
 _phi_from_targets.defvjp(_phi_fwd, _phi_bwd)
 
 
-def differentiable_execute(arrays, charges, *, degree, kernel,
-                           backend="auto", kahan=False, precompute="direct",
-                           approx_r2="diff"):
+def differentiable_execute(arrays, charges, params=None, *, degree, kernel,
+                           space=_FREE, backend="auto", kahan=False,
+                           precompute="direct", approx_r2="diff"):
     """`execute` with an efficient custom VJP w.r.t. target coordinates.
 
     Differentiable in `arrays["tgt_batched"]` (forces, target-position
@@ -384,14 +418,15 @@ def differentiable_execute(arrays, charges, *, degree, kernel,
     matching the treecode convention that the tree is rebuilt — not
     differentiated — when sources move.
     """
-    opts = (degree, kernel, backend, kahan, precompute, approx_r2)
-    return _phi_from_targets(opts, arrays["tgt_batched"], arrays, charges)
+    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2)
+    return _phi_from_targets(opts, arrays["tgt_batched"], arrays, charges,
+                             params)
 
 
 @functools.partial(jax.jit, static_argnames=_EXEC_OPTS)
-def potential_and_forces(arrays, charges, weights, *, degree, kernel,
-                         backend="auto", kahan=False, precompute="direct",
-                         approx_r2="diff"):
+def potential_and_forces(arrays, charges, weights, params=None, *, degree,
+                         kernel, space=_FREE, backend="auto", kahan=False,
+                         precompute="direct", approx_r2="diff"):
     """(phi, F) with F_i = -weights_i * d phi_i / d x_i, input order.
 
     With targets == sources and weights == charges this is the physical
@@ -400,10 +435,10 @@ def potential_and_forces(arrays, charges, weights, *, degree, kernel,
     doubling via the energy convention is not needed. Implemented as
     `jax.grad` of sum(weights * phi) through the custom-VJP executor.
     """
-    opts = (degree, kernel, backend, kahan, precompute, approx_r2)
+    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2)
 
     def weighted(t):
-        phi = _phi_from_targets(opts, t, arrays, charges)
+        phi = _phi_from_targets(opts, t, arrays, charges, params)
         return jnp.sum(phi * weights), phi
 
     (_, phi), wg = jax.value_and_grad(weighted, has_aux=True)(

@@ -15,6 +15,15 @@ choice). The traversal yields, per batch:
     (n+1)^3 >= N_C branch) is decomposed into its constituent leaves so the
     device pipeline only ever sees fixed-stride leaf blocks.
 
+Space-aware MAC (kernel protocol v2): under a `PeriodicBox`, R is the
+MINIMUM-IMAGE center distance, and a pair is accepted for approximation
+only when it is additionally *fold-free* (`Space.fold_margin` > 0): no
+coordinate of any target-source displacement in the pair can cross a
+half-box boundary, so the minimum image is one rigid shift of the whole
+cluster and the free-space barycentric error theory applies verbatim
+(DESIGN.md §5). Pairs that straddle a fold recurse deeper and bottom out
+in per-pair (exact) direct evaluation.
+
 The traversal is a vectorized level-synchronous frontier sweep over
 (batch, node) pairs — the NumPy analogue of the paper's per-batch recursive
 COMPUTEPOTENTIAL — and the ragged results are padded with -1 sentinels into
@@ -26,7 +35,17 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.space import FreeSpace
 from repro.core.tree import Batches, Tree
+
+# Drift-rate ratio between the fold margin and the theta margin (see
+# InteractionLists.mac_slack): per unit of particle drift the theta margin
+# shrinks by at most 2*sqrt(3)*(1 + theta), while the fold margin shrinks
+# by at most 4 (the center-to-center coordinate changes <= 2*drift and the
+# two per-dimension half-extents grow <= drift each). Scaling recorded
+# fold margins by 2*sqrt(3)*(1 + theta) / 4 lets the engine guard BOTH
+# with its single 2*sqrt(3)*(1 + theta)*drift < mac_slack trigger.
+_FOLD_DRIFT_RATE = 4.0
 
 
 @dataclasses.dataclass
@@ -38,13 +57,16 @@ class InteractionLists:
     # Diagnostics (EXPERIMENTS.md padding-overhead reporting):
     approx_counts: np.ndarray  # (B,)
     direct_counts: np.ndarray  # (B,)
-    # Min over approx pairs of theta*R - (r_B + r_C): how much every
-    # accepted MAC inequality holds by. The dynamics refit policy (see
-    # DESIGN.md §4) keeps these lists valid while particle drift since
-    # the build satisfies 2*sqrt(3)*(1 + theta)*drift < mac_slack:
-    # each box endpoint moves at most drift per coordinate, so each
-    # half-diagonal grows and each center moves by at most sqrt(3)*drift.
-    # +inf when there are no approx interactions.
+    # Min over approx pairs of the drift budget margin: how much every
+    # accepted inequality holds by, expressed in units that shrink at rate
+    # <= 2*sqrt(3)*(1 + theta) per unit of particle drift. Two margins
+    # contribute: theta*R - (r_B + r_C) (the MAC itself), and under a
+    # periodic space the fold margin scaled by
+    # 2*sqrt(3)*(1 + theta) / _FOLD_DRIFT_RATE (= 4; see the derivation
+    # above) so the engine's single trigger (DESIGN.md §4/§5) also guards
+    # image-shift validity. Each box endpoint moves at most drift per
+    # coordinate, so each half-diagonal grows and each center moves by at
+    # most sqrt(3)*drift. +inf when there are no approx interactions.
     mac_slack: float = float("inf")
 
     @property
@@ -72,11 +94,45 @@ def _pad_ragged(pairs_b: np.ndarray, pairs_v: np.ndarray, num_batches: int):
     return out, counts
 
 
+def batch_half_extents(batches: Batches) -> np.ndarray:
+    """(B, 3) per-dimension batch half-extents; pre-v2 `Batches` built
+    without them fall back to the (per-dim conservative) radius."""
+    if batches.half_extent is not None:
+        return batches.half_extent
+    return np.broadcast_to(batches.radius[:, None], batches.center.shape)
+
+
+def mac_accept(space, theta: float, d_center: np.ndarray,
+               rb: np.ndarray, rc: np.ndarray, spread_dim: np.ndarray):
+    """Vectorized space-aware MAC distance test.
+
+    Returns (dist_ok, fold_ok, theta_margin, scaled_fold_margin) for
+    center displacements `d_center` (pre-fold; min-imaged here), batch/
+    cluster half-diagonal radii rb/rc (the paper's Eq. 13 quantities) and
+    per-dimension spreads `spread_dim` (..., 3) = batch + cluster box
+    half-extents (the exact per-coordinate deviation bound the fold-free
+    condition needs). Shared by the local traversal below and the
+    cross-rank traversals in `repro.distributed.bltc`.
+    """
+    d = space.min_image(d_center)
+    R = np.linalg.norm(np.asarray(d), axis=-1)
+    theta_margin = theta * R - (rb + rc)
+    dist_ok = theta_margin > 0.0
+    # FreeSpace returns a scalar +inf; broadcast so masks line up.
+    fold = np.broadcast_to(
+        np.asarray(space.fold_margin(d_center, spread_dim), dtype=float),
+        np.shape(theta_margin))
+    fold_ok = fold > 0.0
+    scale = 2.0 * np.sqrt(3.0) * (1.0 + theta) / _FOLD_DRIFT_RATE
+    return dist_ok, fold_ok, theta_margin, fold * scale
+
+
 def build_interaction_lists(
     tree: Tree,
     batches: Batches,
     theta: float,
     degree: int,
+    space=FreeSpace(),
 ) -> InteractionLists:
     """Dual traversal of all batches against the source tree (Eq. 13)."""
     npts = (degree + 1) ** 3
@@ -89,32 +145,36 @@ def build_interaction_lists(
     # Frontier of candidate (batch, node) pairs, starting at the root.
     fb = np.arange(nb, dtype=np.int64)
     fn = np.zeros(nb, dtype=np.int64)
+    bhw = batch_half_extents(batches)
+    chw = 0.5 * (tree.hi - tree.lo)
     while fb.size:
         rb = batches.radius[fb]
         rc = tree.radius[fn]
-        R = np.linalg.norm(batches.center[fb] - tree.center[fn], axis=1)
+        d = batches.center[fb] - tree.center[fn]
         nc = tree.count[fn]
         leaf = tree.is_leaf[fn]
         # Guard R == 0 (a batch co-located with a cluster center): MAC fails.
-        dist_ok = (rb + rc) < theta * R
+        dist_ok, fold_ok, t_margin, f_margin = mac_accept(
+            space, theta, d, rb, rc, bhw[fb] + chw[fn])
         size_ok = npts < nc
-        mac = dist_ok & size_ok
+        mac = dist_ok & size_ok & fold_ok
 
         if np.any(mac):
             approx_b.append(fb[mac])
             approx_v.append(fn[mac])
-            slack = theta * R[mac] - (rb[mac] + rc[mac])
-            mac_slack = min(mac_slack, float(slack.min()))
+            mac_slack = min(mac_slack, float(t_margin[mac].min()))
+            fm = f_margin[mac]
+            fm = fm[np.isfinite(fm)]
+            if fm.size:
+                mac_slack = min(mac_slack, float(fm.min()))
 
-        # MAC failed on distance: leaves go direct, internals recurse.
-        dist_fail = ~mac & ~dist_ok
-        go_direct = dist_fail & leaf
-        recurse = dist_fail & ~leaf
-        # MAC failed only on cluster size ((n+1)^3 >= N_C): direct with the
-        # whole (possibly internal) cluster -> decomposed into leaves below.
-        small = ~mac & dist_ok
-        go_direct = go_direct | (small & leaf)
-        small_internal = small & ~leaf
+        # Not accepted. Leaves always go direct (per-pair evaluation is
+        # exact in any space); internal clusters recurse unless the MAC
+        # failed only on cluster size ((n+1)^3 >= N_C, fold irrelevant for
+        # direct work), in which case they decompose into their leaves.
+        go_direct = ~mac & leaf
+        small_internal = ~mac & ~leaf & dist_ok & ~size_ok
+        recurse = ~mac & ~leaf & ~small_internal
 
         if np.any(go_direct):
             direct_b.append(fb[go_direct])

@@ -1,0 +1,181 @@
+"""First-class geometry: the space the kernel G(x, y) lives in.
+
+The BLTC is kernel-independent — it only ever *evaluates* G — and it is
+equally space-independent: every pairwise path consumes a displacement
+x - y, and only the `Space` decides what that displacement is. Two spaces
+are provided:
+
+  - `FreeSpace`: the paper's setting. Displacements are plain Euclidean
+    differences; `wrap` is the identity.
+  - `PeriodicBox`: an orthorhombic box with the minimum-image convention.
+    Displacements are folded into [-L/2, L/2] per coordinate
+    (d - L * round(d / L)), and `wrap` maps coordinates into
+    [origin, origin + L). This opens the classic molten-salt / plasma
+    minimum-image Coulomb/Yukawa workloads.
+
+Spaces are frozen dataclasses (hashable), so they ride through `jax.jit`
+as static arguments exactly like `Kernel`s: box *dimensions* are compile
+constants, which is the right tradeoff for MD (a box resize is a new
+plan anyway — the tree, batches, and interaction lists all depend on it).
+
+All methods accept both NumPy arrays (the host tree/traversal phase) and
+JAX arrays or tracers (the device kernels); the array namespace is
+dispatched on the input type.
+
+Correctness note for the treecode under `PeriodicBox` (see DESIGN.md §5):
+barycentric interpolation of y -> G(min_image(x - y)) over a cluster box
+is only as smooth as the image choice is constant. The interaction-list
+traversal therefore accepts a batch-cluster pair for approximation only
+when the pair is *fold-free* — no coordinate of the batch-to-cluster
+displacement can cross a half-box boundary anywhere in the pair
+(`fold_margin`) — in which case min_image is a single rigid shift of the
+cluster and the free-space interpolation error theory applies verbatim.
+Pairs that straddle a fold recurse deeper and bottom out in direct
+(per-pair, exact) evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _xp(*arrays):
+    """NumPy for host arrays, jnp for device arrays / tracers."""
+    return np if all(isinstance(a, np.ndarray) for a in arrays) else jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FreeSpace:
+    """Unbounded Euclidean R^3 (the paper's setting)."""
+
+    periodic = False
+
+    def wrap(self, x):
+        """Canonical coordinates: the identity in free space."""
+        return x
+
+    def min_image(self, d):
+        """Displacement convention: plain difference in free space."""
+        return d
+
+    def displacement(self, x, y):
+        """x - y under this space's convention (broadcasts)."""
+        return x - y
+
+    def fold_margin(self, d_center, spread):
+        """Smoothness margin of a batch-cluster pair (+inf: no folds)."""
+        del d_center, spread
+        return np.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicBox:
+    """Orthorhombic periodic box with the minimum-image convention.
+
+    Attributes:
+      lengths: (Lx, Ly, Lz) box edge lengths, all > 0.
+      origin: lower corner of the primary cell; `wrap` maps coordinates
+        into [origin, origin + lengths) per dimension.
+    """
+
+    lengths: tuple
+    origin: tuple = (0.0, 0.0, 0.0)
+
+    periodic = True
+
+    def __post_init__(self):
+        L = tuple(float(v) for v in np.ravel(np.asarray(self.lengths)))
+        if len(L) == 1:
+            L = L * 3
+        if len(L) != 3 or any(v <= 0 for v in L):
+            raise ValueError(
+                f"PeriodicBox lengths must be 3 positive extents (or one "
+                f"cubic extent), got {self.lengths!r}")
+        o = tuple(float(v) for v in np.ravel(np.asarray(self.origin)))
+        if len(o) != 3:
+            raise ValueError(f"PeriodicBox origin must have 3 components, "
+                             f"got {self.origin!r}")
+        object.__setattr__(self, "lengths", L)
+        object.__setattr__(self, "origin", o)
+
+    def wrap(self, x):
+        """Map coordinates into the primary cell [origin, origin + L)."""
+        xp = _xp(x)
+        L = xp.asarray(self.lengths, dtype=x.dtype)
+        o = xp.asarray(self.origin, dtype=x.dtype)
+        return o + (x - o) % L
+
+    def min_image(self, d):
+        """Fold displacements into [-L/2, L/2] per coordinate.
+
+        Exact for ANY real input — in particular for unwrapped positions,
+        which is what lets the MD refit path integrate continuous
+        (unwrapped) coordinates between host rebuilds."""
+        xp = _xp(d)
+        L = xp.asarray(self.lengths, dtype=d.dtype)
+        return d - L * xp.round(d / L)
+
+    def displacement(self, x, y):
+        """Minimum-image x - y (broadcasts)."""
+        return self.min_image(x - y)
+
+    def fold_margin(self, d_center, spread):
+        """How far a batch-cluster pair is from a minimum-image fold.
+
+        Args:
+          d_center: (..., 3) center-to-center displacement (pre-fold).
+          spread: (..., 3) or (...) per-coordinate bound on the deviation
+            of any target-source displacement in the pair from
+            `d_center` (the sum of batch and cluster per-dimension box
+            half-extents is exact; r_B + r_C is a valid coarser bound).
+
+        Returns:
+          (...) min over dimensions of L_d/2 - |min_image(d_center)_d|
+          - spread_d. Positive means every pairwise displacement in the
+          pair folds with the SAME image shift, so G is a smooth
+          (rigidly shifted) free-space kernel over the cluster and the
+          barycentric approximation converges exactly as in free space.
+        """
+        xp = _xp(d_center) if isinstance(spread, (int, float)) \
+            else _xp(d_center, spread)
+        L = xp.asarray(self.lengths, dtype=d_center.dtype)
+        folded = xp.abs(self.min_image(d_center))
+        return xp.min(L / 2.0 - folded - spread, axis=-1)
+
+
+#: Shared free-space singleton: THE default `space=` everywhere. One
+#: identity matters because spaces are static jit-cache keys (equal
+#: frozen dataclasses would also hash together, but one instance makes
+#: that guarantee structural).
+FREE = FreeSpace()
+
+
+def resolve_space(space) -> "FreeSpace | PeriodicBox":
+    """Accept a Space instance or None (free space)."""
+    if space is None:
+        return FREE
+    if isinstance(space, (FreeSpace, PeriodicBox)):
+        return space
+    # Duck-typed third-party spaces: must provide the full protocol the
+    # executors consume — the four methods plus the `periodic` flag, and
+    # for periodic spaces the orthorhombic `lengths` the kernel bodies
+    # fold with (the Pallas path folds per dimension; a space that cannot
+    # express its fold as per-axis lengths cannot run on it).
+    for attr in ("wrap", "min_image", "displacement", "fold_margin"):
+        if not callable(getattr(space, attr, None)):
+            raise TypeError(
+                f"space must be FreeSpace, PeriodicBox or provide "
+                f"wrap/min_image/displacement/fold_margin; got "
+                f"{type(space).__name__} (missing {attr})")
+    periodic = getattr(space, "periodic", None)
+    if not isinstance(periodic, bool):
+        raise TypeError(
+            f"space {type(space).__name__} must define a boolean "
+            f"`periodic` attribute (the kernel paths dispatch on it)")
+    if periodic and len(getattr(space, "lengths", ())) != 3:
+        raise TypeError(
+            f"periodic space {type(space).__name__} must expose 3 "
+            f"`lengths` (per-axis box extents) for the kernel fold")
+    return space

@@ -74,7 +74,15 @@ class Tree:
 
 
 def build_tree(points: np.ndarray, leaf_size: int) -> Tree:
-    """Build the source tree (or, with leaf_size=N_B, the target batches)."""
+    """Build the source tree (or, with leaf_size=N_B, the target batches).
+
+    Space convention: periodic plans build their trees on WRAPPED
+    coordinates — the plan builders (`eval.prepare_plan`,
+    `ShardedPlan.build`) wrap before calling in, so midpoint bisection
+    splits boundary-straddling clusters by construction and every box
+    stays inside the cell. Image folding is the kernels' job
+    (minimum-image displacements), never the tree's.
+    """
     points = np.asarray(points)
     n = points.shape[0]
     if n == 0:
@@ -190,6 +198,10 @@ class Batches:
     start: np.ndarray   # (B,)
     count: np.ndarray   # (B,)
     perm: np.ndarray    # (N,)
+    # Per-dimension box half-extents (B, 3): exact per-coordinate target
+    # spread, used by the periodic fold-free MAC (radius, the
+    # half-diagonal, would be sqrt(3)x too conservative per dimension).
+    half_extent: np.ndarray = None
 
     @property
     def num_batches(self) -> int:
@@ -201,10 +213,12 @@ class Batches:
 
 
 def build_batches(points: np.ndarray, batch_size: int) -> Batches:
-    """Partition targets into batches using the same routine as the tree."""
+    """Partition targets into batches using the same routine as the tree
+    (same wrapped-coordinate convention)."""
     t = build_tree(points, batch_size)
     leaves = t.leaf_ids
     return Batches(
         center=t.center[leaves], radius=t.radius[leaves],
         start=t.start[leaves], count=t.count[leaves], perm=t.perm,
+        half_extent=0.5 * (t.hi[leaves] - t.lo[leaves]),
     )

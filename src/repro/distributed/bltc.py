@@ -15,6 +15,21 @@ plus the two collectives. Per-rank structures are padded to common shapes
 exactly zero. With targets == sources (the paper's test setting) the result
 matches the single-device treecode to the same MAC error tolerance.
 
+Space/params protocol v2: the cross-rank MAC runs on MINIMUM-IMAGE center
+distances with the fold-free acceptance condition under a `PeriodicBox`
+(RCB slabs tile the wrapped cell; a boundary slab's neighbors across the
+cell edge are reached through the same remote lists as its geometric
+neighbors), and kernel parameter values ride into the SPMD program as a
+replicated traced argument — parameter sweeps reuse the compiled
+executable.
+
+Charges are staged on DEVICE through the plan's rank tables
+(`rank_gather` / `input_pos` — the same tables the dynamics adapter uses),
+not host-side; `TreecodeConfig.donate_charges` donates the staged
+(P, per_pad) slab to the SPMD executable, whose phi output has the
+identical shape and aliases it — iterative charge loops run
+allocation-free.
+
 `ShardedPlan` implements the solver-wide execution-plan protocol
 (`execute` / `potential_and_forces` / `stats` / `replan`); build one via
 ``TreecodeSolver.plan(points, nranks=P)``. Arbitrary N is supported: RCB
@@ -33,7 +48,8 @@ import numpy as np
 from repro import compat
 from repro.core import cheby
 from repro.core import eval as ceval
-from repro.core.api import TreecodeConfig
+from repro.core.api import TreecodeConfig, lift_params
+from repro.core.interaction import batch_half_extents, mac_accept
 from repro.core.potentials import Kernel
 from repro.core.tree import Tree
 from repro.distributed.rcb import RCB, rcb_partition
@@ -45,14 +61,45 @@ def _pad_to(a: np.ndarray, shape: Tuple[int, ...], value=0) -> np.ndarray:
     return np.pad(a, pads, constant_values=value)
 
 
+def _traverse_remote(cfg: TreecodeConfig, tree: Tree, bc, br, bhw):
+    """Traverse one remote tree for one batch under the space-aware MAC.
+
+    Yields ("approx", node, theta_margin, scaled_fold_margin) and
+    ("direct", leaf_slots) events. Shared by the remote-approx and
+    remote-direct (halo) list builders so both apply identical
+    acceptance (min-image distances, fold-free approximation)."""
+    npts = (cfg.degree + 1) ** 3
+    space = cfg.space
+    stack = [0]
+    while stack:
+        node = stack.pop()
+        d = bc - tree.center[node]
+        chw = 0.5 * (tree.hi[node] - tree.lo[node])
+        dist_ok, fold_ok, t_margin, f_margin = mac_accept(
+            space, cfg.theta, d, br, tree.radius[node], bhw + chw)
+        if dist_ok and fold_ok and npts < tree.count[node]:
+            yield ("approx", node, float(t_margin), float(f_margin))
+        elif not tree.is_leaf[node] and not (dist_ok
+                                             and npts >= tree.count[node]):
+            stack.extend(int(k) for k in tree.children[node] if k >= 0)
+        else:  # leaf, or small-but-separated cluster -> its leaves, direct
+            if tree.is_leaf[node]:
+                slots = [int(tree.leaf_index[node])]
+            else:
+                slots = tree.leaves_in_range(
+                    int(tree.start[node]),
+                    int(tree.count[node])).tolist()
+            yield ("direct", slots)
+
+
 def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
     """Per-rank remote interaction lists by traversing other ranks' trees
     with the same uniform MAC: approx hits -> gathered-cluster indices
     (s * m_pad + node), direct hits -> halo leaves per (src, dst) pair.
-    Also returns the min MAC slack (theta*R - (r_B + r_C)) over remote
-    approx accepts — the cross-rank part of the refit drift budget."""
+    Also returns the min MAC slack (theta margin and, under a periodic
+    space, the scaled fold margin) over remote approx accepts — the
+    cross-rank part of the refit drift budget."""
     p = rcb.nranks
-    npts = (cfg.degree + 1) ** 3
     approx = [[] for _ in range(p)]            # (batch, flat cluster idx)
     halo_need: Dict[Tuple[int, int], set] = {}  # (src s, dst r) -> leaf slots
     mac_slack = float("inf")
@@ -63,31 +110,18 @@ def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
             if s == r:
                 continue
             tree: Tree = plans[s].tree
+            bhw = batch_half_extents(batches)
             for b in range(batches.num_batches):
-                bc = batches.center[b]
-                br = batches.radius[b]
-                stack = [0]
-                while stack:
-                    node = stack.pop()
-                    dist = np.linalg.norm(bc - tree.center[node])
-                    ok = (br + tree.radius[node]) < cfg.theta * dist
-                    if ok and npts < tree.count[node]:
+                for ev in _traverse_remote(cfg, tree, batches.center[b],
+                                           batches.radius[b], bhw[b]):
+                    if ev[0] == "approx":
+                        _, node, t_margin, f_margin = ev
                         approx[r].append((b, s * m_pad + node))
-                        mac_slack = min(
-                            mac_slack,
-                            float(cfg.theta * dist
-                                  - (br + tree.radius[node])))
-                    elif not ok and not tree.is_leaf[node]:
-                        stack.extend(
-                            int(k) for k in tree.children[node] if k >= 0)
-                    else:  # leaf, or small cluster -> its leaves, direct
-                        if tree.is_leaf[node]:
-                            slots = [int(tree.leaf_index[node])]
-                        else:
-                            slots = tree.leaves_in_range(
-                                int(tree.start[node]),
-                                int(tree.count[node])).tolist()
-                        halo_need.setdefault((s, r), set()).update(slots)
+                        mac_slack = min(mac_slack, t_margin)
+                        if np.isfinite(f_margin):
+                            mac_slack = min(mac_slack, f_margin)
+                    else:
+                        halo_need.setdefault((s, r), set()).update(ev[1])
     return approx, halo_need, mac_slack
 
 
@@ -107,12 +141,23 @@ class ShardedPlan:
     num_points: int
     padding_waste: float                # mean over per-rank local plans
     dtype: np.dtype
+    # Device rank tables (shared with the dynamics adapter):
+    #   rank_gather: (P, per_pad) input particle index per slab slot, -1 pad
+    #   input_pos:   (N,) flat (rank * per_pad + slot) of each input index
+    rank_gather: Optional[jnp.ndarray] = None
+    input_pos: Optional[jnp.ndarray] = None
+    # Traced kernel parameter defaults (lifted from the kernel; override
+    # per call via execute(kernel_params=...)).
+    kernel_params: object = ()
     # Min MAC slack over local AND remote approx lists: the drift budget
     # within which a topology-preserving refit keeps every list valid.
     mac_slack: float = float("inf")
     mesh: Optional[object] = None
     axis: str = "data"
     _fn: Optional[object] = dataclasses.field(default=None, repr=False)
+    _fn_donating: Optional[object] = dataclasses.field(default=None,
+                                                       repr=False)
+    _stage: Optional[object] = dataclasses.field(default=None, repr=False)
 
     # -- protocol aliases
     @property
@@ -123,6 +168,10 @@ class ShardedPlan:
     def num_sources(self) -> int:
         return self.num_points
 
+    @property
+    def space(self):
+        return self.config.space
+
     # ------------------------------------------------------------------
     # host-side construction
     # ------------------------------------------------------------------
@@ -131,7 +180,7 @@ class ShardedPlan:
     def build(cls, points: np.ndarray, cfg: TreecodeConfig, nranks: int,
               *, mesh=None, axis: str = "data",
               kernel: Optional[Kernel] = None) -> "ShardedPlan":
-        points = np.asarray(points)
+        points = np.asarray(cfg.space.wrap(np.asarray(points)))
         dtype = points.dtype
         rcb = rcb_partition(points, nranks)
         counts = rcb.counts()
@@ -143,7 +192,7 @@ class ShardedPlan:
             plans.append(ceval.prepare_plan(
                 slab, slab, theta=cfg.theta, degree=cfg.degree,
                 leaf_size=cfg.leaf_size,
-                batch_size=cfg.resolved_batch_size()))
+                batch_size=cfg.resolved_batch_size(), space=cfg.space))
 
         # ---- common padded shapes across ranks
         def amax(f):
@@ -191,6 +240,8 @@ class ShardedPlan:
             base += hp
 
         # remote direct lists: batches -> received halo leaf slots
+        # (re-traversal with the IDENTICAL space-aware MAC, so direct
+        # hits line up exactly with the halo_need sets above)
         remote_direct = [[] for _ in range(nranks)]
         for r in range(nranks):
             batches = plans[r].batches
@@ -198,27 +249,15 @@ class ShardedPlan:
                 if s == r or (s, r) not in halo_slot:
                     continue
                 tree = plans[s].tree
-                npts = (cfg.degree + 1) ** 3
+                bhw = batch_half_extents(batches)
                 for b in range(batches.num_batches):
-                    bc, br = batches.center[b], batches.radius[b]
-                    stack = [0]
-                    while stack:
-                        node = stack.pop()
-                        dist = np.linalg.norm(bc - tree.center[node])
-                        ok = (br + tree.radius[node]) < cfg.theta * dist
-                        if ok and npts < tree.count[node]:
+                    for ev in _traverse_remote(cfg, tree,
+                                               batches.center[b],
+                                               batches.radius[b],
+                                               bhw[b]):
+                        if ev[0] != "direct":
                             continue
-                        if not ok and not tree.is_leaf[node]:
-                            stack.extend(int(k) for k in tree.children[node]
-                                         if k >= 0)
-                            continue
-                        if tree.is_leaf[node]:
-                            slots = [int(tree.leaf_index[node])]
-                        else:
-                            slots = tree.leaves_in_range(
-                                int(tree.start[node]),
-                                int(tree.count[node])).tolist()
-                        for sl in slots:
+                        for sl in ev[1]:
                             remote_direct[r].append(
                                 (b, halo_slot[(s, r)][sl]))
 
@@ -305,34 +344,64 @@ class ShardedPlan:
             arrays[f"halo_send_{i}"] = tbl.astype(np.int32)
 
         arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+
+        # ---- device rank tables (charge staging + dynamics adapter)
+        rank_gather = np.full((nranks, per_pad), -1, np.int64)
+        input_pos = np.empty(points.shape[0], np.int64)
+        for r in range(nranks):
+            idx = rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]
+            rank_gather[r, :len(idx)] = idx
+            input_pos[idx] = r * per_pad + np.arange(len(idx))
+
         waste = float(np.mean([pl.padding_waste for pl in plans]))
-        return cls(config=cfg, kernel=kernel or cfg.make_kernel(),
+        kernel = kernel or cfg.make_kernel()
+        return cls(config=cfg, kernel=kernel,
                    arrays=arrays, perm_rounds=perm_rounds, depth=depth,
                    nranks=nranks, rcb=rcb, scratch_node=m_nodes,
                    per_pad=per_pad, num_points=points.shape[0],
                    padding_waste=waste, dtype=np.dtype(dtype),
+                   rank_gather=jnp.asarray(rank_gather, jnp.int32),
+                   input_pos=jnp.asarray(input_pos, jnp.int32),
+                   kernel_params=lift_params(kernel, np.dtype(dtype)),
                    mesh=mesh, axis=axis, mac_slack=mac_slack)
 
     # ------------------------------------------------------------------
     # device execution
     # ------------------------------------------------------------------
 
-    def _spmd_fn(self):
-        """Jitted shard_map executable (arrays, q_rank) -> phi_rank, built
-        once per plan and reused across charge vectors."""
+    def _spmd_fn(self, donate: bool = False):
+        """Jitted shard_map executable (arrays, q_rank, params) ->
+        phi_rank, built once per plan and reused across charge vectors
+        AND kernel parameter values (params are traced, replicated).
+
+        `donate=True` donates the staged charge slab to the executable —
+        phi_rank has the identical (P, per_pad) shape/dtype, so XLA
+        aliases the output into it (the `donate_charges` contract for
+        iterative loops). The forces path must NOT use the donating
+        variant: it reuses one slab across three JVP evaluations."""
+        if donate:
+            if self._fn_donating is None:
+                self._fn_donating = self._build_spmd_fn(donate=True)
+            return self._fn_donating
         if self._fn is not None:
             return self._fn
-        kernel, degree, p = self.kernel, self.config.degree, self.nranks
+        self._fn = self._build_spmd_fn(donate=False)
+        return self._fn
+
+    def _build_spmd_fn(self, donate: bool):
+        degree, p = self.config.degree, self.nranks
         depth, axis = self.depth, self.axis
         perm_rounds = self.perm_rounds
         cfg = self.config
+        kernel = self.kernel.stripped()
+        space = cfg.space
         backend = "xla" if cfg.backend == "auto" else cfg.backend
         mesh = self.mesh
         if mesh is None:
             mesh = compat.make_mesh((p,), (axis,))
             self.mesh = mesh
 
-        def spmd(args, q):
+        def spmd(args, q, params):
             a = {k: v[0] for k, v in args.items()}  # strip sharded lead dim
             q_sorted = q[0][a["charges_perm"]]
 
@@ -353,12 +422,13 @@ class ShardedPlan:
             grids = cheby.cluster_grid(lo, hi, degree)
             tgt = a["tgt_batched"]
             phi = ops.batch_cluster_eval(a["approx_idx"], tgt, grids, qhat,
-                                         kernel=kernel, backend=backend)
+                                         params, kernel=kernel, space=space,
+                                         backend=backend)
             leaf_pts, leaf_q = ceval._gathered(
                 a["src_sorted"], q_sorted, a["leaf_gather"])
             phi += ops.batch_cluster_eval(a["direct_idx"], tgt, leaf_pts,
-                                          leaf_q, kernel=kernel,
-                                          backend=backend)
+                                          leaf_q, params, kernel=kernel,
+                                          space=space, backend=backend)
 
             # LET phase 1: gather every rank's tree metadata + q_hat
             g_lo = jax.lax.all_gather(lo, axis)        # (P, M, 3)
@@ -368,8 +438,8 @@ class ShardedPlan:
                                          g_hi.reshape(-1, 3), degree)
             phi += ops.batch_cluster_eval(
                 a["remote_approx_idx"], tgt, g_grids,
-                g_qhat.reshape(-1, (degree + 1) ** 3),
-                kernel=kernel, backend=backend)
+                g_qhat.reshape(-1, (degree + 1) ** 3), params,
+                kernel=kernel, space=space, backend=backend)
 
             # LET phase 2: halo leaf exchange (one permute per rank offset)
             recv_pts, recv_q = [], []
@@ -387,59 +457,88 @@ class ShardedPlan:
                 halo_pts = jnp.concatenate(recv_pts, axis=0)
                 halo_q = jnp.concatenate(recv_q, axis=0)
                 phi += ops.batch_cluster_eval(
-                    a["remote_direct_idx"], tgt, halo_pts, halo_q,
-                    kernel=kernel, backend=backend)
+                    a["remote_direct_idx"], tgt, halo_pts, halo_q, params,
+                    kernel=kernel, space=space, backend=backend)
 
             out = phi.reshape(-1)[a["gather_index"]]
             return out[None]
 
         spec = jax.sharding.PartitionSpec(self.axis)
+        rep = jax.sharding.PartitionSpec()
         specs = {k: spec for k in self.arrays}
-        self._fn = jax.jit(compat.shard_map(
-            spmd, mesh=mesh, in_specs=(specs, spec), out_specs=spec))
-        return self._fn
+        param_specs = jax.tree.map(lambda _: rep, self.kernel_params)
+        return jax.jit(
+            compat.shard_map(spmd, mesh=mesh,
+                             in_specs=(specs, spec, param_specs),
+                             out_specs=spec),
+            donate_argnums=(1,) if donate else ())
 
-    def _rank_charges(self, charges) -> np.ndarray:
-        """(P, per_pad) rank-major charge slabs, zero-padded."""
-        charges = np.asarray(charges, self.dtype)
-        q_rank = np.zeros((self.nranks, self.per_pad), self.dtype)
-        starts = self.rcb.starts
-        for r in range(self.nranks):
-            idx = self.rcb.perm[starts[r]:starts[r + 1]]
-            q_rank[r, :len(idx)] = charges[idx]
-        return q_rank
+    def _stage_fn(self):
+        """Jitted device charge staging (N,) -> (P, per_pad) rank slabs
+        through the rank tables. The (N,) input cannot alias the padded
+        slab output, so no donation is requested here; `donate_charges`
+        instead donates the STAGED slab to the SPMD executable (see
+        `_spmd_fn`), whose phi output has the identical shape."""
+        if self._stage is not None:
+            return self._stage
+        rank_gather = self.rank_gather
 
-    def _unrank(self, per_rank: np.ndarray) -> np.ndarray:
-        """Scatter (P, per_pad, ...) rank-major results to input order."""
-        starts = self.rcb.starts
-        out = np.empty((self.num_points,) + per_rank.shape[2:],
-                       per_rank.dtype)
-        for r in range(self.nranks):
-            idx = self.rcb.perm[starts[r]:starts[r + 1]]
-            out[idx] = per_rank[r, :len(idx)]
-        return out
+        def stage(q):
+            valid = rank_gather >= 0
+            return jnp.where(valid, q[jnp.maximum(rank_gather, 0)], 0.0)
 
-    def execute(self, charges) -> jnp.ndarray:
+        self._stage = jax.jit(stage)
+        return self._stage
+
+    def _rank_charges(self, charges) -> jnp.ndarray:
+        """(P, per_pad) rank-major charge slabs, zero-padded, ON DEVICE."""
+        q = jnp.asarray(charges)
+        if q.dtype != self.dtype:
+            q = q.astype(self.dtype)
+        return self._stage_fn()(q)
+
+    def _params(self, kernel_params):
+        if kernel_params is None:
+            return self.kernel_params
+        p = self.kernel.normalize_params(kernel_params)
+        return jax.tree.map(lambda v: jnp.asarray(v, dtype=self.dtype), p)
+
+    def _unrank(self, per_rank: jnp.ndarray) -> jnp.ndarray:
+        """Gather (P, per_pad, ...) rank-major results to input order
+        (a device gather through `input_pos` — no host round trip)."""
+        flat = per_rank.reshape((-1,) + per_rank.shape[2:])
+        return flat[self.input_pos]
+
+    def execute(self, charges, kernel_params=None) -> jnp.ndarray:
         """Potentials at all points (input order), SPMD over the mesh.
 
-        Charges are staged host-side into rank-major padded slabs, so
-        `TreecodeConfig.donate_charges` does not apply here (the
-        single-device plan honors it)."""
-        fn = self._spmd_fn()
-        phi_rank = fn(self.arrays, jnp.asarray(self._rank_charges(charges)))
-        return jnp.asarray(self._unrank(np.asarray(phi_rank)))
+        Charges are staged into rank-major padded slabs on device via the
+        plan's rank tables; with `donate_charges` the staged slab is
+        donated to the SPMD executable (phi aliases it, so iterative
+        loops run allocation-free). `kernel_params` overrides the kernel
+        parameter values for this call without recompiling."""
+        fn = self._spmd_fn(donate=self.config.donate_charges)
+        phi_rank = fn(self.arrays, self._rank_charges(charges),
+                      self._params(kernel_params))
+        return self._unrank(phi_rank)
 
-    def potential_and_forces(self, charges, weights=None):
+    def potential_and_forces(self, charges, weights=None,
+                             kernel_params=None):
         """(phi, F): forces from three forward JVPs through the SPMD
         program w.r.t. the target slab (collectives are linear, so the
         tangents flow through all_gather/ppermute exactly)."""
         fn = self._spmd_fn()
-        q_rank = jnp.asarray(self._rank_charges(charges))
+        # weights first: with weights=None they default to the charges,
+        # which must be read before anything could consume their buffer.
+        w = jnp.asarray(charges if weights is None else weights,
+                        self.dtype)
+        q_rank = self._rank_charges(charges)
+        params = self._params(kernel_params)
         rest = {k: v for k, v in self.arrays.items() if k != "tgt_batched"}
         tgt = self.arrays["tgt_batched"]
 
         def phi_of(t):
-            return fn(dict(rest, tgt_batched=t), q_rank)
+            return fn(dict(rest, tgt_batched=t), q_rank, params)
 
         phi_rank, grads = None, []
         for d in range(3):
@@ -447,10 +546,9 @@ class ShardedPlan:
             phi_rank, dphi = jax.jvp(phi_of, (tgt,), (tangent,))
             grads.append(dphi)
         g_rank = jnp.stack(grads, axis=-1)          # (P, per_pad, 3)
-        phi = self._unrank(np.asarray(phi_rank))
-        g = self._unrank(np.asarray(g_rank))
-        w = np.asarray(charges if weights is None else weights, self.dtype)
-        return jnp.asarray(phi), jnp.asarray(-w[:, None] * g)
+        phi = self._unrank(phi_rank)
+        g = self._unrank(g_rank)
+        return phi, -w[:, None] * g
 
     def stats(self) -> dict:
         counts = self.rcb.counts()
@@ -464,6 +562,7 @@ class ShardedPlan:
             halo_rounds=len(self.perm_rounds),
             padding_waste=self.padding_waste,
             dtype=str(self.dtype),
+            space=repr(self.config.space),
             mac_slack=self.mac_slack,
         )
 

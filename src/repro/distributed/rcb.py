@@ -30,6 +30,13 @@ class RCB:
 
 
 def rcb_partition(points: np.ndarray, nranks: int) -> RCB:
+    """Partition into P contiguous slabs.
+
+    Space convention: periodic callers (`ShardedPlan.build`) pass WRAPPED
+    coordinates, so slabs tile the primary cell — a particle's rank
+    follows its canonical image, and cross-boundary interactions are the
+    halo exchange's job, driven by the minimum-image remote MAC."""
+    points = np.asarray(points)
     n = points.shape[0]
     if nranks < 1:
         raise ValueError(f"nranks must be >= 1, got {nranks}")

@@ -119,6 +119,13 @@ class Simulation:
 
         self.integrator = get_integrator(integrator,
                                          **(integrator_params or {}))
+        # The space the plan was built in. Periodic boxes: integrate
+        # UNWRAPPED coordinates between host rebuilds (minimum-image
+        # kernels make out-of-cell coordinates exact, and continuous
+        # positions keep refitted cluster boxes tight); wrap back into
+        # the primary cell at every rebuild, where the fresh tree splits
+        # boundary-straddling clusters by construction.
+        self.space = self.plan.config.space
         self.state: MDState = initial_state(
             self.adapter.positions(), velocities, seed=seed, dtype=dtype)
         self._arrays = self.adapter.arrays
@@ -155,10 +162,14 @@ class Simulation:
 
     def _make_executables(self):
         integ, dt, inv_m = self.integrator, self.dt, self._inv_m
+        space = self.space
 
         def advance(state, x_ref):
             s1 = integ.pre(state, dt, inv_m)
-            return s1, max_drift(s1.x, x_ref)
+            # Minimum-image drift under periodic spaces: a particle
+            # wrapped at the last rebuild must not register a spurious
+            # box-length displacement.
+            return s1, max_drift(s1.x, x_ref, space)
 
         self._advance = jax.jit(advance)
         self._make_force_closures()
@@ -229,6 +240,11 @@ class Simulation:
         do_rebuild = (policy == "always" or by_drift or by_interval)
 
         if do_rebuild:
+            # Wrap positions into the primary cell at rebuild time (a
+            # per-particle lattice shift: velocities, forces and energies
+            # are all minimum-image invariant, so the trajectory is
+            # unchanged while coordinates stay bounded).
+            s1 = s1._replace(x=self.space.wrap(s1.x))
             invalidated = self.adapter.rebuild(np.asarray(s1.x))
             if invalidated:
                 if self.adapter.recloses_on_rebuild:
@@ -306,6 +322,7 @@ class Simulation:
             rebuild_policy=self.rebuild_policy,
             integrator=self.integrator.name,
             dt=self.dt,
+            space=repr(self.space),
             mac_slack=self._slack,
             last_drift=self._last_drift,
             drift_budget=(self.drift_safety * self._slack
@@ -331,6 +348,7 @@ class Simulation:
             self.state._asdict(), step=step)
         self.state = MDState(**{k: jnp.asarray(v)
                                 for k, v in tree.items()})
+        self.state = self.state._replace(x=self.space.wrap(self.state.x))
         invalidated = self.adapter.rebuild(np.asarray(self.state.x))
         if invalidated:
             if self.adapter.recloses_on_rebuild:

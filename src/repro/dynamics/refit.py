@@ -115,9 +115,17 @@ def refit_sharded_arrays(arrays: dict, io: dict, x: jnp.ndarray,
                 tgt_batched=flat[:, :-1].reshape(-1, b, nb, 3))
 
 
-def max_drift(x: jnp.ndarray, x_ref: jnp.ndarray) -> jnp.ndarray:
-    """Max particle displacement since the reference build (jit-safe)."""
-    return jnp.sqrt(jnp.max(jnp.sum((x - x_ref) ** 2, axis=-1)))
+def max_drift(x: jnp.ndarray, x_ref: jnp.ndarray,
+              space=None) -> jnp.ndarray:
+    """Max particle displacement since the reference build (jit-safe).
+
+    With a periodic `space` the displacement is folded to the minimum
+    image, so a particle wrapped across the cell boundary at the last
+    rebuild does not register a spurious box-length drift."""
+    d = x - x_ref
+    if space is not None:
+        d = space.min_image(d)
+    return jnp.sqrt(jnp.max(jnp.sum(d ** 2, axis=-1)))
 
 
 # ---------------------------------------------------------------------------
@@ -194,10 +202,11 @@ class SingleDeviceAdapter(PlanAdapter):
 
     def force_fn(self) -> Callable:
         opts = self.plan.config.exec_opts(self.plan.kernel)
+        params = self.plan.kernel_params
 
         def force(arrays, x, q, w):
             del x  # already refitted into arrays
-            return _eval.potential_and_forces(arrays, q, w, **opts)
+            return _eval.potential_and_forces(arrays, q, w, params, **opts)
 
         return force
 
@@ -232,17 +241,11 @@ class ShardedAdapter(PlanAdapter):
         return out
 
     def _bind(self):
+        # The plan now builds its own device rank tables (they also drive
+        # its device-side charge staging); the adapter shares them.
         plan = self.plan
-        rcb = plan.rcb
-        p, per_pad = plan.nranks, plan.per_pad
-        rank_gather = np.full((p, per_pad), -1, np.int64)
-        input_pos = np.empty(plan.num_points, np.int64)
-        for r in range(p):
-            idx = rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]
-            rank_gather[r, :len(idx)] = idx
-            input_pos[idx] = r * per_pad + np.arange(len(idx))
-        self.io = dict(rank_gather=jnp.asarray(rank_gather, jnp.int32),
-                       input_pos=jnp.asarray(input_pos, jnp.int32))
+        self.io = dict(rank_gather=plan.rank_gather,
+                       input_pos=plan.input_pos)
         self._fn = plan._spmd_fn()
 
     @property
@@ -264,6 +267,7 @@ class ShardedAdapter(PlanAdapter):
     def force_fn(self) -> Callable:
         fn, io = self._fn, self.io
         dtype = self.plan.dtype
+        params = self.plan.kernel_params
 
         def force(arrays, x, q, w):
             rank_gather = io["rank_gather"]
@@ -274,7 +278,7 @@ class ShardedAdapter(PlanAdapter):
             rest = {k: v for k, v in arrays.items() if k != "tgt_batched"}
 
             def phi_of(t):
-                return fn(dict(rest, tgt_batched=t), q_rank)
+                return fn(dict(rest, tgt_batched=t), q_rank, params)
 
             phi_rank, grads = None, []
             for d in range(3):

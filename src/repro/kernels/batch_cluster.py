@@ -19,6 +19,15 @@ TPU mapping (vs. the paper's CUDA/OpenACC mapping):
   - pairwise kernel evaluations run on the VPU over a (tile, m) block; the
     charge contraction is a matvec on the MXU.
 
+Space/params protocol v2: kernel parameters arrive as a SECOND
+scalar-prefetch operand — a flat (1, P) vector in SMEM, rebuilt into the
+kernel's params pytree by the static `pspec` — so parameter sweeps reuse
+the compiled kernel (values are data, not code). The `space` is static
+(box lengths are compile constants): under a `PeriodicBox` the pairwise
+displacements are folded to the minimum image on the VPU, and the MXU
+matmul form of r^2 (which cannot express the fold) falls back to the
+difference form.
+
 Layout: coordinates are coordinate-major (..., 3, P) so the particle axis
 is the TPU lane dimension.
 """
@@ -31,15 +40,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.potentials import Kernel
+from repro.core.potentials import Kernel, unpack_params
+from repro.core.space import FREE as _FREE
 
 
-def _pair_r2(tx, sy, mode: str):
+def _min_image_1d(d, length):
+    return d - length * jnp.round(d * (1.0 / length))
+
+
+def _pair_r2(tx, sy, mode: str, space=_FREE):
     """Pairwise squared distances, (NT, m). mode='diff' subtracts on the
     VPU (cancellation-free, used for the direct kernel); mode='matmul'
     uses |x|^2+|y|^2-2x.y so the cross term runs on the MXU (beyond-paper
-    optimization, used for the MAC-separated approximation kernel)."""
-    if mode == "matmul":
+    optimization, used for the MAC-separated approximation kernel).
+    Periodic spaces always take the difference form (the minimum-image
+    fold is elementwise) with per-dimension folding."""
+    if mode == "matmul" and not space.periodic:
         xy = jax.lax.dot_general(tx, sy, (((0,), (0,)), ((), ())),
                                  preferred_element_type=tx.dtype)
         x2 = jnp.sum(tx * tx, axis=0)[:, None]
@@ -48,11 +64,23 @@ def _pair_r2(tx, sy, mode: str):
     d0 = tx[0][:, None] - sy[0][None, :]
     d1 = tx[1][:, None] - sy[1][None, :]
     d2 = tx[2][:, None] - sy[2][None, :]
+    if space.periodic:
+        lx, ly, lz = space.lengths
+        d0 = _min_image_1d(d0, lx)
+        d1 = _min_image_1d(d1, ly)
+        d2 = _min_image_1d(d2, lz)
     return d0 * d0 + d1 * d1 + d2 * d2
 
 
-def _body(idx_ref, tgt_ref, src_ref, q_ref, out_ref, *, kernel: Kernel,
-          r2_mode: str = "diff"):
+def _read_params(par_ref, pspec):
+    """Rebuild the params pytree from the SMEM prefetch vector."""
+    if pspec is None:
+        return None
+    return unpack_params(lambda i: par_ref[0, i], pspec)
+
+
+def _body(idx_ref, par_ref, tgt_ref, src_ref, q_ref, out_ref, *,
+          kernel: Kernel, r2_mode: str = "diff", space=_FREE, pspec=None):
     b = pl.program_id(0)
     s = pl.program_id(2)
 
@@ -62,9 +90,9 @@ def _body(idx_ref, tgt_ref, src_ref, q_ref, out_ref, *, kernel: Kernel,
 
     tx = tgt_ref[0]  # (3, NT)
     sy = src_ref[0]  # (3, m)
-    r2 = _pair_r2(tx, sy, r2_mode)
-    g = kernel(r2)                             # masked at r2 == 0
-    pot = jax.lax.dot_general(                 # (NT,) charge contraction
+    r2 = _pair_r2(tx, sy, r2_mode, space)
+    g = kernel(r2, _read_params(par_ref, pspec))  # masked at r2 == 0
+    pot = jax.lax.dot_general(                    # (NT,) charge contraction
         g, q_ref[0],
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=out_ref.dtype,
@@ -73,8 +101,9 @@ def _body(idx_ref, tgt_ref, src_ref, q_ref, out_ref, *, kernel: Kernel,
     out_ref[0] += valid * pot
 
 
-def _body_kahan(idx_ref, tgt_ref, src_ref, q_ref, out_ref, comp_ref, *,
-                kernel: Kernel, r2_mode: str = "diff"):
+def _body_kahan(idx_ref, par_ref, tgt_ref, src_ref, q_ref, out_ref,
+                comp_ref, *, kernel: Kernel, r2_mode: str = "diff",
+                space=_FREE, pspec=None):
     # Compensated (Kahan) accumulation across list slots: pushes the f32
     # floor down ~1 digit for long interaction lists (beyond-paper accuracy
     # knob; see the hardware-adaptation table in DESIGN.md).
@@ -88,7 +117,8 @@ def _body_kahan(idx_ref, tgt_ref, src_ref, q_ref, out_ref, comp_ref, *,
 
     tx = tgt_ref[0]
     sy = src_ref[0]
-    g = kernel(_pair_r2(tx, sy, r2_mode))
+    g = kernel(_pair_r2(tx, sy, r2_mode, space),
+               _read_params(par_ref, pspec))
     pot = jax.lax.dot_general(
         g, q_ref[0], dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=out_ref.dtype,
@@ -102,11 +132,14 @@ def _body_kahan(idx_ref, tgt_ref, src_ref, q_ref, out_ref, comp_ref, *,
 
 def batch_cluster_eval_pallas(
     idx: jnp.ndarray,      # (B, S) int32 cluster ids, -1 = empty
+    par: jnp.ndarray,      # (1, P) packed kernel parameter values
     tgt: jnp.ndarray,      # (B, 3, NB) coordinate-major padded targets
     src_pts: jnp.ndarray,  # (C, 3, m) coordinate-major cluster points
     src_q: jnp.ndarray,    # (C, m) charges (0 = padding)
     kernel: Kernel,
     *,
+    pspec=None,            # static (treedef, shapes) for `par`
+    space=_FREE,
     target_tile: int = 256,
     kahan: bool = False,
     r2_mode: str = "diff",
@@ -123,20 +156,20 @@ def batch_cluster_eval_pallas(
 
     grid = (bsz, ntiles, slots)
 
-    def tgt_map(b, t, s, idx_ref):
-        del s, idx_ref
+    def tgt_map(b, t, s, idx_ref, par_ref):
+        del s, idx_ref, par_ref
         return (b, 0, t)
 
-    def src_map(b, t, s, idx_ref):
-        del t
+    def src_map(b, t, s, idx_ref, par_ref):
+        del t, par_ref
         return (jnp.maximum(idx_ref[b, s], 0), 0, 0)
 
-    def q_map(b, t, s, idx_ref):
-        del t
+    def q_map(b, t, s, idx_ref, par_ref):
+        del t, par_ref
         return (jnp.maximum(idx_ref[b, s], 0), 0)
 
-    def out_map(b, t, s, idx_ref):
-        del s, idx_ref
+    def out_map(b, t, s, idx_ref, par_ref):
+        del s, idx_ref, par_ref
         return (b, t)
 
     kwargs = {}
@@ -144,16 +177,16 @@ def batch_cluster_eval_pallas(
         kwargs["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
 
+    opts = dict(kernel=kernel, r2_mode=r2_mode, space=space, pspec=pspec)
     if kahan:
-        body = functools.partial(_body_kahan, kernel=kernel,
-                                 r2_mode=r2_mode)
+        body = functools.partial(_body_kahan, **opts)
         scratch = [pltpu.VMEM((1, nt), tgt.dtype)]
     else:
-        body = functools.partial(_body, kernel=kernel, r2_mode=r2_mode)
+        body = functools.partial(_body, **opts)
         scratch = []
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 3, nt), tgt_map),
@@ -169,4 +202,4 @@ def batch_cluster_eval_pallas(
         out_shape=jax.ShapeDtypeStruct((bsz, nb), tgt.dtype),
         interpret=interpret,
         **kwargs,
-    )(idx.astype(jnp.int32), tgt, src_pts, src_q)
+    )(idx.astype(jnp.int32), par.astype(tgt.dtype), tgt, src_pts, src_q)

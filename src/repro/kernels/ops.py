@@ -13,6 +13,12 @@ Backends:
 All wrappers accept the natural (..., P, 3) coordinate layout and transpose
 to the kernels' coordinate-major layout internally (a one-time O(N) cost
 against the O(N * m) kernel work).
+
+Kernel protocol v2: `params` is a traced pytree of kernel parameter values
+(None -> the kernel's hashable defaults, the v1 behavior) and `space` is a
+static `Space` deciding the displacement convention (minimum image under
+`PeriodicBox`). Both backends receive them; on the Pallas path the values
+travel as a scalar-prefetch vector so sweeps reuse the compiled kernel.
 """
 from __future__ import annotations
 
@@ -22,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cheby
-from repro.core.potentials import Kernel
+from repro.core.potentials import Kernel, pack_params
+from repro.core.space import FREE as _FREE
 from repro.kernels import batch_cluster as _bc
 from repro.kernels import modified_charges as _mc
 
@@ -60,15 +67,17 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernel", "backend", "target_tile", "batch_chunk",
-                     "kahan", "r2_mode"))
+    static_argnames=("kernel", "space", "backend", "target_tile",
+                     "batch_chunk", "kahan", "r2_mode"))
 def batch_cluster_eval(
     idx: jnp.ndarray,      # (B, S) int, -1 = empty slot
     tgt: jnp.ndarray,      # (B, NB, 3)
     src_pts: jnp.ndarray,  # (C, m, 3)
     src_q: jnp.ndarray,    # (C, m)
+    params=None,           # traced kernel parameter pytree (None: defaults)
     *,
     kernel: Kernel,
+    space=_FREE,
     backend: str = "auto",
     target_tile: int = 256,
     batch_chunk: int = 16,
@@ -81,8 +90,11 @@ def batch_cluster_eval(
         tgt_cm = jnp.swapaxes(tgt, -1, -2)          # (B, 3, NB)
         src_cm = jnp.swapaxes(src_pts, -1, -2)      # (C, 3, m)
         tgt_cm, nb = _pad_axis(tgt_cm, 2, target_tile)
+        par, pspec = pack_params(
+            kernel.params if params is None else params)
         phi = _bc.batch_cluster_eval_pallas(
-            idx, tgt_cm, src_cm, src_q, kernel,
+            idx, par, tgt_cm, src_cm, src_q, kernel,
+            pspec=pspec, space=space,
             target_tile=target_tile, kahan=kahan, r2_mode=r2_mode,
             interpret=(backend == "pallas_interpret"),
         )
@@ -108,7 +120,7 @@ def batch_cluster_eval(
             qs = src_q[safe]                        # (bc, m)
             pw = (kernel.pairwise_matmul if r2_mode == "matmul"
                   else kernel.pairwise)
-            g = pw(tgt_b, pts)                      # (bc, NB, m)
+            g = pw(tgt_b, pts, params, space)       # (bc, NB, m)
             valid = (idx_s >= 0).astype(tgt_b.dtype)
             return phi + jnp.einsum("bnm,bm,b->bn", g, qs, valid), None
 
@@ -123,6 +135,11 @@ def batch_cluster_eval(
 # ---------------------------------------------------------------------------
 # modified charges (Eq. 12 via the factored 14/15 form)
 # ---------------------------------------------------------------------------
+#
+# Space-independent on purpose: barycentric interpolation is LOCAL to a
+# cluster box, and particle coordinates are stored consistently with their
+# own cluster (wrapped at build, continuous under refit), so no image
+# folding can occur between a particle and its cluster's Chebyshev grid.
 
 
 def _cluster_nodes(lo: jnp.ndarray, hi: jnp.ndarray, degree: int):

@@ -3,7 +3,9 @@
 These are deliberately written in the *unfactored* textbook form (direct
 Eq. 9/11/12 evaluation) so they are an independent check on the factored /
 tiled kernel implementations. They materialize O(B*S*NB*m) intermediates —
-test-scale shapes only.
+test-scale shapes only. Space/params follow kernel protocol v2: pass a
+`PeriodicBox` for minimum-image displacements and a params pytree for
+traced kernel parameters (None keeps the kernel's defaults).
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import cheby
 from repro.core.potentials import Kernel
+from repro.core.space import FREE as _FREE
 
 
 def ref_batch_cluster_eval(
@@ -19,6 +22,8 @@ def ref_batch_cluster_eval(
     src_pts: jnp.ndarray,  # (C, m, 3) per-cluster source/Chebyshev points
     src_q: jnp.ndarray,    # (C, m) charges / modified charges (0 = padding)
     kernel: Kernel,
+    params=None,
+    space=_FREE,
 ) -> jnp.ndarray:
     """phi[b, i] = sum_s sum_j G(tgt[b,i], pts[idx[b,s], j]) q[idx[b,s], j].
 
@@ -30,8 +35,8 @@ def ref_batch_cluster_eval(
     safe = jnp.maximum(idx, 0)
     pts = src_pts[safe]                # (B, S, m, 3)
     q = src_q[safe]                    # (B, S, m)
-    d = tgt[:, None, :, None, :] - pts[:, :, None, :, :]
-    g = kernel(jnp.sum(d * d, axis=-1))  # (B, S, NB, m), masked at r2 == 0
+    d = space.displacement(tgt[:, None, :, None, :], pts[:, :, None, :, :])
+    g = kernel(jnp.sum(d * d, axis=-1), params)  # masked at r2 == 0
     valid = (idx >= 0).astype(tgt.dtype)
     return jnp.einsum("bsnm,bsm,bs->bn", g, q, valid)
 
@@ -71,7 +76,9 @@ def ref_cluster_approx_potential(
     qhat: jnp.ndarray,  # ((n+1)^3,)
     degree: int,
     kernel: Kernel,
+    params=None,
+    space=_FREE,
 ) -> jnp.ndarray:
     """Single batch-cluster approximation (Eq. 11) for diagnostics."""
     grid = cheby.cluster_grid(lo, hi, degree)  # ((n+1)^3, 3)
-    return kernel.pairwise(tgt, grid) @ qhat
+    return kernel.pairwise(tgt, grid, params, space) @ qhat
