@@ -1,0 +1,151 @@
+"""Sharded MD benchmark: retrace-free rebuilds over a multi-device mesh.
+
+Runs K-step MD on a `ShardedPlan` (RCB + LET via shard_map) and times
+every step individually, classifying each as a REFIT step (device tree
+refit only) or a REBUILD step (host tree rebuild, re-padded into the
+plan's fixed `ShardedCapacities` budget). The tentpole contract under
+test (DESIGN.md §7): rebuilds reuse the compiled SPMD step, so a rebuild
+step costs host tree construction on top of one normal step — NOT a full
+shard_map retrace — and `stats()["retraces"] == 0`.
+
+Emits BENCH_sharded_md.json with median ms/step per class, the ratio,
+rebuild/refit/retrace counters, energy drift, and the raw per-step
+timeline.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python benchmarks/sharded_md.py \
+        [--n 1200] [--steps 40] [--nranks 4] [--refit-interval 8] [--check]
+
+`--check` asserts the smoke thresholds (used by CI): >= 2 rebuilds,
+>= 1 refit, retraces == 0, zero capacity growths, energy drift below
+--drift-tol, and median rebuild-step time within --rebuild-factor (2x)
+of a median refit step.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
+from repro.dynamics import Simulation  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1200)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--nranks", type=int, default=0,
+                    help="mesh size (0 = all visible devices)")
+    ap.add_argument("--dt", type=float, default=2e-4)
+    ap.add_argument("--theta", type=float, default=0.8)
+    ap.add_argument("--degree", type=int, default=3)
+    ap.add_argument("--leaf-size", type=int, default=32)
+    ap.add_argument("--refit-interval", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_sharded_md.json")
+    ap.add_argument("--check", action="store_true",
+                    help="assert smoke thresholds (CI)")
+    ap.add_argument("--drift-tol", type=float, default=1e-3)
+    ap.add_argument("--rebuild-factor", type=float, default=2.0,
+                    help="max median rebuild-step / refit-step ratio")
+    args = ap.parse_args(argv)
+
+    import jax
+    nranks = args.nranks or jax.device_count()
+    if nranks < 2:
+        raise SystemExit(
+            "sharded_md benchmarks a ShardedPlan and needs >= 2 devices; "
+            "force a CPU mesh with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+            "or pass --nranks with enough visible devices")
+
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
+    q = (rng.uniform(-1, 1, args.n) * 0.05).astype(np.float32)
+
+    solver = TreecodeSolver(TreecodeConfig(
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size))
+    sim = Simulation(solver.plan(x, nranks=nranks), q, dt=args.dt,
+                     refit_interval=args.refit_interval)
+
+    sim.log.record(0, sim.diagnostics())   # E(0) baseline for drift()
+    sim.step()                       # compile + first step (excluded)
+    timeline = []
+    for _ in range(args.steps - 1):
+        before = sim.rebuilds
+        t0 = time.time()
+        sim.step()
+        sim.state.x.block_until_ready()
+        ms = (time.time() - t0) * 1e3
+        timeline.append(dict(
+            ms=ms, kind="rebuild" if sim.rebuilds > before else "refit"))
+        if sim.steps % max(1, args.steps // 10) == 0:
+            sim.log.record(sim.steps, sim.diagnostics())
+
+    refit_ms = [t["ms"] for t in timeline if t["kind"] == "refit"]
+    rebuild_ms = [t["ms"] for t in timeline if t["kind"] == "rebuild"]
+    med_refit = float(np.median(refit_ms)) if refit_ms else float("nan")
+    med_rebuild = (float(np.median(rebuild_ms)) if rebuild_ms
+                   else float("nan"))
+    ratio = med_rebuild / med_refit if refit_ms and rebuild_ms \
+        else float("nan")
+
+    s = sim.stats()
+    result = dict(
+        bench="sharded_md",
+        n=args.n, nranks=nranks, steps=args.steps, dt=args.dt,
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        refit_interval=args.refit_interval,
+        refit_ms_per_step=med_refit,
+        rebuild_ms_per_step=med_rebuild,
+        rebuild_over_refit=ratio,
+        refits=s["refits"], rebuilds=s["rebuilds"],
+        retraces=s["retraces"], compiles=s["compiles"],
+        capacity_growths=s["capacity_growths"],
+        halo_rounds=s["plan"]["halo_rounds"],
+        halo_rounds_active=s["plan"]["halo_rounds_active"],
+        energy_drift=sim.log.drift(),
+        momentum_drift=sim.log.momentum_drift(),
+        mac_slack=s["mac_slack"],
+        timeline=timeline,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"N={args.n} P={nranks} steps={args.steps} "
+          f"K={args.refit_interval}")
+    print(f"refit step:   {med_refit:8.1f} ms (median of {len(refit_ms)})")
+    print(f"rebuild step: {med_rebuild:8.1f} ms (median of "
+          f"{len(rebuild_ms)})  ratio {ratio:.2f}x")
+    print(f"rebuilds {s['rebuilds']}  refits {s['refits']}  "
+          f"retraces {s['retraces']}  compiles {s['compiles']}  "
+          f"drift {sim.log.drift():.2e}")
+    print(f"wrote {args.out}")
+
+    if args.check:
+        checks = {
+            ">= 2 rebuilds exercised": s["rebuilds"] >= 2,
+            ">= 1 refit step": s["refits"] >= 1,
+            "retraces == 0 (compiled SPMD step reused)":
+                s["retraces"] == 0,
+            "no capacity growths at this size":
+                s["capacity_growths"] == 0,
+            f"energy drift < {args.drift_tol}":
+                sim.log.drift() < args.drift_tol,
+            f"rebuild step within {args.rebuild_factor}x of refit step":
+                ratio <= args.rebuild_factor,
+        }
+        failed = [name for name, ok in checks.items() if not ok]
+        for name, ok in checks.items():
+            print(f"  [{'ok' if ok else 'FAIL'}] {name}")
+        if failed:
+            raise SystemExit(f"sharded_md checks failed: {failed}")
+        print("all sharded_md checks passed")
+
+
+if __name__ == "__main__":
+    main()

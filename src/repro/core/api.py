@@ -219,8 +219,12 @@ class Plan(Protocol):
     def replan(self, targets, sources=None, **kwargs) -> "Plan":
         """Rebuild geometry for moved particles under the same config.
 
-        Implementations may accept keyword-only extensions (e.g. the
-        single-device `capacities=` for shape-stable MD replans)."""
+        Both implementations accept a keyword-only ``capacities=``
+        extension for shape-stable MD replans; their default
+        (``"keep"`` where the plan holds a budget) re-pads the new
+        geometry into the current capacity budget — growing it
+        geometrically on overflow — so compiled executors built against
+        this plan are reused by the replanned one (see docs/API.md)."""
 
 
 def _resolve_dtype(config: TreecodeConfig, arr: np.ndarray) -> np.dtype:
@@ -297,6 +301,12 @@ class SingleDevicePlan:
         return jax.tree.map(lambda v: jnp.asarray(v, dtype=self.dtype), p)
 
     def execute(self, charges, kernel_params=None) -> jnp.ndarray:
+        """Potentials at the plan's targets, in input order.
+
+        Geometry stays on device and is reused across calls; with
+        `donate_charges` the device charge buffer is donated to the
+        computation. `kernel_params` overrides the kernel parameter
+        values for this call without recompiling."""
         fn = (_eval.execute_donating if self.config.donate_charges
               else _eval.execute)
         return fn(self.inner.arrays, self._charges(charges),
@@ -305,6 +315,12 @@ class SingleDevicePlan:
 
     def potential_and_forces(self, charges, weights=None,
                              kernel_params=None):
+        """(phi, F) with F_i = -w_i * grad_x phi(x_i), input order.
+
+        Gradients come from the custom-VJP executor (three forward JVPs;
+        see `repro.core.eval`). `weights` defaults to the charges when
+        targets == sources (the physical force on charge q_i); disjoint
+        target/source sets must pass per-target weights explicitly."""
         q = self._charges(charges)
         if weights is None:
             if self.num_targets != self.num_sources:
@@ -332,6 +348,9 @@ class SingleDevicePlan:
         return self.inner.capacities
 
     def stats(self) -> dict:
+        """Geometry / cost counters: tree and batch sizes, padding
+        waste, the MAC slack (refit drift budget), and — when
+        capacity-padded — the `Capacities` budget the arrays occupy."""
         tree = self.inner.tree
         caps = self.inner.capacities
         return dict(
@@ -416,12 +435,14 @@ class TreecodeSolver:
         target/source sets (the sharded path assumes the paper's
         targets == sources test setting).
 
-        `capacities` (single-device only): "auto" or a
-        `repro.core.eval.Capacities` pads the plan into a fixed buffer
-        budget so later `replan` calls keep identical array shapes and
-        reuse compiled executables (the MD setting; see
-        `repro.dynamics`). Sharded plans ignore it (their cross-rank
-        padding is already shape-maximal per build).
+        `capacities` pads the plan into a fixed buffer budget so later
+        `replan` calls keep identical array shapes and reuse compiled
+        executables (the MD setting; see `repro.dynamics`).
+        Single-device: None (default, no padding), "auto", or a
+        `repro.core.eval.Capacities`. Sharded plans are ALWAYS
+        capacity-padded — None/"auto" budget this build's own needs, or
+        pass an explicit `repro.core.eval.ShardedCapacities` (see
+        DESIGN.md §7).
         """
         same = sources is None or sources is targets
         if mesh is not None and nranks is not None:
@@ -465,7 +486,9 @@ class TreecodeSolver:
         dtype = _resolve_dtype(self.config, points)
         return ShardedPlan.build(points.astype(dtype, copy=False),
                                  self.config, p, mesh=mesh, axis=axis,
-                                 kernel=self._kernel)
+                                 kernel=self._kernel,
+                                 capacities=("auto" if capacities is None
+                                             else capacities))
 
     # -- protocol delegations (kept so existing call sites read naturally)
     def execute(self, plan: Plan, charges) -> jnp.ndarray:

@@ -493,7 +493,16 @@ class Capacities:
     def for_plan(cls, plan: "Plan", headroom: float = 1.15,
                  growth: float = 1.5) -> "Capacities":
         """Initial budget: the plan's own shapes inflated by `headroom`."""
-        need = _plan_dims(plan)
+        return cls.for_need(_plan_dims(plan), headroom, growth)
+
+    @classmethod
+    def for_need(cls, need: dict, headroom: float = 1.15,
+                 growth: float = 1.5) -> "Capacities":
+        """Initial budget from a raw needs dict (`_plan_dims` keys).
+
+        The sharded build aggregates its per-rank needs (element-wise max
+        over ranks) into the same dict shape, so one schema serves both
+        execution strategies (see `ShardedCapacities`)."""
 
         def h(x):
             return _round_up(int(np.ceil(x * headroom)))
@@ -516,7 +525,10 @@ class Capacities:
     def grown_to_fit(self, plan: "Plan") -> "Capacities":
         """Smallest capacities >= self that fit `plan`, growing any
         insufficient dimension geometrically (never shrinks)."""
-        need = _plan_dims(plan)
+        return self.grown_to_fit_need(_plan_dims(plan))
+
+    def grown_to_fit_need(self, need: dict) -> "Capacities":
+        """`grown_to_fit` from a raw needs dict (`_plan_dims` keys)."""
 
         def g(cap, n, rounder=_round_up):
             if n <= cap:
@@ -548,6 +560,115 @@ class Capacities:
 
     def fits(self, plan: "Plan") -> bool:
         return self.grown_to_fit(plan) == self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCapacities:
+    """Fixed budget for a `ShardedPlan`'s stacked (P, ...) arrays.
+
+    Generalizes `Capacities` to the sharded setting (DESIGN.md §7): the
+    per-rank padded dimensions reuse the single-device schema applied to
+    the element-wise max over ranks (`rank`), and the cross-rank LET
+    structures get budgets of their own:
+
+      slab_width           particle slab width per rank (`per_pad`)
+      remote_approx_width  gathered-cluster list width per batch
+      remote_direct_width  received-halo-leaf list width per batch
+      halo_offsets         the FIXED `collective_permute` round schedule:
+                           one round per rank offset, symmetric contiguous
+                           range ±D so the compiled SPMD program's
+                           communication pattern survives RCB re-cuts;
+                           rounds an actual build does not need run fully
+                           masked (all -1 send tables exchange zeros)
+      halo_width           leaf-slot budget per halo round (common)
+
+    Two builds padded into equal `ShardedCapacities` produce
+    shape-identical pytrees AND an identical static closure
+    (`perm_rounds` derives from `halo_offsets` alone), so the jitted
+    shard_map executable is shared between them — the sharded analogue
+    of the `Capacities`/`pad_plan` contract, with the same headroom +
+    geometric-growth overflow policy.
+    """
+
+    rank: Capacities                  # per-rank budget (num_nodes incl.
+                                      # the scratch row, as single-device)
+    nranks: int
+    slab_width: int
+    remote_approx_width: int
+    remote_direct_width: int
+    halo_offsets: Tuple[int, ...]
+    halo_width: int
+    headroom: float = 1.15
+    growth: float = 1.5
+
+    @property
+    def scratch_node(self) -> int:
+        return self.rank.scratch_node
+
+    @property
+    def halo_rounds(self) -> int:
+        return len(self.halo_offsets)
+
+    @staticmethod
+    def _offset_range(offsets) -> Tuple[int, ...]:
+        """Canonical symmetric round schedule covering `offsets`: every
+        nonzero offset in [-D, D], D = max |offset| (at least 1, so even
+        halo-free builds keep a usable budget for later drift)."""
+        d = max([abs(int(o)) for o in offsets] + [1])
+        return tuple(o for o in range(-d, d + 1) if o != 0)
+
+    @classmethod
+    def for_need(cls, need: dict, headroom: float = 1.15,
+                 growth: float = 1.5) -> "ShardedCapacities":
+        """Initial budget: the build's own needs inflated by `headroom`."""
+
+        def h(x):
+            return _round_up(int(np.ceil(x * headroom)))
+
+        return cls(
+            rank=Capacities.for_need(need["rank"], headroom, growth),
+            nranks=int(need["nranks"]),
+            slab_width=h(need["slab_width"]),
+            remote_approx_width=h(need["remote_approx_width"]),
+            remote_direct_width=h(need["remote_direct_width"]),
+            halo_offsets=cls._offset_range(need["halo_offsets"]),
+            halo_width=h(need["halo_width"]),
+            headroom=headroom, growth=growth,
+        )
+
+    def grown_to_fit(self, need: dict) -> "ShardedCapacities":
+        """Smallest capacities >= self fitting `need`; any insufficient
+        width grows geometrically, and a rank offset outside the round
+        schedule widens the symmetric range (both are deliberate,
+        counted retraces — see `Simulation.stats`)."""
+        if int(need["nranks"]) != self.nranks:
+            raise ValueError(
+                f"sharded capacities are bound to nranks={self.nranks}; "
+                f"got a build over nranks={need['nranks']}")
+
+        def g(cap, n):
+            if n <= cap:
+                return cap
+            return _round_up(max(n, int(np.ceil(cap * self.growth))))
+
+        offsets = self.halo_offsets
+        if not set(need["halo_offsets"]) <= set(offsets):
+            offsets = self._offset_range(
+                tuple(offsets) + tuple(need["halo_offsets"]))
+        return dataclasses.replace(
+            self,
+            rank=self.rank.grown_to_fit_need(need["rank"]),
+            slab_width=g(self.slab_width, need["slab_width"]),
+            remote_approx_width=g(self.remote_approx_width,
+                                  need["remote_approx_width"]),
+            remote_direct_width=g(self.remote_direct_width,
+                                  need["remote_direct_width"]),
+            halo_offsets=offsets,
+            halo_width=g(self.halo_width, need["halo_width"]),
+        )
+
+    def fits(self, need: dict) -> bool:
+        return self.grown_to_fit(need) == self
 
 
 def _plan_dims(plan: Plan) -> dict:

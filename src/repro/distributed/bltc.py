@@ -15,6 +15,19 @@ plus the two collectives. Per-rank structures are padded to common shapes
 exactly zero. With targets == sources (the paper's test setting) the result
 matches the single-device treecode to the same MAC error tolerance.
 
+Capacity-padded LET schema (DESIGN.md §7): every stacked (P, ...) array —
+per-rank tree/batch/list structures, the remote (LET) interaction lists,
+and the halo exchange schedule — is padded into a fixed
+`repro.core.eval.ShardedCapacities` budget (initial need x headroom,
+geometric growth on overflow). The halo exchange runs a FIXED schedule of
+`collective_permute` rounds, one per rank offset in the budget's symmetric
+range; rounds a particular build does not need are fully masked (all -1
+send tables exchange zeros that no interaction list references). Budgeted
+builds therefore produce shape-identical pytrees with an identical static
+closure, and the jitted SPMD executable is shared between them through a
+module cache — `replan` after particle drift reuses the compiled program
+instead of retracing (the MD contract; see `repro.dynamics`).
+
 Space/params protocol v2: the cross-rank MAC runs on MINIMUM-IMAGE center
 distances with the fold-free acceptance condition under a `PeriodicBox`
 (RCB slabs tile the wrapped cell; a boundary slab's neighbors across the
@@ -39,7 +52,7 @@ common width (padded slots carry zero charge and are never gathered).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,18 +69,13 @@ from repro.distributed.rcb import RCB, rcb_partition
 from repro.kernels import ops
 
 
-def _pad_to(a: np.ndarray, shape: Tuple[int, ...], value=0) -> np.ndarray:
-    pads = [(0, s - d) for s, d in zip(shape, a.shape)]
-    return np.pad(a, pads, constant_values=value)
-
-
 def _traverse_remote(cfg: TreecodeConfig, tree: Tree, bc, br, bhw):
     """Traverse one remote tree for one batch under the space-aware MAC.
 
     Yields ("approx", node, theta_margin, scaled_fold_margin) and
-    ("direct", leaf_slots) events. Shared by the remote-approx and
-    remote-direct (halo) list builders so both apply identical
-    acceptance (min-image distances, fold-free approximation)."""
+    ("direct", leaf_slots) events. One traversal drives both the
+    remote-approx lists and the remote-direct (halo) lists so both apply
+    identical acceptance (min-image distances, fold-free approximation)."""
     npts = (cfg.degree + 1) ** 3
     space = cfg.space
     stack = [0]
@@ -92,37 +100,204 @@ def _traverse_remote(cfg: TreecodeConfig, tree: Tree, bc, br, bhw):
             yield ("direct", slots)
 
 
-def _remote_lists(cfg: TreecodeConfig, plans, rcb: RCB, m_pad: int):
-    """Per-rank remote interaction lists by traversing other ranks' trees
-    with the same uniform MAC: approx hits -> gathered-cluster indices
-    (s * m_pad + node), direct hits -> halo leaves per (src, dst) pair.
-    Also returns the min MAC slack (theta margin and, under a periodic
-    space, the scaled fold margin) over remote approx accepts — the
-    cross-rank part of the refit drift budget."""
-    p = rcb.nranks
-    approx = [[] for _ in range(p)]            # (batch, flat cluster idx)
-    halo_need: Dict[Tuple[int, int], set] = {}  # (src s, dst r) -> leaf slots
+def _remote_lists(cfg: TreecodeConfig, plans, nranks: int):
+    """One cross-rank traversal pass: for every rank r, traverse every
+    other rank s's tree with the same uniform MAC.
+
+    Returns (approx, direct, halo_need, mac_slack):
+      approx[r]:   [(batch, src rank, node)] remote approx accepts
+      direct[r]:   [(batch, src rank, leaf slot)] remote direct hits
+      halo_need:   {(src s, dst r): set(leaf slots)} — the halo traffic
+      mac_slack:   min margin (theta and, under a periodic space, the
+                   scaled fold margin) over remote approx accepts — the
+                   cross-rank part of the refit drift budget."""
+    approx: List[list] = [[] for _ in range(nranks)]
+    direct: List[list] = [[] for _ in range(nranks)]
+    halo_need: Dict[Tuple[int, int], set] = {}
     mac_slack = float("inf")
 
-    for r in range(p):
+    for r in range(nranks):
         batches = plans[r].batches
-        for s in range(p):
+        bhw = batch_half_extents(batches)
+        for s in range(nranks):
             if s == r:
                 continue
             tree: Tree = plans[s].tree
-            bhw = batch_half_extents(batches)
             for b in range(batches.num_batches):
                 for ev in _traverse_remote(cfg, tree, batches.center[b],
                                            batches.radius[b], bhw[b]):
                     if ev[0] == "approx":
                         _, node, t_margin, f_margin = ev
-                        approx[r].append((b, s * m_pad + node))
+                        approx[r].append((b, s, node))
                         mac_slack = min(mac_slack, t_margin)
                         if np.isfinite(f_margin):
                             mac_slack = min(mac_slack, f_margin)
                     else:
                         halo_need.setdefault((s, r), set()).update(ev[1])
-    return approx, halo_need, mac_slack
+                        for sl in ev[1]:
+                            direct[r].append((b, s, sl))
+    return approx, direct, halo_need, mac_slack
+
+
+def _rank_need(plans) -> dict:
+    """Element-wise max of the per-rank single-device dims: the `rank`
+    entry of the sharded needs dict (`ShardedCapacities.for_need`)."""
+    dims = [ceval._plan_dims(pl) for pl in plans]
+    need = {k: max(d[k] for d in dims)
+            for k in ("num_batches", "batch_width", "num_leaves",
+                      "leaf_width", "num_nodes", "approx_width",
+                      "direct_width", "depth")}
+    rows = [1] * need["depth"]
+    widths = [1] * need["depth"]
+    for d in dims:
+        for i, v in enumerate(d["bucket_rows"]):
+            rows[i] = max(rows[i], v)
+        for i, v in enumerate(d["bucket_widths"]):
+            widths[i] = max(widths[i], v)
+    need["bucket_rows"] = tuple(rows)
+    need["bucket_widths"] = tuple(widths)
+    need["upward_rows"] = ()
+    return need
+
+
+def _max_per_batch(events_per_rank) -> int:
+    """Widest per-(rank, batch) event list — a remote list width need."""
+    w = 1
+    for events in events_per_rank:
+        counts: Dict[int, int] = {}
+        for b, *_ in events:
+            counts[b] = counts.get(b, 0) + 1
+            w = max(w, counts[b])
+    return w
+
+
+# ---------------------------------------------------------------------------
+# SPMD executable cache
+# ---------------------------------------------------------------------------
+#
+# The jitted shard_map program depends only on budget-derived statics:
+# (mesh, axis, degree, level count, the fixed permute-round schedule, the
+# stripped kernel, space, backend, the array-key set, the kernel-params
+# tree structure, donation). Two plans padded into equal
+# `ShardedCapacities` share every component, so they receive the SAME
+# callable — and therefore the same jit cache — from this module cache.
+# That identity is what lets `replan` (and the MD engine's jitted step
+# that closes over the callable) survive a host rebuild without retracing.
+#
+# Bounded: each distinct config/budget pins a compiled program (and its
+# mesh) for as long as it lives in the cache, so old entries are evicted
+# FIFO beyond _SPMD_CACHE_MAX. Holders that rely on identity across
+# rebuilds (the dynamics adapter) keep their own strong reference and
+# re-fetch only when their budget grows, so eviction cannot hand them a
+# fresh equivalent object mid-run.
+
+_SPMD_CACHE: "Dict[tuple, object]" = {}
+_SPMD_CACHE_MAX = 32
+
+
+def _spmd_executable(*, mesh, axis: str, degree: int, depth: int,
+                     perm_rounds, kernel: Kernel, space, backend: str,
+                     keys: Tuple[str, ...], params_treedef, donate: bool):
+    key = (mesh, axis, degree, depth, perm_rounds, kernel, space, backend,
+           keys, params_treedef, donate)
+    fn = _SPMD_CACHE.get(key)
+    if fn is None:
+        fn = _build_spmd_fn(mesh=mesh, axis=axis, degree=degree,
+                            depth=depth, perm_rounds=perm_rounds,
+                            kernel=kernel, space=space, backend=backend,
+                            keys=keys, params_treedef=params_treedef,
+                            donate=donate)
+        while len(_SPMD_CACHE) >= _SPMD_CACHE_MAX:
+            _SPMD_CACHE.pop(next(iter(_SPMD_CACHE)))
+        _SPMD_CACHE[key] = fn
+    return fn
+
+
+def _build_spmd_fn(*, mesh, axis, degree, depth, perm_rounds, kernel,
+                   space, backend, keys, params_treedef, donate):
+    def spmd(args, q, params):
+        a = {k: v[0] for k, v in args.items()}  # strip sharded lead dim
+        q_sorted = q[0][a["charges_perm"]]
+
+        # local modified charges (scratch row stays zero: gather all -1)
+        lo, hi = a["node_lo"], a["node_hi"]
+        qhat = jnp.zeros((lo.shape[0], (degree + 1) ** 3),
+                         q_sorted.dtype)
+        for lvl in range(depth):
+            gidx = a[f"bucket_gather_{lvl}"]
+            nodes = a[f"bucket_nodes_{lvl}"]
+            center = 0.5 * (lo[nodes] + hi[nodes])
+            pts, qb = ceval._gathered(a["src_sorted"], q_sorted, gidx,
+                                      fill=center)
+            qh = ops.modified_charges(pts, qb, lo[nodes], hi[nodes],
+                                      degree=degree, backend=backend)
+            qhat = qhat.at[nodes].add(qh)  # scratch row may accumulate
+
+        grids = cheby.cluster_grid(lo, hi, degree)
+        tgt = a["tgt_batched"]
+        phi = ops.batch_cluster_eval(a["approx_idx"], tgt, grids, qhat,
+                                     params, kernel=kernel, space=space,
+                                     backend=backend)
+        leaf_pts, leaf_q = ceval._gathered(
+            a["src_sorted"], q_sorted, a["leaf_gather"])
+        phi += ops.batch_cluster_eval(a["direct_idx"], tgt, leaf_pts,
+                                      leaf_q, params, kernel=kernel,
+                                      space=space, backend=backend)
+
+        # LET phase 1: gather every rank's tree metadata + q_hat
+        g_lo = jax.lax.all_gather(lo, axis)        # (P, M, 3)
+        g_hi = jax.lax.all_gather(hi, axis)
+        g_qhat = jax.lax.all_gather(qhat, axis)    # (P, M, K3)
+        g_grids = cheby.cluster_grid(g_lo.reshape(-1, 3),
+                                     g_hi.reshape(-1, 3), degree)
+        phi += ops.batch_cluster_eval(
+            a["remote_approx_idx"], tgt, g_grids,
+            g_qhat.reshape(-1, (degree + 1) ** 3), params,
+            kernel=kernel, space=space, backend=backend)
+
+        # LET phase 2: halo leaf exchange — one permute round per budget
+        # offset. Rounds this build does not need have all -1 send
+        # tables: they permute zero buffers that remote_direct_idx never
+        # references (the masked tail rounds of DESIGN.md §7).
+        recv_pts, recv_q = [], []
+        for i, (off, pairs) in enumerate(perm_rounds):
+            send_idx = a[f"halo_send_{i}"]         # (H,) leaf slots
+            safe = jnp.maximum(send_idx, 0)
+            valid = (send_idx >= 0)[:, None]
+            sp = jnp.where(valid[..., None], leaf_pts[safe], 0.0)
+            sq = jnp.where(valid, leaf_q[safe], 0.0)
+            rp = jax.lax.ppermute(sp, axis, pairs)
+            rq = jax.lax.ppermute(sq, axis, pairs)
+            recv_pts.append(rp)
+            recv_q.append(rq)
+        if recv_pts:
+            halo_pts = jnp.concatenate(recv_pts, axis=0)
+            halo_q = jnp.concatenate(recv_q, axis=0)
+            phi += ops.batch_cluster_eval(
+                a["remote_direct_idx"], tgt, halo_pts, halo_q, params,
+                kernel=kernel, space=space, backend=backend)
+
+        out = phi.reshape(-1)[a["gather_index"]]
+        return out[None]
+
+    spec = jax.sharding.PartitionSpec(axis)
+    rep = jax.sharding.PartitionSpec()
+    specs = {k: spec for k in keys}
+    param_specs = jax.tree.unflatten(
+        params_treedef, [rep] * params_treedef.num_leaves)
+    return jax.jit(
+        compat.shard_map(spmd, mesh=mesh,
+                         in_specs=(specs, spec, param_specs),
+                         out_specs=spec),
+        donate_argnums=(1,) if donate else ())
+
+
+@jax.jit
+def _stage_charges(rank_gather, q):
+    """(P, per_pad) rank slabs from (N,) charges through the -1-padded
+    gather table; padded slots carry exactly zero."""
+    valid = rank_gather >= 0
+    return jnp.where(valid, q[jnp.maximum(rank_gather, 0)], 0.0)
 
 
 @dataclasses.dataclass
@@ -141,6 +316,10 @@ class ShardedPlan:
     num_points: int
     padding_waste: float                # mean over per-rank local plans
     dtype: np.dtype
+    # The fixed budget the stacked arrays are padded into; `replan` grows
+    # it geometrically on overflow and otherwise reuses it unchanged, so
+    # rebuilt plans share the compiled SPMD executable.
+    capacities: "ceval.ShardedCapacities | None" = None
     # Device rank tables (shared with the dynamics adapter):
     #   rank_gather: (P, per_pad) input particle index per slab slot, -1 pad
     #   input_pos:   (N,) flat (rank * per_pad + slot) of each input index
@@ -154,10 +333,12 @@ class ShardedPlan:
     mac_slack: float = float("inf")
     mesh: Optional[object] = None
     axis: str = "data"
+    # Strong per-instance refs to the fetched SPMD executables: plans
+    # must not lose their compiled traces to module-cache FIFO eviction
+    # (the module cache shares across plans; these pin for this plan).
     _fn: Optional[object] = dataclasses.field(default=None, repr=False)
     _fn_donating: Optional[object] = dataclasses.field(default=None,
-                                                       repr=False)
-    _stage: Optional[object] = dataclasses.field(default=None, repr=False)
+                                                      repr=False)
 
     # -- protocol aliases
     @property
@@ -179,12 +360,18 @@ class ShardedPlan:
     @classmethod
     def build(cls, points: np.ndarray, cfg: TreecodeConfig, nranks: int,
               *, mesh=None, axis: str = "data",
-              kernel: Optional[Kernel] = None) -> "ShardedPlan":
+              kernel: Optional[Kernel] = None,
+              capacities="auto") -> "ShardedPlan":
+        """Host-side setup: RCB, per-rank local plans, cross-rank LET
+        lists, and capacity padding of everything into one fixed budget.
+
+        `capacities`: "auto" (default) budgets this build's own needs
+        with headroom; an explicit `ShardedCapacities` (e.g. a previous
+        plan's, via `replan`) is grown to fit and otherwise reused
+        verbatim, keeping the padded pytree shape-identical."""
         points = np.asarray(cfg.space.wrap(np.asarray(points)))
         dtype = points.dtype
         rcb = rcb_partition(points, nranks)
-        counts = rcb.counts()
-        per_pad = int(counts.max())
 
         plans = []
         for r in range(nranks):
@@ -194,106 +381,80 @@ class ShardedPlan:
                 leaf_size=cfg.leaf_size,
                 batch_size=cfg.resolved_batch_size(), space=cfg.space))
 
-        # ---- common padded shapes across ranks
-        def amax(f):
-            return max(f(pl) for pl in plans)
-
-        b_pad = amax(lambda pl: pl.arrays["tgt_batched"].shape[0])
-        nb_pad = amax(lambda pl: pl.arrays["tgt_batched"].shape[1])
-        l_pad = amax(lambda pl: pl.arrays["leaf_gather"].shape[0])
-        nl_pad = amax(lambda pl: pl.arrays["leaf_gather"].shape[1])
-        m_nodes = amax(lambda pl: pl.arrays["node_lo"].shape[0])
-        m_pad = m_nodes + 1                       # + scratch row
-        a_pad = amax(lambda pl: pl.arrays["approx_idx"].shape[1])
-        d_pad = amax(lambda pl: pl.arrays["direct_idx"].shape[1])
-        depth = amax(lambda pl: len(pl.arrays["bucket_gather"]))
-        c_pads = [1] * depth
-        g_pads = [1] * depth
-        for lvl in range(depth):
-            for pl in plans:
-                bg = pl.arrays["bucket_gather"]
-                if lvl < len(bg):
-                    c_pads[lvl] = max(c_pads[lvl], bg[lvl].shape[0])
-                    g_pads[lvl] = max(g_pads[lvl], bg[lvl].shape[1])
-
-        remote_approx, halo_need, remote_slack = _remote_lists(
-            cfg, plans, rcb, m_pad)
+        remote_approx, remote_direct, halo_need, remote_slack = \
+            _remote_lists(cfg, plans, nranks)
         mac_slack = min([remote_slack] + [pl.mac_slack for pl in plans])
 
-        # ---- halo schedule: one collective_permute round per rank offset
-        offsets = sorted({r - s for (s, r) in halo_need})
-        h_pads = []
-        for off in offsets:
-            h = max((len(v) for (s, r), v in halo_need.items()
-                     if r - s == off), default=1)
-            h_pads.append(max(h, 1))
+        # ---- resolve the capacity budget from this build's needs
+        need = dict(
+            nranks=nranks,
+            rank=_rank_need(plans),
+            slab_width=rcb.max_count(),
+            remote_approx_width=_max_per_batch(remote_approx),
+            remote_direct_width=_max_per_batch(remote_direct),
+            halo_offsets=tuple(sorted({r - s for (s, r) in halo_need})),
+            halo_width=max([len(v) for v in halo_need.values()] + [1]),
+        )
+        if capacities is None or capacities == "auto":
+            caps = ceval.ShardedCapacities.for_need(need)
+        elif isinstance(capacities, ceval.ShardedCapacities):
+            caps = capacities.grown_to_fit(need)
+        else:
+            raise TypeError(
+                "sharded capacities must be 'auto' or a "
+                f"repro.core.eval.ShardedCapacities, got "
+                f"{type(capacities).__name__}")
 
-        # received-halo slot of (s -> r) leaves, per destination rank
+        R = caps.rank
+        b_pad, nb_pad = R.num_batches, R.batch_width
+        l_pad, nl_pad = R.num_leaves, R.leaf_width
+        m_pad, scratch = R.num_nodes, R.scratch_node
+        a_pad, d_pad = R.approx_width, R.direct_width
+        depth = R.depth
+        per_pad = caps.slab_width
+
+        # ---- halo schedule: the budget's FIXED permute rounds; received
+        # slot of each (s -> r) leaf indexes into round-major concatenated
+        # buffers of the common budget width.
         halo_slot: Dict[Tuple[int, int], Dict[int, int]] = {}
-        base = 0
-        for off, hp in zip(offsets, h_pads):
-            for (s, r), slots in halo_need.items():
-                if r - s != off:
-                    continue
-                halo_slot[(s, r)] = {slot: base + i
-                                     for i, slot in enumerate(sorted(slots))}
-            base += hp
-
-        # remote direct lists: batches -> received halo leaf slots
-        # (re-traversal with the IDENTICAL space-aware MAC, so direct
-        # hits line up exactly with the halo_need sets above)
-        remote_direct = [[] for _ in range(nranks)]
-        for r in range(nranks):
-            batches = plans[r].batches
-            for s in range(nranks):
-                if s == r or (s, r) not in halo_slot:
-                    continue
-                tree = plans[s].tree
-                bhw = batch_half_extents(batches)
-                for b in range(batches.num_batches):
-                    for ev in _traverse_remote(cfg, tree,
-                                               batches.center[b],
-                                               batches.radius[b],
-                                               bhw[b]):
-                        if ev[0] != "direct":
-                            continue
-                        for sl in ev[1]:
-                            remote_direct[r].append(
-                                (b, halo_slot[(s, r)][sl]))
-
-        def _pad_pairs(pairs_per_rank):
-            """(batch, value) pair lists -> (P, B_pad, w) -1-padded arrays."""
-            perb = [[[] for _ in range(b_pad)] for _ in range(nranks)]
-            w = 1
-            for r, pairs in enumerate(pairs_per_rank):
-                for b, v in pairs:
-                    perb[r][b].append(v)
-                    w = max(w, len(perb[r][b]))
-            out = np.full((nranks, b_pad, w), -1, np.int64)
-            for r in range(nranks):
-                for b in range(b_pad):
-                    row = perb[r][b]
-                    out[r, b, :len(row)] = row
-            return out
-
-        remote_approx_idx = _pad_pairs(remote_approx)
-        remote_direct_idx = _pad_pairs(remote_direct)
-
-        # ---- halo send tables (leaf slots each rank sends, per round)
         halo_send = []
-        for off, hp in zip(offsets, h_pads):
-            tbl = np.full((nranks, hp), -1, np.int64)
+        for i, off in enumerate(caps.halo_offsets):
+            tbl = np.full((nranks, caps.halo_width), -1, np.int64)
+            base = i * caps.halo_width
             for (s, r), slots in halo_need.items():
                 if r - s != off:
                     continue
                 ordered = sorted(slots)
                 tbl[s, :len(ordered)] = ordered
+                halo_slot[(s, r)] = {slot: base + j
+                                     for j, slot in enumerate(ordered)}
             halo_send.append(tbl)
 
         perm_rounds = tuple(
             (off, tuple((s, s + off) for s in range(nranks)
                         if 0 <= s + off < nranks))
-            for off in offsets)
+            for off in caps.halo_offsets)
+
+        def _pad_events(events_per_rank, width, value_of):
+            """(batch, ...) event lists -> (P, b_pad, width) -1-padded.
+
+            `value_of(r, ev)` maps a destination rank + event to the
+            stored index; widths are guaranteed by the budget."""
+            out = np.full((nranks, b_pad, width), -1, np.int64)
+            fill = np.zeros((nranks, b_pad), np.int64)
+            for r, events in enumerate(events_per_rank):
+                for ev in events:
+                    b = ev[0]
+                    out[r, b, fill[r, b]] = value_of(r, ev)
+                    fill[r, b] += 1
+            return out
+
+        remote_approx_idx = _pad_events(
+            remote_approx, caps.remote_approx_width,
+            lambda r, ev: ev[1] * m_pad + ev[2])
+        remote_direct_idx = _pad_events(
+            remote_direct, caps.remote_direct_width,
+            lambda r, ev: halo_slot[(ev[1], r)][ev[2]])
 
         # ---- stack per-rank padded arrays
         def stack(field, shape, value=0, recompute=None):
@@ -302,7 +463,7 @@ class ShardedPlan:
                 a = np.asarray(pl.arrays[field])
                 if recompute is not None:
                     a = recompute(pl, a)
-                outs.append(_pad_to(a, shape, value))
+                outs.append(ceval._pad2(a, shape, value))
             return np.stack(outs)
 
         def fix_gather_index(pl, gi):
@@ -325,17 +486,16 @@ class ShardedPlan:
             "remote_direct_idx": remote_direct_idx.astype(np.int32),
         }
         for lvl in range(depth):
+            shape = (R.bucket_rows[lvl], R.bucket_widths[lvl])
             gs, ns = [], []
             for pl in plans:
                 bg, bn = pl.arrays["bucket_gather"], pl.arrays["bucket_nodes"]
                 if lvl < len(bg):
-                    g = _pad_to(np.asarray(bg[lvl]),
-                                (c_pads[lvl], g_pads[lvl]), -1)
-                    n = _pad_to(np.asarray(bn[lvl]), (c_pads[lvl],),
-                                m_nodes)  # scratch
+                    g = ceval._pad2(np.asarray(bg[lvl]), shape, -1)
+                    n = ceval._pad2(np.asarray(bn[lvl]), shape[:1], scratch)
                 else:
-                    g = np.full((c_pads[lvl], g_pads[lvl]), -1, np.int32)
-                    n = np.full((c_pads[lvl],), m_nodes, np.int32)
+                    g = np.full(shape, -1, np.int32)
+                    n = np.full(shape[:1], scratch, np.int32)
                 gs.append(g)
                 ns.append(n)
             arrays[f"bucket_gather_{lvl}"] = np.stack(gs).astype(np.int32)
@@ -343,7 +503,20 @@ class ShardedPlan:
         for i, tbl in enumerate(halo_send):
             arrays[f"halo_send_{i}"] = tbl.astype(np.int32)
 
-        arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+        # ---- commit everything to its canonical mesh sharding at build
+        # time. Fresh (uncommitted) arrays and the committed outputs of a
+        # previously compiled step have different jit signatures, so a
+        # rebuild that handed the MD engine uncommitted arrays would
+        # retrace the step once even at identical shapes; committing here
+        # keeps one stable signature across every rebuild.
+        if mesh is None:
+            mesh = compat.make_mesh((nranks,), (axis,))
+        sharded = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(axis))
+        replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        arrays = {k: jax.device_put(jnp.asarray(v), sharded)
+                  for k, v in arrays.items()}
 
         # ---- device rank tables (charge staging + dynamics adapter)
         rank_gather = np.full((nranks, per_pad), -1, np.int64)
@@ -357,11 +530,14 @@ class ShardedPlan:
         kernel = kernel or cfg.make_kernel()
         return cls(config=cfg, kernel=kernel,
                    arrays=arrays, perm_rounds=perm_rounds, depth=depth,
-                   nranks=nranks, rcb=rcb, scratch_node=m_nodes,
+                   nranks=nranks, rcb=rcb, scratch_node=scratch,
                    per_pad=per_pad, num_points=points.shape[0],
                    padding_waste=waste, dtype=np.dtype(dtype),
-                   rank_gather=jnp.asarray(rank_gather, jnp.int32),
-                   input_pos=jnp.asarray(input_pos, jnp.int32),
+                   capacities=caps,
+                   rank_gather=jax.device_put(
+                       jnp.asarray(rank_gather, jnp.int32), sharded),
+                   input_pos=jax.device_put(
+                       jnp.asarray(input_pos, jnp.int32), replicated),
                    kernel_params=lift_params(kernel, np.dtype(dtype)),
                    mesh=mesh, axis=axis, mac_slack=mac_slack)
 
@@ -370,132 +546,53 @@ class ShardedPlan:
     # ------------------------------------------------------------------
 
     def _spmd_fn(self, donate: bool = False):
-        """Jitted shard_map executable (arrays, q_rank, params) ->
-        phi_rank, built once per plan and reused across charge vectors
-        AND kernel parameter values (params are traced, replicated).
+        """The shared jitted shard_map executable
+        (arrays, q_rank, params) -> phi_rank.
+
+        Resolved from the module SPMD cache by budget-derived statics, so
+        every plan padded into the same `ShardedCapacities` (every
+        `replan` in an MD run) receives the SAME callable and reuses its
+        compiled traces across charge vectors, kernel parameter values,
+        AND host rebuilds.
 
         `donate=True` donates the staged charge slab to the executable —
         phi_rank has the identical (P, per_pad) shape/dtype, so XLA
         aliases the output into it (the `donate_charges` contract for
         iterative loops). The forces path must NOT use the donating
         variant: it reuses one slab across three JVP evaluations."""
-        if donate:
-            if self._fn_donating is None:
-                self._fn_donating = self._build_spmd_fn(donate=True)
-            return self._fn_donating
-        if self._fn is not None:
-            return self._fn
-        self._fn = self._build_spmd_fn(donate=False)
-        return self._fn
-
-    def _build_spmd_fn(self, donate: bool):
-        degree, p = self.config.degree, self.nranks
-        depth, axis = self.depth, self.axis
-        perm_rounds = self.perm_rounds
+        held = self._fn_donating if donate else self._fn
+        if held is not None:
+            return held
         cfg = self.config
-        kernel = self.kernel.stripped()
-        space = cfg.space
-        backend = "xla" if cfg.backend == "auto" else cfg.backend
-        mesh = self.mesh
-        if mesh is None:
-            mesh = compat.make_mesh((p,), (axis,))
-            self.mesh = mesh
-
-        def spmd(args, q, params):
-            a = {k: v[0] for k, v in args.items()}  # strip sharded lead dim
-            q_sorted = q[0][a["charges_perm"]]
-
-            # local modified charges (scratch row stays zero: gather all -1)
-            lo, hi = a["node_lo"], a["node_hi"]
-            qhat = jnp.zeros((lo.shape[0], (degree + 1) ** 3),
-                             q_sorted.dtype)
-            for lvl in range(depth):
-                gidx = a[f"bucket_gather_{lvl}"]
-                nodes = a[f"bucket_nodes_{lvl}"]
-                center = 0.5 * (lo[nodes] + hi[nodes])
-                pts, qb = ceval._gathered(a["src_sorted"], q_sorted, gidx,
-                                          fill=center)
-                qh = ops.modified_charges(pts, qb, lo[nodes], hi[nodes],
-                                          degree=degree, backend=backend)
-                qhat = qhat.at[nodes].add(qh)  # scratch row may accumulate
-
-            grids = cheby.cluster_grid(lo, hi, degree)
-            tgt = a["tgt_batched"]
-            phi = ops.batch_cluster_eval(a["approx_idx"], tgt, grids, qhat,
-                                         params, kernel=kernel, space=space,
-                                         backend=backend)
-            leaf_pts, leaf_q = ceval._gathered(
-                a["src_sorted"], q_sorted, a["leaf_gather"])
-            phi += ops.batch_cluster_eval(a["direct_idx"], tgt, leaf_pts,
-                                          leaf_q, params, kernel=kernel,
-                                          space=space, backend=backend)
-
-            # LET phase 1: gather every rank's tree metadata + q_hat
-            g_lo = jax.lax.all_gather(lo, axis)        # (P, M, 3)
-            g_hi = jax.lax.all_gather(hi, axis)
-            g_qhat = jax.lax.all_gather(qhat, axis)    # (P, M, K3)
-            g_grids = cheby.cluster_grid(g_lo.reshape(-1, 3),
-                                         g_hi.reshape(-1, 3), degree)
-            phi += ops.batch_cluster_eval(
-                a["remote_approx_idx"], tgt, g_grids,
-                g_qhat.reshape(-1, (degree + 1) ** 3), params,
-                kernel=kernel, space=space, backend=backend)
-
-            # LET phase 2: halo leaf exchange (one permute per rank offset)
-            recv_pts, recv_q = [], []
-            for i, (off, pairs) in enumerate(perm_rounds):
-                send_idx = a[f"halo_send_{i}"]         # (H,) leaf slots
-                safe = jnp.maximum(send_idx, 0)
-                valid = (send_idx >= 0)[:, None]
-                sp = jnp.where(valid[..., None], leaf_pts[safe], 0.0)
-                sq = jnp.where(valid, leaf_q[safe], 0.0)
-                rp = jax.lax.ppermute(sp, axis, pairs)
-                rq = jax.lax.ppermute(sq, axis, pairs)
-                recv_pts.append(rp)
-                recv_q.append(rq)
-            if recv_pts:
-                halo_pts = jnp.concatenate(recv_pts, axis=0)
-                halo_q = jnp.concatenate(recv_q, axis=0)
-                phi += ops.batch_cluster_eval(
-                    a["remote_direct_idx"], tgt, halo_pts, halo_q, params,
-                    kernel=kernel, space=space, backend=backend)
-
-            out = phi.reshape(-1)[a["gather_index"]]
-            return out[None]
-
-        spec = jax.sharding.PartitionSpec(self.axis)
-        rep = jax.sharding.PartitionSpec()
-        specs = {k: spec for k in self.arrays}
-        param_specs = jax.tree.map(lambda _: rep, self.kernel_params)
-        return jax.jit(
-            compat.shard_map(spmd, mesh=mesh,
-                             in_specs=(specs, spec, param_specs),
-                             out_specs=spec),
-            donate_argnums=(1,) if donate else ())
-
-    def _stage_fn(self):
-        """Jitted device charge staging (N,) -> (P, per_pad) rank slabs
-        through the rank tables. The (N,) input cannot alias the padded
-        slab output, so no donation is requested here; `donate_charges`
-        instead donates the STAGED slab to the SPMD executable (see
-        `_spmd_fn`), whose phi output has the identical shape."""
-        if self._stage is not None:
-            return self._stage
-        rank_gather = self.rank_gather
-
-        def stage(q):
-            valid = rank_gather >= 0
-            return jnp.where(valid, q[jnp.maximum(rank_gather, 0)], 0.0)
-
-        self._stage = jax.jit(stage)
-        return self._stage
+        if self.mesh is None:
+            self.mesh = compat.make_mesh((self.nranks,), (self.axis,))
+        fn = _spmd_executable(
+            mesh=self.mesh, axis=self.axis, degree=cfg.degree,
+            depth=self.depth, perm_rounds=self.perm_rounds,
+            kernel=self.kernel.stripped(), space=cfg.space,
+            backend="xla" if cfg.backend == "auto" else cfg.backend,
+            keys=tuple(sorted(self.arrays)),
+            params_treedef=jax.tree.structure(self.kernel_params),
+            donate=donate)
+        if donate:
+            self._fn_donating = fn
+        else:
+            self._fn = fn
+        return fn
 
     def _rank_charges(self, charges) -> jnp.ndarray:
-        """(P, per_pad) rank-major charge slabs, zero-padded, ON DEVICE."""
+        """(P, per_pad) rank-major charge slabs, zero-padded, ON DEVICE
+        (the module-level `_stage_charges` jit: the gather table is a
+        traced argument, so every plan — and every within-budget replan
+        — shares its compiled traces). The (N,) input cannot alias the
+        padded slab output, so no donation is requested here;
+        `donate_charges` instead donates the STAGED slab to the SPMD
+        executable (see `_spmd_fn`), whose phi output has the identical
+        shape."""
         q = jnp.asarray(charges)
         if q.dtype != self.dtype:
             q = q.astype(self.dtype)
-        return self._stage_fn()(q)
+        return _stage_charges(self.rank_gather, q)
 
     def _params(self, kernel_params):
         if kernel_params is None:
@@ -524,9 +621,12 @@ class ShardedPlan:
 
     def potential_and_forces(self, charges, weights=None,
                              kernel_params=None):
-        """(phi, F): forces from three forward JVPs through the SPMD
-        program w.r.t. the target slab (collectives are linear, so the
-        tangents flow through all_gather/ppermute exactly)."""
+        """(phi, F) with F_i = -w_i * grad_x phi(x_i), input order.
+
+        Forces come from three forward JVPs through the SPMD program
+        w.r.t. the target slab (collectives are linear, so the tangents
+        flow through all_gather/ppermute exactly). `weights` defaults to
+        the charges (the physical force on charge q_i)."""
         fn = self._spmd_fn()
         # weights first: with weights=None they default to the charges,
         # which must be read before anything could consume their buffer.
@@ -551,7 +651,15 @@ class ShardedPlan:
         return phi, -w[:, None] * g
 
     def stats(self) -> dict:
+        """Geometry / cost / budget counters for the sharded strategy:
+        rank balance, padded slab width, the fixed halo-round schedule
+        (total rounds vs the rounds this build actually uses), padding
+        waste, and the full `ShardedCapacities` budget."""
         counts = self.rcb.counts()
+        caps = self.capacities
+        active = sum(
+            1 for i in range(len(self.perm_rounds))
+            if bool((np.asarray(self.arrays[f"halo_send_{i}"]) >= 0).any()))
         return dict(
             strategy="sharded",
             nranks=self.nranks,
@@ -560,19 +668,33 @@ class ShardedPlan:
             rank_counts=counts.tolist(),
             slab_pad=self.per_pad,
             halo_rounds=len(self.perm_rounds),
+            halo_rounds_active=active,
             padding_waste=self.padding_waste,
             dtype=str(self.dtype),
             space=repr(self.config.space),
             mac_slack=self.mac_slack,
+            capacity_padded=caps is not None,
+            **({"capacities": dataclasses.asdict(caps)} if caps else {}),
         )
 
-    def replan(self, targets, sources=None) -> "ShardedPlan":
+    def replan(self, targets, sources=None, *,
+               capacities="keep") -> "ShardedPlan":
+        """Rebuild geometry for moved particles under the same config.
+
+        `capacities="keep"` (default) re-pads the new geometry into this
+        plan's own budget (growing it geometrically if the new build no
+        longer fits), so the rebuilt plan is pytree-shape-identical and
+        shares the compiled SPMD executable — the sharded MD rebuild
+        path. Pass "auto" to re-budget from the new build's needs, or an
+        explicit `repro.core.eval.ShardedCapacities`."""
         if sources is not None and sources is not targets:
             raise ValueError("sharded plans require targets == sources")
+        if capacities == "keep":
+            capacities = self.capacities
         points = np.asarray(targets, self.dtype)
         return ShardedPlan.build(points, self.config, self.nranks,
                                  mesh=self.mesh, axis=self.axis,
-                                 kernel=self.kernel)
+                                 kernel=self.kernel, capacities=capacities)
 
 
 # ---------------------------------------------------------------------------

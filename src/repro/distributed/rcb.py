@@ -28,6 +28,14 @@ class RCB:
     def counts(self) -> np.ndarray:
         return np.diff(self.starts)
 
+    def max_count(self) -> int:
+        """Widest slab — the raw need behind the sharded plan's
+        `slab_width` budget (`ShardedCapacities`, DESIGN.md §7). RCB is
+        count-balanced (|count_r − N/P| <= 1), so across MD rebuilds at
+        fixed N this need moves by at most one, which the budget's
+        headroom absorbs: re-cuts stay shape-stable."""
+        return int(self.counts().max())
+
 
 def rcb_partition(points: np.ndarray, nranks: int) -> RCB:
     """Partition into P contiguous slabs.

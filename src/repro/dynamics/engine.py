@@ -16,7 +16,9 @@ One `Simulation.step()` is:
 
     Rebuild count  <= steps/K + (drift-triggered rebuilds, rare at MD dt)
     Retraces       == 0 unless a capacity grows (geometric, so O(log) in
-                      the worst case) or a sharded plan rebuilds.
+                      the worst case) — on BOTH strategies: sharded plans
+                      are budget-padded too (`ShardedCapacities`), so
+                      their rebuilds reuse the compiled SPMD step.
 
 `stats()` reports refit/rebuild/retrace counters; `run(record_every=)`
 logs energy/momentum/temperature via one fused device reduction; the
@@ -56,7 +58,8 @@ class Simulation:
         positions with targets == sources (`SingleDevicePlan` or
         `ShardedPlan`). Single-device plans without capacity padding are
         transparently re-padded (`capacities="auto"`) so replans reuse
-        compiled executables.
+        compiled executables; sharded plans are always built
+        capacity-padded (`ShardedCapacities`) and need no re-pad.
       charges: (N,) source charges q_i (also the force weights).
       dt: time step.
       velocities: (N, 3) initial velocities (default zero).
@@ -126,8 +129,8 @@ class Simulation:
         # the primary cell at every rebuild, where the fresh tree splits
         # boundary-straddling clusters by construction.
         self.space = self.plan.config.space
-        self.state: MDState = initial_state(
-            self.adapter.positions(), velocities, seed=seed, dtype=dtype)
+        self.state: MDState = self.adapter.commit(initial_state(
+            self.adapter.positions(), velocities, seed=seed, dtype=dtype))
         self._arrays = self.adapter.arrays
         self._x_ref = self.state.x
         self._slack = float(self.adapter.mac_slack)
@@ -193,9 +196,10 @@ class Simulation:
         self._init_forces = jax.jit(init_forces)
 
     def _remake_finish(self):
-        """Sharded rebuilds re-close over a new SPMD executable; retire
-        the force-dependent jits (their compiles keep counting toward
-        retraces — the `advance` jit is plan-independent and survives)."""
+        """A budget-growing sharded rebuild re-closes over the grown
+        plan's new SPMD executable; retire the force-dependent jits
+        (their compiles keep counting toward retraces — the `advance`
+        jit is plan-independent and survives)."""
         self._finish_history_compiles += _cache_size(self._finish)
         self._finish_history_compiles += _cache_size(self._init_forces)
         self._make_force_closures()
@@ -247,10 +251,12 @@ class Simulation:
             s1 = s1._replace(x=self.space.wrap(s1.x))
             invalidated = self.adapter.rebuild(np.asarray(s1.x))
             if invalidated:
+                # A capacity budget grew: the new shapes force a retrace
+                # (counted), deliberately — geometric growth bounds how
+                # often this can ever happen.
+                self.capacity_growths += 1
                 if self.adapter.recloses_on_rebuild:
                     self._remake_finish()
-                else:
-                    self.capacity_growths += 1
             self.plan = self.adapter.plan
             self._arrays = self.adapter.arrays
             self._x_ref = s1.x
@@ -297,6 +303,10 @@ class Simulation:
     # ------------------------------------------------------------------
 
     def diagnostics(self) -> dict:
+        """Energy / momentum / temperature at the current state, computed
+        in one fused device reduction (`repro.dynamics.diagnostics`).
+        Integrators that leave phi/f at a midpoint get one extra force
+        evaluation here so the reported energy is consistent."""
         if not self.integrator.phi_at_step_end and self.steps > 0:
             # Position-Verlet leaves phi/f at the midpoint; refresh them
             # at the current positions so the energy is consistent (one
@@ -308,6 +318,34 @@ class Simulation:
         return diag.summarize(self.state, self.charges, self.masses)
 
     def stats(self) -> dict:
+        """Engine counters and budgets. Semantics:
+
+        - ``steps``: integration steps taken (one force evaluation each;
+          ``force_evals`` additionally counts the initial evaluation and
+          any diagnostics-driven refreshes).
+        - ``refits``: steps serviced by the device tree refit alone — no
+          host work beyond the one drift scalar.
+        - ``rebuilds``: host tree rebuilds, split into ``rebuilds_drift``
+          (the MAC slack budget was exhausted) and ``rebuilds_interval``
+          (the K-step fallback elapsed); ``rebuild="always"`` rebuilds
+          count toward neither split.
+        - ``compiles``: total jit compilations of the step executables
+          (advance + force closures, including retired ones).
+        - ``retraces``: compiles beyond the baseline paid by the end of
+          step 1. This is 0 while every rebuild fits the plan's capacity
+          budget — on BOTH strategies: single-device plans re-pad into
+          `Capacities`, sharded plans into `ShardedCapacities`, and a
+          sharded rebuild inside its budget reuses the compiled SPMD
+          step. Retraces occur only when a budget grows.
+        - ``capacity_growths``: rebuilds that overflowed a budget and
+          re-padded into geometrically grown capacities — each one is a
+          deliberate, counted retrace, and geometric growth bounds their
+          total number over any run.
+        - ``mac_slack`` / ``drift_budget`` / ``last_drift``: the refit
+          validity margin (DESIGN.md §4), the drift it allows, and the
+          drift measured at the last step.
+        - ``plan``: the underlying plan's own `stats()`.
+        """
         return dict(
             steps=self.steps,
             refits=self.refits,
@@ -331,6 +369,8 @@ class Simulation:
         )
 
     def save_checkpoint(self, background: bool = True) -> None:
+        """Snapshot (x, v, f, phi, key) atomically via the configured
+        `Checkpointer` (asynchronously by default)."""
         if self.checkpointer is None:
             raise ValueError("Simulation built without a checkpointer")
         self.checkpointer.save(
@@ -346,15 +386,14 @@ class Simulation:
             raise ValueError("Simulation built without a checkpointer")
         tree, step, _meta = self.checkpointer.restore(
             self.state._asdict(), step=step)
-        self.state = MDState(**{k: jnp.asarray(v)
-                                for k, v in tree.items()})
+        self.state = self.adapter.commit(
+            MDState(**{k: jnp.asarray(v) for k, v in tree.items()}))
         self.state = self.state._replace(x=self.space.wrap(self.state.x))
         invalidated = self.adapter.rebuild(np.asarray(self.state.x))
         if invalidated:
+            self.capacity_growths += 1
             if self.adapter.recloses_on_rebuild:
                 self._remake_finish()
-            else:
-                self.capacity_growths += 1
         self.rebuilds += 1
         self.plan = self.adapter.plan
         self._arrays = self.adapter.arrays

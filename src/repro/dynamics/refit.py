@@ -71,9 +71,15 @@ def refit_single_arrays(arrays: dict, x: jnp.ndarray) -> dict:
                 tgt_batched=flat.reshape(b, nb, 3))
 
 
-def refit_sharded_arrays(arrays: dict, io: dict, x: jnp.ndarray,
+def refit_sharded_arrays(arrays: dict, x: jnp.ndarray,
                          depth: int) -> dict:
     """Refit a sharded plan's stacked (P, ...) arrays to new positions.
+
+    `arrays` is the adapter's merged dict: the plan's stacked arrays PLUS
+    the device rank tables (`rank_gather`, `input_pos`) — the tables ride
+    through the jitted step as traced arguments, so a host rebuild swaps
+    their VALUES without invalidating the compiled step (the retrace-free
+    sharded-MD contract, DESIGN.md §7).
 
     The RCB rank assignment is frozen with the topology (particles may
     drift across slab boundaries; correctness only needs each rank's
@@ -81,7 +87,7 @@ def refit_sharded_arrays(arrays: dict, io: dict, x: jnp.ndarray,
     are batched over the rank dimension — jit/shard-map friendly.
     """
     x = x.astype(arrays["src_sorted"].dtype)
-    rank_gather = io["rank_gather"]                      # (P, per_pad)
+    rank_gather = arrays["rank_gather"]                  # (P, per_pad)
     valid_slab = rank_gather >= 0
     x_rank = jnp.where(valid_slab[..., None],
                        x[jnp.maximum(rank_gather, 0)], 0.0)
@@ -140,14 +146,23 @@ class PlanAdapter:
     paper) and returns True when compiled executables were invalidated."""
 
     plan = None
-    # True when a host rebuild swaps the underlying compiled executable
-    # (sharded: new shard_map closure), so the engine must re-close and
-    # count the recompilation as a retrace.
+    # True when an INVALIDATING rebuild (capacity-budget growth) swaps
+    # the underlying compiled executable, so the engine must re-close its
+    # force-dependent jits and count the recompilation as a retrace.
+    # Budget-fitting rebuilds never invalidate on either strategy.
     recloses_on_rebuild = False
 
     def positions(self) -> np.ndarray:
         """Current particle positions in input order (host)."""
         raise NotImplementedError
+
+    def commit(self, tree):
+        """Pin a pytree of device arrays to the plan's canonical input
+        sharding (identity for single-device plans). The engine commits
+        the initial MD state through this so every step — including the
+        first after a host rebuild — sees one stable jit signature; a
+        committed/uncommitted or sharding flip would retrace the step."""
+        return tree
 
     @property
     def arrays(self) -> dict:
@@ -168,6 +183,9 @@ class PlanAdapter:
         raise NotImplementedError
 
     def rebuild(self, x_host: np.ndarray) -> bool:
+        """Host tree rebuild at new positions, re-padded into the plan's
+        capacity budget; returns True only when a budget overflowed (the
+        compiled executables were invalidated)."""
         raise NotImplementedError
 
     def sync_arrays(self, arrays: dict) -> None:
@@ -220,7 +238,23 @@ class SingleDeviceAdapter(PlanAdapter):
 
 
 class ShardedAdapter(PlanAdapter):
+    """Adapter over `ShardedPlan`. The engine's jitted step must survive
+    a host rebuild without retracing, so nothing rebuild-dependent may be
+    a closure constant of the traced step:
+
+      - the device rank tables (`rank_gather`, `input_pos`) are merged
+        into the `arrays` pytree the engine threads through its jitted
+        step — a rebuild swaps their VALUES as ordinary traced arguments;
+      - the SPMD callable comes from the module executable cache keyed on
+        budget-derived statics (`ShardedPlan._spmd_fn`), so a rebuild
+        inside the same `ShardedCapacities` budget rebinds to the SAME
+        object and the captured closure stays valid.
+
+    Only a capacity-budget growth (shape/schedule change) invalidates the
+    step; `rebuild` reports exactly that."""
+
     recloses_on_rebuild = True
+    _IO_KEYS = ("rank_gather", "input_pos")
 
     def __init__(self, plan):
         self.plan = plan
@@ -241,16 +275,22 @@ class ShardedAdapter(PlanAdapter):
         return out
 
     def _bind(self):
-        # The plan now builds its own device rank tables (they also drive
-        # its device-side charge staging); the adapter shares them.
-        plan = self.plan
-        self.io = dict(rank_gather=plan.rank_gather,
-                       input_pos=plan.input_pos)
-        self._fn = plan._spmd_fn()
+        self._fn = self.plan._spmd_fn()
+
+    def commit(self, tree):
+        # Per-particle MD state is replicated over the mesh (the SPMD
+        # program shards its own arrays; state enters through the rank
+        # gather tables).
+        rep = jax.sharding.NamedSharding(
+            self.plan.mesh, jax.sharding.PartitionSpec())
+        return jax.tree.map(lambda v: jax.device_put(v, rep), tree)
 
     @property
     def arrays(self) -> dict:
-        return self.plan.arrays
+        # Plan arrays + device rank tables: one traced pytree argument.
+        plan = self.plan
+        return dict(plan.arrays, rank_gather=plan.rank_gather,
+                    input_pos=plan.input_pos)
 
     @property
     def mac_slack(self) -> float:
@@ -258,24 +298,28 @@ class ShardedAdapter(PlanAdapter):
 
     def signature(self) -> Tuple:
         # The sharded arrays dict is a plain {name: array} mapping, so
-        # the core signature helper applies as-is.
+        # the core signature helper applies as-is. Budget changes always
+        # show up here: widths change shapes, halo-round or level-count
+        # changes add/remove keys.
         return _eval.plan_signature(self.plan)
 
     def refit(self, arrays: dict, x) -> dict:
-        return refit_sharded_arrays(arrays, self.io, x, self.plan.depth)
+        return refit_sharded_arrays(arrays, x, self.plan.depth)
 
     def force_fn(self) -> Callable:
-        fn, io = self._fn, self.io
+        fn = self._fn                     # shared cached SPMD executable
         dtype = self.plan.dtype
-        params = self.plan.kernel_params
+        params = self.plan.kernel_params  # values fixed by the config
+        io_keys = self._IO_KEYS
 
         def force(arrays, x, q, w):
-            rank_gather = io["rank_gather"]
+            rank_gather = arrays["rank_gather"]
             valid = rank_gather >= 0
             q_rank = jnp.where(valid, q.astype(dtype)[
                 jnp.maximum(rank_gather, 0)], 0.0)
             tgt = arrays["tgt_batched"]
-            rest = {k: v for k, v in arrays.items() if k != "tgt_batched"}
+            rest = {k: v for k, v in arrays.items()
+                    if k != "tgt_batched" and k not in io_keys}
 
             def phi_of(t):
                 return fn(dict(rest, tgt_batched=t), q_rank, params)
@@ -286,7 +330,7 @@ class ShardedAdapter(PlanAdapter):
                 phi_rank, dphi = jax.jvp(phi_of, (tgt,), (tangent,))
                 grads.append(dphi)
             g_rank = jnp.stack(grads, axis=-1)       # (P, per_pad, 3)
-            pos = io["input_pos"]
+            pos = arrays["input_pos"]
             phi = phi_rank.reshape(-1)[pos]
             g = g_rank.reshape(-1, 3)[pos]
             return phi, -w[:, None].astype(dtype) * g
@@ -294,12 +338,23 @@ class ShardedAdapter(PlanAdapter):
         return force
 
     def rebuild(self, x_host: np.ndarray) -> bool:
-        self.plan = self.plan.replan(x_host)
-        self._bind()                 # new spmd fn + io tables
-        return True                  # sharded rebuilds always re-close
+        old_sig = self.signature()
+        self.plan = self.plan.replan(x_host)   # keeps capacities, grows
+        if self.signature() == old_sig:
+            # Budget held: with the config fixed, an equal signature
+            # means equal budget statics, so the adapter's held `_fn`
+            # (and every compiled trace closed over it) stays valid —
+            # deliberately NOT re-fetched from the module cache, whose
+            # FIFO eviction could hand back a fresh equivalent object.
+            return False
+        # The budget grew: new shapes/schedule mean a new SPMD
+        # executable, so the engine re-closes and counts it.
+        self._bind()
+        return True
 
     def sync_arrays(self, arrays: dict) -> None:
-        self.plan.arrays = arrays
+        self.plan.arrays = {k: v for k, v in arrays.items()
+                            if k not in self._IO_KEYS}
 
 
 def make_adapter(plan) -> PlanAdapter:

@@ -325,6 +325,152 @@ def test_checkpointer_maybe_restore_empty(tmp_path):
 # ---------------------------------------------------------------------------
 
 
+def test_sharded_capacities_budget_policy():
+    """Host-side `ShardedCapacities` semantics: headroom at creation,
+    geometric growth on overflow, symmetric halo-offset widening, and
+    idempotence once a need fits (no devices required)."""
+    from repro.core.eval import Capacities, ShardedCapacities
+
+    rank = dict(num_batches=10, batch_width=24, num_leaves=10,
+                leaf_width=24, num_nodes=17, approx_width=6,
+                direct_width=10, depth=3, bucket_rows=(1, 2, 8),
+                bucket_widths=(512, 128, 32), upward_rows=())
+    need = dict(nranks=4, rank=rank, slab_width=250,
+                remote_approx_width=5, remote_direct_width=20,
+                halo_offsets=(-1, 1, 2), halo_width=30)
+    caps = ShardedCapacities.for_need(need)
+    assert caps.fits(need)
+    assert isinstance(caps.rank, Capacities)
+    assert caps.slab_width >= 250 and caps.halo_width >= 30
+    # offset schedule is the symmetric contiguous range over max |off|
+    assert caps.halo_offsets == (-2, -1, 1, 2)
+    assert caps.rank.num_nodes >= 17 + 1  # scratch row
+
+    # fitting growth is the identity
+    assert caps.grown_to_fit(need) == caps
+    # width overflow grows geometrically (at least growth x the budget)
+    big = dict(need, halo_width=caps.halo_width + 1)
+    grown = caps.grown_to_fit(big)
+    assert grown.halo_width >= int(caps.halo_width * caps.growth)
+    assert grown.fits(big) and grown.fits(need)
+    # a rank offset outside the schedule widens the symmetric range
+    far = dict(need, halo_offsets=(-1, 3))
+    assert caps.grown_to_fit(far).halo_offsets == (-3, -2, -1, 1, 2, 3)
+    # the budget is bound to its rank count
+    with pytest.raises(ValueError):
+        caps.grown_to_fit(dict(need, nranks=8))
+
+
+def test_sharded_md_traces_step_exactly_once():
+    """The tentpole contract: K-step sharded MD on a 4-device mesh with
+    >= 2 drift/interval rebuilds reuses the compiled SPMD step — every
+    engine executable traces exactly once, retraces == 0."""
+    out = _run_sub("""
+        import numpy as np
+        from repro.core.api import TreecodeConfig, TreecodeSolver
+        from repro.dynamics import Simulation
+        from repro.dynamics.engine import _cache_size
+
+        rng = np.random.default_rng(0)
+        n = 800
+        x = rng.uniform(-1, 1, (n, 3)).astype(np.float32)
+        q = (rng.uniform(-1, 1, n) * 0.05).astype(np.float32)
+        solver = TreecodeSolver(
+            TreecodeConfig(theta=0.8, degree=3, leaf_size=32))
+        sim = Simulation(solver.plan(x, nranks=4), q, dt=2e-4,
+                         refit_interval=5)
+        sim.run(16)
+        s = sim.stats()
+        print("REBUILDS", s["rebuilds"], "RETRACES", s["retraces"],
+              "COMPILES", s["compiles"])
+        assert s["rebuilds"] >= 2, s
+        assert s["refits"] >= 1, s
+        assert s["retraces"] == 0, s
+        assert _cache_size(sim._finish) == 1, s      # one trace, ever
+        assert s["compiles"] == 3, s  # advance + finish + init_forces
+        assert s["capacity_growths"] == 0, s
+        assert s["plan"]["capacity_padded"]
+    """, devices=4)
+    assert "RETRACES 0" in out
+
+
+def test_sharded_budget_replan_matches_fresh_build():
+    """A replan into a kept budget computes the same potentials as a
+    freshly budgeted build of the same geometry (padding is inert), and
+    overflowing the budget grows it geometrically with a new executable
+    that is still correct against the O(N^2) direct sum."""
+    _run_sub("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core.api import TreecodeConfig, TreecodeSolver
+        from repro.core.direct import direct_sum
+
+        rng = np.random.default_rng(1)
+        n = 1200
+        x = rng.uniform(-1, 1, (n, 3)).astype(np.float32)
+        q = rng.uniform(-1, 1, n).astype(np.float32)
+        solver = TreecodeSolver(TreecodeConfig(
+            theta=0.7, degree=4, leaf_size=48, backend="xla"))
+        plan = solver.plan(x, nranks=2)
+
+        x1 = (x + rng.normal(0, 0.01, x.shape)).astype(np.float32)
+        kept = plan.replan(x1)                 # same budget, same fn
+        fresh = solver.plan(x1, nranks=2)      # fresh auto budget
+        assert kept.capacities == plan.capacities
+        assert kept._spmd_fn() is plan._spmd_fn()
+        np.testing.assert_allclose(np.asarray(kept.execute(q)),
+                                   np.asarray(fresh.execute(q)),
+                                   rtol=2e-5, atol=2e-5)
+
+        # budget overflow: replan over a grown particle set — the slab
+        # width need exceeds the kept budget's headroom and must grow
+        # geometrically (while staying correct)
+        extra = rng.uniform(-1, 1, (n, 3)).astype(np.float32)
+        x2 = np.concatenate([x1, extra])
+        q2 = rng.uniform(-1, 1, 2 * n).astype(np.float32)
+        grown = plan.replan(x2)
+        pc, gc = plan.capacities, grown.capacities
+        assert gc != pc
+        assert gc.slab_width >= int(pc.slab_width * pc.growth)
+        phi = grown.execute(q2)
+        ref = direct_sum(jnp.asarray(x2), jnp.asarray(x2),
+                         jnp.asarray(q2), kernel=solver.kernel)
+        err = float(jnp.linalg.norm(ref - phi) / jnp.linalg.norm(ref))
+        print("overflow err", err)
+        assert err < 5e-4, err
+        # and growth is sticky: replanning back keeps the grown budget
+        again = grown.replan(x1)
+        assert again.capacities == grown.capacities
+    """, devices=2)
+
+
+def test_sharded_refit_trajectory_matches_rebuild_oracle():
+    """Budget-padded sharded refit MD follows the rebuild-every-step
+    oracle of the same system to treecode tolerance."""
+    _run_sub("""
+        import numpy as np
+        from repro.core.api import TreecodeConfig, TreecodeSolver
+        from repro.dynamics import Simulation
+
+        rng = np.random.default_rng(0)
+        n = 500
+        x = rng.uniform(-1, 1, (n, 3)).astype(np.float32)
+        q = (rng.uniform(-1, 1, n) * 0.05).astype(np.float32)
+        solver = TreecodeSolver(
+            TreecodeConfig(theta=0.8, degree=3, leaf_size=32))
+        sa = Simulation(solver.plan(x, nranks=2), q, dt=2e-4,
+                        refit_interval=6)
+        sb = Simulation(solver.plan(x, nranks=2), q, dt=2e-4,
+                        rebuild="always")
+        sa.run(12); sb.run(12)
+        xa = np.asarray(sa.state.x); xb = np.asarray(sb.state.x)
+        dev = float(np.max(np.abs(xa - xb)) / np.abs(xb).max())
+        print("DEV", dev)
+        assert dev < 1e-4, dev
+        assert sa.stats()["rebuilds"] < sb.stats()["rebuilds"]
+        assert sa.stats()["retraces"] == 0, sa.stats()
+    """, devices=2)
+
+
 def test_sharded_engine_matches_single_device():
     out = _run_sub("""
         import numpy as np
