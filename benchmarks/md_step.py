@@ -3,23 +3,31 @@
 Runs the same trajectory twice from identical initial conditions:
 
   - "refit":   `Simulation(rebuild="auto")` — device tree refit between
-    host rebuilds (every K steps / on drift trigger), capacity-padded
-    shape-stable replans, fully device-resident inner step;
+    host rebuilds (drift-budget v2: per-step drift checked against the
+    on-device refreshed theta/fold slacks, Verlet-skin dual lists, the
+    interval K only as a fallback), capacity-padded shape-stable
+    replans, fully device-resident inner step;
   - "rebuild": `Simulation(rebuild="always")` — a host tree build +
     re-pad every step, the behaviour of the pre-dynamics example loop.
 
-Emits BENCH_md_step.json with ms/step for both modes, refit/rebuild/
-retrace counters, energy drift, and the relative trajectory deviation
-between the two modes (both are MAC-accurate force approximations of the
-same system, so they agree to treecode tolerance over the run).
+Emits BENCH_md_step.json with ms/step for both modes, a per-step
+timeline of the refit run classifying each step (refit vs rebuild) and
+the median rebuild/refit step-time ratio, refit/rebuild/retrace
+counters, energy drift, the relative trajectory deviation between the
+two modes, and the end-of-run force error of BOTH modes against the
+float64 direct-sum oracle (the identical-accuracy acceptance check).
 
     PYTHONPATH=src python benchmarks/md_step.py \
-        [--n 1500] [--steps 200] [--refit-interval 25] [--check]
+        [--n 1500] [--steps 200] [--skin 0.05] [--refit-interval 100] \
+        [--max-rebuilds N] [--check]
 
 `--check` asserts the smoke thresholds (used by CI): >= 1 refit without
 a rebuild, energy drift below --drift-tol, trajectory deviation below
---traj-tol, retraces <= 2 after the first step, rebuilds <= steps/K, and
-refit ms/step < rebuild ms/step.
+--traj-tol, retraces <= 2 after the first step, rebuilds <= steps/K,
+refit ms/step < rebuild ms/step, refit-mode force error within
+--force-factor of the rebuild-every-step mode's against the f64 oracle,
+and — when --max-rebuilds is given — the rebuild-count regression gate
+(must not exceed the seed trajectory's count).
 """
 import argparse
 import json
@@ -32,12 +40,27 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
+from repro.core.direct import direct_oracle_f64  # noqa: E402
 from repro.dynamics import Simulation  # noqa: E402
+
+
+def json_safe(obj):
+    """Replace non-finite floats (inf fold_slack in free space, NaN
+    ratios) with None: json.dump would emit Infinity/NaN tokens that
+    strict RFC-8259 parsers reject."""
+    if isinstance(obj, dict):
+        return {k: json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
 
 
 def build_sim(x, q, args, rebuild):
     solver = TreecodeSolver(TreecodeConfig(
-        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size))
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        skin=args.skin))
     return Simulation(solver.plan(x), q, dt=args.dt,
                       integrator=args.integrator,
                       refit_interval=args.refit_interval, rebuild=rebuild)
@@ -45,11 +68,36 @@ def build_sim(x, q, args, rebuild):
 
 def run_mode(x, q, args, rebuild):
     sim = build_sim(x, q, args, rebuild)
+    sim.log.record(0, sim.diagnostics())  # E(0) baseline for drift()
     sim.step()                       # compile + first step (excluded)
+    record = max(1, args.steps // 20)
+    timeline = []
     t0 = time.time()
-    sim.run(args.steps - 1, record_every=max(1, args.steps // 20))
+    for _ in range(args.steps - 1):
+        before = sim.rebuilds
+        ts = time.time()
+        sim.step()
+        sim.state.x.block_until_ready()
+        timeline.append(dict(
+            ms=(time.time() - ts) * 1e3,
+            kind="rebuild" if sim.rebuilds > before else "refit"))
+        if sim.steps % record == 0:
+            sim.log.record(sim.steps, sim.diagnostics())
     steady = time.time() - t0
+    refit_ms = [t["ms"] for t in timeline if t["kind"] == "refit"]
+    rebuild_ms = [t["ms"] for t in timeline if t["kind"] == "rebuild"]
+    # None (-> JSON null), not NaN: json.dump would emit a literal NaN
+    # token that strict JSON parsers reject.
+    ratio = (float(np.median(rebuild_ms)) / float(np.median(refit_ms))
+             if refit_ms and rebuild_ms else None)
     s = sim.stats()
+
+    # End-of-run force accuracy vs the f64 direct-sum oracle (host-side
+    # NumPy double precision, independent of the jax x64 mode).
+    _, f_ref = direct_oracle_f64(np.asarray(sim.state.x), q,
+                                 kernel=sim.plan.kernel)
+    force_err = float(np.linalg.norm(np.asarray(sim.state.f) - f_ref)
+                      / max(np.linalg.norm(f_ref), 1e-30))
     return sim, dict(
         mode=rebuild,
         ms_per_step=steady / max(args.steps - 1, 1) * 1e3,
@@ -59,11 +107,19 @@ def run_mode(x, q, args, rebuild):
         rebuilds=s["rebuilds"],
         rebuilds_drift=s["rebuilds_drift"],
         rebuilds_interval=s["rebuilds_interval"],
+        rebuilds_forced=s["rebuilds_forced"],
         retraces=s["retraces"],
+        rebuild_over_refit=ratio,
         energy_drift=sim.log.drift(),
         momentum_drift=sim.log.momentum_drift(),
         mac_slack=s["mac_slack"],
+        theta_slack=s["theta_slack"],
+        fold_slack=s["fold_slack"],
+        skin=s["skin"],
+        drift_budget=s["drift_budget"],
         last_drift=s["last_drift"],
+        force_error_f64=force_err,
+        timeline=timeline,
     )
 
 
@@ -75,13 +131,27 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=0.8)
     ap.add_argument("--degree", type=int, default=4)
     ap.add_argument("--leaf-size", type=int, default=64)
+    ap.add_argument("--skin", type=float, default=0.05,
+                    help="Verlet-skin radius (drift-budget v2 default)")
     ap.add_argument("--integrator", default="velocity_verlet")
-    ap.add_argument("--refit-interval", type=int, default=25)
+    ap.add_argument("--refit-interval", type=int, default=100,
+                    help="fallback interval K (v2: drift validity is "
+                    "guarded per step by the refreshed budgets)")
     ap.add_argument("--out", default="BENCH_md_step.json")
     ap.add_argument("--check", action="store_true",
                     help="assert smoke thresholds (CI)")
     ap.add_argument("--drift-tol", type=float, default=1e-3)
     ap.add_argument("--traj-tol", type=float, default=1e-2)
+    ap.add_argument("--force-factor", type=float, default=2.0,
+                    help="max refit-mode / rebuild-mode f64 force-error "
+                    "ratio (identical-accuracy gate)")
+    ap.add_argument("--speedup-floor", type=float, default=1.0,
+                    help="min refit-vs-rebuild speedup; smoke sizes pass "
+                    "<1 because the host rebuild cost they save is "
+                    "within CI timing noise")
+    ap.add_argument("--max-rebuilds", type=int, default=0,
+                    help="regression gate: refit-mode rebuilds must not "
+                    "exceed this (0 = skip; CI passes the seed count)")
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(0)
@@ -100,35 +170,50 @@ def main(argv=None):
         bench="md_step",
         n=args.n, steps=args.steps, dt=args.dt,
         theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        skin=args.skin,
         integrator=args.integrator, refit_interval=args.refit_interval,
         refit=refit, rebuild=rebuild,
+        rebuild_over_refit=refit["rebuild_over_refit"],
         speedup=speedup, trajectory_deviation=traj_dev,
     )
     with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(json_safe(result), f, indent=2)
 
     print(f"refit:   {refit['ms_per_step']:8.1f} ms/step  "
           f"rebuilds {refit['rebuilds']}  refits {refit['refits']}  "
           f"retraces {refit['retraces']}  "
-          f"drift {refit['energy_drift']:.2e}")
+          f"drift {refit['energy_drift']:.2e}  "
+          f"F-err(f64) {refit['force_error_f64']:.2e}")
     print(f"rebuild: {rebuild['ms_per_step']:8.1f} ms/step  "
-          f"rebuilds {rebuild['rebuilds']}")
-    print(f"speedup {speedup:.2f}x  trajectory deviation {traj_dev:.2e}")
+          f"rebuilds {rebuild['rebuilds']}  "
+          f"F-err(f64) {rebuild['force_error_f64']:.2e}")
+    ratio = refit["rebuild_over_refit"]
+    print(f"speedup {speedup:.2f}x  trajectory deviation {traj_dev:.2e}  "
+          f"rebuild/refit step ratio "
+          f"{'n/a' if ratio is None else f'{ratio:.2f}x'}")
     print(f"wrote {args.out}")
 
     if args.check:
         k = args.refit_interval
+        f_gate = (refit["force_error_f64"]
+                  <= args.force_factor * rebuild["force_error_f64"] + 1e-6)
         checks = {
             "at least one refit without rebuild": refit["refits"] >= 1,
-            f"rebuilds <= steps/K = {args.steps // k}":
+            f"rebuilds <= steps/K = {max(args.steps // k, 1)}":
                 refit["rebuilds"] <= max(args.steps // k, 1),
             "retraces <= 2 after first step": refit["retraces"] <= 2,
             f"energy drift < {args.drift_tol}":
                 refit["energy_drift"] < args.drift_tol,
             f"trajectory deviation < {args.traj_tol}":
                 traj_dev < args.traj_tol,
-            "refit faster than rebuild-every-step": speedup > 1.0,
+            f"refit/rebuild speedup > {args.speedup_floor}":
+                speedup > args.speedup_floor,
+            f"f64 force error within {args.force_factor}x of rebuild mode":
+                f_gate,
         }
+        if args.max_rebuilds:
+            checks[f"rebuilds <= seed count {args.max_rebuilds}"] = \
+                refit["rebuilds"] <= args.max_rebuilds
         failed = [name for name, ok in checks.items() if not ok]
         for name, ok in checks.items():
             print(f"  [{'ok' if ok else 'FAIL'}] {name}")

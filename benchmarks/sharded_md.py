@@ -45,6 +45,8 @@ def main(argv=None):
     ap.add_argument("--theta", type=float, default=0.8)
     ap.add_argument("--degree", type=int, default=3)
     ap.add_argument("--leaf-size", type=int, default=32)
+    ap.add_argument("--skin", type=float, default=0.05,
+                    help="Verlet-skin radius (drift-budget v2 default)")
     ap.add_argument("--refit-interval", type=int, default=8)
     ap.add_argument("--out", default="BENCH_sharded_md.json")
     ap.add_argument("--check", action="store_true",
@@ -52,6 +54,9 @@ def main(argv=None):
     ap.add_argument("--drift-tol", type=float, default=1e-3)
     ap.add_argument("--rebuild-factor", type=float, default=2.0,
                     help="max median rebuild-step / refit-step ratio")
+    ap.add_argument("--max-rebuilds", type=int, default=0,
+                    help="regression gate: rebuilds must not exceed this "
+                    "(0 = skip; CI passes the seed trajectory's count)")
     args = ap.parse_args(argv)
 
     import jax
@@ -68,7 +73,8 @@ def main(argv=None):
     q = (rng.uniform(-1, 1, args.n) * 0.05).astype(np.float32)
 
     solver = TreecodeSolver(TreecodeConfig(
-        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size))
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        skin=args.skin))
     sim = Simulation(solver.plan(x, nranks=nranks), q, dt=args.dt,
                      refit_interval=args.refit_interval)
 
@@ -88,21 +94,24 @@ def main(argv=None):
 
     refit_ms = [t["ms"] for t in timeline if t["kind"] == "refit"]
     rebuild_ms = [t["ms"] for t in timeline if t["kind"] == "rebuild"]
-    med_refit = float(np.median(refit_ms)) if refit_ms else float("nan")
-    med_rebuild = (float(np.median(rebuild_ms)) if rebuild_ms
-                   else float("nan"))
-    ratio = med_rebuild / med_refit if refit_ms and rebuild_ms \
-        else float("nan")
+    # NaN medians stay out of the JSON result (json.dump would emit a
+    # literal NaN token strict parsers reject); the ratio used by the
+    # --check gate keeps NaN so a sample-less run fails loudly there.
+    med_refit = float(np.median(refit_ms)) if refit_ms else None
+    med_rebuild = (float(np.median(rebuild_ms)) if rebuild_ms else None)
+    ratio = (med_rebuild / med_refit
+             if refit_ms and rebuild_ms else float("nan"))
 
     s = sim.stats()
     result = dict(
         bench="sharded_md",
         n=args.n, nranks=nranks, steps=args.steps, dt=args.dt,
         theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        skin=args.skin,
         refit_interval=args.refit_interval,
         refit_ms_per_step=med_refit,
         rebuild_ms_per_step=med_rebuild,
-        rebuild_over_refit=ratio,
+        rebuild_over_refit=(None if np.isnan(ratio) else ratio),
         refits=s["refits"], rebuilds=s["rebuilds"],
         retraces=s["retraces"], compiles=s["compiles"],
         capacity_growths=s["capacity_growths"],
@@ -113,13 +122,26 @@ def main(argv=None):
         mac_slack=s["mac_slack"],
         timeline=timeline,
     )
+    # Non-finite floats (inf mac_slack on approx-free builds, NaN
+    # ratios) become None: json.dump's Infinity/NaN tokens are not
+    # valid strict JSON.
+    def json_safe(obj):
+        if isinstance(obj, dict):
+            return {k: json_safe(v) for k, v in obj.items()}
+        if isinstance(obj, (list, tuple)):
+            return [json_safe(v) for v in obj]
+        if isinstance(obj, float) and not np.isfinite(obj):
+            return None
+        return obj
+
     with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+        json.dump(json_safe(result), f, indent=2)
 
     print(f"N={args.n} P={nranks} steps={args.steps} "
           f"K={args.refit_interval}")
-    print(f"refit step:   {med_refit:8.1f} ms (median of {len(refit_ms)})")
-    print(f"rebuild step: {med_rebuild:8.1f} ms (median of "
+    print(f"refit step:   {med_refit or float('nan'):8.1f} ms "
+          f"(median of {len(refit_ms)})")
+    print(f"rebuild step: {med_rebuild or float('nan'):8.1f} ms (median of "
           f"{len(rebuild_ms)})  ratio {ratio:.2f}x")
     print(f"rebuilds {s['rebuilds']}  refits {s['refits']}  "
           f"retraces {s['retraces']}  compiles {s['compiles']}  "
@@ -139,6 +161,9 @@ def main(argv=None):
             f"rebuild step within {args.rebuild_factor}x of refit step":
                 ratio <= args.rebuild_factor,
         }
+        if args.max_rebuilds:
+            checks[f"rebuilds <= seed count {args.max_rebuilds}"] = \
+                s["rebuilds"] <= args.max_rebuilds
         failed = [name for name, ok in checks.items() if not ok]
         for name, ok in checks.items():
             print(f"  [{'ok' if ok else 'FAIL'}] {name}")

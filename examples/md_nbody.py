@@ -44,6 +44,9 @@ def main():
     ap.add_argument("--theta", type=float, default=0.8)
     ap.add_argument("--degree", type=int, default=4)
     ap.add_argument("--leaf-size", type=int, default=64)
+    ap.add_argument("--skin", type=float, default=0.0,
+                    help="Verlet-skin radius: floors the refit drift "
+                         "budget at skin/2 (drift-budget v2)")
     ap.add_argument("--integrator", default="velocity_verlet")
     ap.add_argument("--temperature", type=float, default=0.05,
                     help="langevin target temperature")
@@ -76,7 +79,8 @@ def main():
     kparams = {"kappa": args.kappa} if args.kernel == "yukawa" else {}
     solver = TreecodeSolver(TreecodeConfig(
         theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
-        kernel=args.kernel, kernel_params=kparams, space=space))
+        kernel=args.kernel, kernel_params=kparams, space=space,
+        skin=args.skin))
     plan = solver.plan(x)
 
     params = {}

@@ -72,6 +72,29 @@ _PRECOMPUTES = ("direct", "hierarchical")
 _APPROX_R2 = ("diff", "matmul")
 _DTYPES = ("auto", "float32", "float64")
 
+# Deprecation warnings fire ONCE per process: sweep loops construct many
+# configs and a per-construction warning floods logs (tests reset via
+# `_reset_deprecation_warnings`).
+_DEPRECATIONS_EMITTED = set()
+
+
+def _warn_kappa_deprecated():
+    if "kappa" in _DEPRECATIONS_EMITTED:
+        return
+    _DEPRECATIONS_EMITTED.add("kappa")
+    # stacklevel: this helper -> __post_init__ -> dataclass __init__ ->
+    # the caller's TreecodeConfig(...) line, which is what gets reported.
+    warnings.warn(
+        "TreecodeConfig.kappa is deprecated; pass "
+        "kernel_params={'kappa': ...} instead (works for any "
+        "registered kernel and keeps sweeps recompile-free)",
+        DeprecationWarning, stacklevel=4)
+
+
+def _reset_deprecation_warnings():
+    """Re-arm the once-per-process deprecation warnings (test hook)."""
+    _DEPRECATIONS_EMITTED.clear()
+
 
 @dataclasses.dataclass(frozen=True)
 class TreecodeConfig:
@@ -92,8 +115,16 @@ class TreecodeConfig:
     `donate_charges` lets `execute` consume the device charge buffer so
     iterative loops don't re-allocate.
 
+    `skin` >= 0 is the Verlet-skin radius (drift-budget v2, DESIGN.md
+    §4): MAC-boundary pairs within the skin are dual-listed and routed
+    by current distance at evaluation time, so the interaction lists
+    stay exact while no particle moves more than ``skin/2`` and the MD
+    drift budget is floored at ``skin/2``. 0 (default) disables the
+    dual lists (the paper's frozen-list behavior).
+
     `kappa` is a deprecated alias for ``kernel_params={"kappa": ...}``
-    (Yukawa only); passing it emits a DeprecationWarning.
+    (Yukawa only); passing it emits a DeprecationWarning (once per
+    process, so sweep loops don't flood logs).
     """
 
     theta: float = 0.7
@@ -103,6 +134,7 @@ class TreecodeConfig:
     kernel: Union[str, Kernel] = "coulomb"
     kernel_params: tuple = ()    # dict accepted; normalized in __post_init__
     space: object = FreeSpace()
+    skin: float = 0.0            # Verlet-skin radius (0 = frozen lists)
     kappa: Optional[float] = None  # DEPRECATED: use kernel_params=
     backend: str = "auto"        # pallas | pallas_interpret | xla | auto
     kahan: bool = False
@@ -125,6 +157,10 @@ class TreecodeConfig:
         if not (isinstance(self.batch_size, int) and self.batch_size >= 0):
             bad(f"batch_size must be >= 0 (0 = leaf_size), "
                 f"got {self.batch_size!r}")
+        if not (isinstance(self.skin, (int, float))
+                and float(self.skin) >= 0.0):
+            bad(f"skin must be a float >= 0, got {self.skin!r}")
+        object.__setattr__(self, "skin", float(self.skin))
         if self.backend not in _BACKENDS:
             bad(f"unknown backend {self.backend!r}; choose from {_BACKENDS}")
         if self.precompute not in _PRECOMPUTES:
@@ -152,11 +188,7 @@ class TreecodeConfig:
                 f"tuple, got {type(kp).__name__}")
         object.__setattr__(self, "space", resolve_space(self.space))
         if self.kappa is not None:
-            warnings.warn(
-                "TreecodeConfig.kappa is deprecated; pass "
-                "kernel_params={'kappa': ...} instead (works for any "
-                "registered kernel and keeps sweeps recompile-free)",
-                DeprecationWarning, stacklevel=3)
+            _warn_kappa_deprecated()
 
     def resolved_batch_size(self) -> int:
         return self.batch_size or self.leaf_size
@@ -196,7 +228,8 @@ class TreecodeConfig:
         return dict(degree=self.degree, kernel=kernel.stripped(),
                     space=self.space, backend=self.backend,
                     kahan=self.kahan, precompute=self.precompute,
-                    approx_r2=self.approx_r2)
+                    approx_r2=self.approx_r2, theta=self.theta,
+                    skin=self.skin)
 
 
 @runtime_checkable
@@ -339,8 +372,27 @@ class SingleDevicePlan:
     def mac_slack(self) -> float:
         """Min over approx pairs of the drift-budget margin (theta margin
         and, for periodic spaces, the scaled fold margin): the budget
-        within which a topology-preserving refit keeps the MAC valid."""
+        within which a topology-preserving refit keeps the MAC valid.
+        Compatibility alias folding both v2 budgets into theta-rate
+        units; prefer `theta_slack` / `fold_slack` (DESIGN.md §4)."""
         return self.inner.mac_slack
+
+    @property
+    def theta_slack(self) -> float:
+        """Min raw theta margin over SAFE approx pairs (shrinks at rate
+        2*sqrt(3)*(1+theta) per unit of drift)."""
+        return self.inner.theta_slack
+
+    @property
+    def fold_slack(self) -> float:
+        """Min raw fold margin over SAFE approx pairs (shrinks at rate 4
+        per unit of drift; +inf in free space)."""
+        return self.inner.fold_slack
+
+    @property
+    def skin(self) -> float:
+        """Verlet-skin radius the interaction lists were built with."""
+        return self.inner.skin
 
     @property
     def capacities(self):
@@ -366,6 +418,9 @@ class SingleDevicePlan:
             dtype=str(self.dtype),
             space=repr(self.config.space),
             mac_slack=self.inner.mac_slack,
+            theta_slack=self.inner.theta_slack,
+            fold_slack=self.inner.fold_slack,
+            skin=self.inner.skin,
             capacity_padded=caps is not None,
             **({"capacities": dataclasses.asdict(caps)} if caps else {}),
         )
@@ -397,7 +452,7 @@ def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
         targets.astype(dtype, copy=False), sources.astype(dtype, copy=False),
         theta=config.theta, degree=config.degree,
         leaf_size=config.leaf_size, batch_size=config.resolved_batch_size(),
-        space=config.space)
+        space=config.space, skin=config.skin)
     if config.precompute == "hierarchical":
         inner = _eval.add_hierarchical_tables(inner)
     if capacities is not None:

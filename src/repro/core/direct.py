@@ -16,6 +16,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.potentials import Kernel
 from repro.core.space import FREE as _FREE
@@ -55,6 +56,57 @@ def direct_sum(
     phi0 = jnp.zeros(targets.shape[0], targets.dtype)
     phi, _ = jax.lax.scan(step, phi0, (src, q))
     return phi
+
+
+def direct_oracle_f64(points, charges, *, kernel: Kernel, params=None,
+                      space=_FREE, chunk: int = 1024):
+    """(phi, F) by float64 NumPy direct summation — the accuracy oracle.
+
+    Host-side f64 regardless of the jax x64 mode, so refit/skin
+    trajectories can be validated against a true double-precision
+    envelope from inside f32 test processes and benchmarks (the
+    acceptance check of drift-budget v2). Supports the built-in
+    coulomb/yukawa kernels (the analytic dG/dr2 is needed for forces);
+    minimum-image displacements under a periodic `space`.
+    """
+    x = np.asarray(points, np.float64)
+    q = np.asarray(charges, np.float64)
+    name = kernel.name
+    if name == "yukawa":
+        p = kernel.normalize_params(params) if params is not None \
+            else kernel.params
+        (kappa,) = (float(v) for v in p)
+    elif name != "coulomb":
+        raise NotImplementedError(
+            f"direct_oracle_f64 supports coulomb/yukawa, got {name!r}")
+    n = x.shape[0]
+    phi = np.zeros(n)
+    force = np.zeros((n, 3))
+    for s in range(0, n, chunk):
+        y = x[s:s + chunk]
+        d = x[:, None, :] - y[None, :, :]
+        if getattr(space, "periodic", False):
+            L = np.asarray(space.lengths)
+            d = d - L * np.round(d / L)
+        r2 = np.sum(d * d, axis=-1)
+        mask = r2 > 0.0
+        r2s = np.where(mask, r2, 1.0)
+        r = np.sqrt(r2s)
+        if name == "coulomb":
+            g = 1.0 / r
+            dg = -0.5 / (r * r2s)            # dG/dr2 = -1/(2 r^3)
+        else:
+            e = np.exp(-kappa * r)
+            g = e / r
+            dg = -0.5 * e * (kappa * r + 1.0) / (r2s * r)
+        g = np.where(mask, g, 0.0)
+        dg = np.where(mask, dg, 0.0)
+        qs = q[s:s + chunk]
+        phi += g @ qs
+        # grad_i phi = sum_j q_j * 2 * dG/dr2 * d_ij; F_i = -q_i * grad_i
+        force += np.einsum("nm,nmd->nd", 2.0 * dg * qs[None, :], d)
+    force *= -q[:, None]
+    return phi, force
 
 
 def direct_sum_kernel(

@@ -53,8 +53,14 @@ class Plan:
     num_targets: int
     num_sources: int
     # Min MAC slack of the approx lists (see InteractionLists.mac_slack):
-    # the drift budget for topology-preserving refits.
+    # the drift budget for topology-preserving refits. `mac_slack` is the
+    # v1 single number (fold folded in at the theta rate); drift-budget
+    # v2 tracks the RAW theta/fold margins separately (their own shrink
+    # rates) plus the Verlet-skin radius the lists were built with.
     mac_slack: float = float("inf")
+    theta_slack: float = float("inf")
+    fold_slack: float = float("inf")
+    skin: float = 0.0
     # When capacity-padded (see `Capacities`), the capacities the arrays
     # were padded to, and the scratch node row absorbing sentinel writes.
     capacities: "Capacities | None" = None
@@ -73,6 +79,7 @@ def prepare_plan(
     leaf_size: int,
     batch_size: int,
     space=_FREE,
+    skin: float = 0.0,
 ) -> Plan:
     """Host-side setup phase (tree build + traversal + packing).
 
@@ -80,19 +87,23 @@ def prepare_plan(
     cell before the tree/batch build (boundary-straddling clusters split
     by construction) and the MAC traversal uses minimum-image center
     distances with the fold-free acceptance condition (see
-    `repro.core.interaction`)."""
+    `repro.core.interaction`). `skin` is the Verlet-skin radius: pairs
+    within the skin of the MAC boundary are dual-listed and gated by
+    current distance at evaluation time (drift-budget v2)."""
     targets = np.asarray(space.wrap(np.asarray(targets)))
     sources = np.asarray(space.wrap(np.asarray(sources)))
     dtype = targets.dtype
 
     tree = build_tree(sources, leaf_size)
     batches = build_batches(targets, batch_size)
-    lists = build_interaction_lists(tree, batches, theta, degree, space)
+    lists = build_interaction_lists(tree, batches, theta, degree, space,
+                                    skin=skin)
 
     nb_pad = _round_up(batches.max_count)
     nl_pad = _round_up(tree.max_leaf_count)
     a_pad = _round_up(lists.approx.shape[1])
     d_pad = _round_up(lists.direct.shape[1])
+    sd_pad = _round_up(lists.skin_direct.shape[1])
 
     def _pad_cols(a, width):
         return np.pad(a, ((0, 0), (0, width - a.shape[1])),
@@ -100,16 +111,24 @@ def prepare_plan(
 
     approx_idx = _pad_cols(lists.approx, a_pad).astype(np.int32)
     direct_idx = _pad_cols(lists.direct, d_pad).astype(np.int32)
+    approx_skin = np.pad(
+        lists.approx_skin, ((0, 0), (0, a_pad - lists.approx_skin.shape[1])),
+        constant_values=0).astype(np.uint8)
+    skin_direct = _pad_cols(lists.skin_direct, sd_pad).astype(np.int32)
+    skin_direct_node = _pad_cols(lists.skin_direct_node,
+                                 sd_pad).astype(np.int32)
 
     # Targets packed batch-contiguously, padded per row.
     nb = batches.num_batches
     tgt_sorted = targets[batches.perm]
     tgt_b = np.zeros((nb, nb_pad, 3), dtype)
+    tgt_mask = np.zeros((nb, nb_pad), bool)
     pos_of_batchorder = np.empty(targets.shape[0], np.int64)
     cursor = 0
     for b in range(nb):
         c = int(batches.count[b])
         tgt_b[b, :c] = tgt_sorted[cursor:cursor + c]
+        tgt_mask[b, :c] = True
         pos_of_batchorder[cursor:cursor + c] = b * nb_pad + np.arange(c)
         cursor += c
     # phi_input[j] = phi_flat[gather_index[j]] for input target index j.
@@ -146,6 +165,12 @@ def prepare_plan(
         node_hi=jnp.asarray(tree.hi.astype(dtype)),
         approx_idx=jnp.asarray(approx_idx),
         direct_idx=jnp.asarray(direct_idx),
+        # Verlet-skin dual lists + the target validity mask feeding the
+        # runtime MAC gate (all--1 / all-False beyond the real rows).
+        approx_skin=jnp.asarray(approx_skin),
+        skin_direct=jnp.asarray(skin_direct),
+        skin_direct_node=jnp.asarray(skin_direct_node),
+        tgt_mask=jnp.asarray(tgt_mask),
         bucket_gather=tuple(bucket_gather),
         bucket_nodes=tuple(bucket_nodes),
         # Hierarchical (upward-pass) precompute tables, built lazily.
@@ -156,7 +181,10 @@ def prepare_plan(
         arrays=arrays, meta=meta, tree=tree, batches=batches,
         padding_waste=float(lists.padding_waste),
         num_targets=targets.shape[0], num_sources=sources.shape[0],
-        mac_slack=float(lists.mac_slack), space=space,
+        mac_slack=float(lists.mac_slack),
+        theta_slack=float(lists.theta_slack),
+        fold_slack=float(lists.fold_slack),
+        skin=float(skin), space=space,
     )
 
 
@@ -254,7 +282,37 @@ def compute_qhat_hierarchical(arrays, q_sorted, *, degree, backend):
 
 
 _EXEC_OPTS = ("degree", "kernel", "space", "backend", "kahan", "precompute",
-              "approx_r2")
+              "approx_r2", "theta", "skin")
+
+
+def _skin_routed_lists(arrays: dict, theta: float, space):
+    """Current-distance routing of the Verlet-skin dual lists.
+
+    Re-tests every skin pair's MAC on the refitted geometry (the batch
+    boxes come from the current target slab, the cluster boxes from
+    node_lo/hi) and masks the losing side to the -1 sentinel the kernels
+    skip: the approx slot while the MAC fails, the skin-direct slots
+    while it holds. Both sides evaluate the same predicate on the same
+    inputs, so every skin pair is counted exactly once. Returns the
+    effective (approx_idx, direct_idx) with the gated skin-direct slots
+    concatenated onto the static direct list.
+    """
+    from repro.kernels import ops as _ops  # local: ops imports this module
+
+    bc, bhw, rb, has = _ops.batch_boxes(arrays["tgt_batched"],
+                                        arrays["tgt_mask"])
+    gate_kw = dict(theta=theta, space=space)
+    approx_idx = arrays["approx_idx"]
+    gate_a = _ops.mac_gate(approx_idx, bc, bhw, rb, has,
+                           arrays["node_lo"], arrays["node_hi"], **gate_kw)
+    approx_idx = jnp.where((arrays["approx_skin"] != 0) & ~gate_a,
+                           -1, approx_idx)
+    gate_d = _ops.mac_gate(arrays["skin_direct_node"], bc, bhw, rb, has,
+                           arrays["node_lo"], arrays["node_hi"], **gate_kw)
+    skin_direct = jnp.where(gate_d, -1, arrays["skin_direct"])
+    direct_idx = jnp.concatenate([arrays["direct_idx"], skin_direct],
+                                 axis=1)
+    return approx_idx, direct_idx
 
 
 def _execute_impl(
@@ -269,6 +327,8 @@ def _execute_impl(
     kahan: bool = False,
     precompute: str = "direct",
     approx_r2: str = "diff",
+    theta: float = 0.7,
+    skin: float = 0.0,
 ) -> jnp.ndarray:
     """Potentials at the plan's targets, in the caller's input order.
 
@@ -276,7 +336,11 @@ def _execute_impl(
     VALUES through the trace; None falls back to the kernel's hashable
     defaults (the v1 behavior). The solver path always passes explicit
     params with a params-free (`Kernel.stripped`) static kernel, so
-    parameter sweeps over an unchanged plan compile exactly once."""
+    parameter sweeps over an unchanged plan compile exactly once.
+
+    `theta`/`skin` are static: with ``skin > 0`` the Verlet-skin dual
+    lists are routed by the runtime MAC gate (`_skin_routed_lists`)
+    before the kernels run."""
     q_sorted = charges[arrays["src_perm"]]
     if precompute == "direct":
         qhat = compute_qhat_direct(
@@ -289,17 +353,21 @@ def _execute_impl(
 
     grids = cheby.cluster_grid(arrays["node_lo"], arrays["node_hi"], degree)
     tgt = arrays["tgt_batched"]
+    if skin > 0.0:
+        approx_idx, direct_idx = _skin_routed_lists(arrays, theta, space)
+    else:
+        approx_idx, direct_idx = arrays["approx_idx"], arrays["direct_idx"]
     # The approximation kernel may use the MXU matmul form of r^2: the MAC
     # guarantees target/cluster separation, so no cancellation risk there.
     phi_a = ops.batch_cluster_eval(
-        arrays["approx_idx"], tgt, grids, qhat, params,
+        approx_idx, tgt, grids, qhat, params,
         kernel=kernel, space=space, backend=backend, kahan=kahan,
         r2_mode=approx_r2)
 
     leaf_pts, leaf_q = _gathered(
         arrays["src_sorted"], q_sorted, arrays["leaf_gather"])
     phi_d = ops.batch_cluster_eval(
-        arrays["direct_idx"], tgt, leaf_pts, leaf_q, params,
+        direct_idx, tgt, leaf_pts, leaf_q, params,
         kernel=kernel, space=space, backend=backend, kahan=kahan)
 
     phi = (phi_a + phi_d).reshape(-1)
@@ -355,11 +423,13 @@ def _target_gradient(arrays, charges, params, opts: dict):
 @functools.partial(jax.jit, static_argnames=_EXEC_OPTS)
 def potential_and_gradient(arrays, charges, params=None, *, degree, kernel,
                            space=_FREE, backend="auto", kahan=False,
-                           precompute="direct", approx_r2="diff"):
+                           precompute="direct", approx_r2="diff",
+                           theta=0.7, skin=0.0):
     """Potentials and their per-target spatial gradient, input order."""
     return _target_gradient(arrays, charges, params, dict(
         degree=degree, kernel=kernel, space=space, backend=backend,
-        kahan=kahan, precompute=precompute, approx_r2=approx_r2))
+        kahan=kahan, precompute=precompute, approx_r2=approx_r2,
+        theta=theta, skin=skin))
 
 
 def _zero_cotangent(x):
@@ -410,7 +480,8 @@ _phi_from_targets.defvjp(_phi_fwd, _phi_bwd)
 
 def differentiable_execute(arrays, charges, params=None, *, degree, kernel,
                            space=_FREE, backend="auto", kahan=False,
-                           precompute="direct", approx_r2="diff"):
+                           precompute="direct", approx_r2="diff",
+                           theta=0.7, skin=0.0):
     """`execute` with an efficient custom VJP w.r.t. target coordinates.
 
     Differentiable in `arrays["tgt_batched"]` (forces, target-position
@@ -418,7 +489,8 @@ def differentiable_execute(arrays, charges, params=None, *, degree, kernel,
     matching the treecode convention that the tree is rebuilt — not
     differentiated — when sources move.
     """
-    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2)
+    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2,
+            theta, skin)
     return _phi_from_targets(opts, arrays["tgt_batched"], arrays, charges,
                              params)
 
@@ -426,7 +498,8 @@ def differentiable_execute(arrays, charges, params=None, *, degree, kernel,
 @functools.partial(jax.jit, static_argnames=_EXEC_OPTS)
 def potential_and_forces(arrays, charges, weights, params=None, *, degree,
                          kernel, space=_FREE, backend="auto", kahan=False,
-                         precompute="direct", approx_r2="diff"):
+                         precompute="direct", approx_r2="diff",
+                         theta=0.7, skin=0.0):
     """(phi, F) with F_i = -weights_i * d phi_i / d x_i, input order.
 
     With targets == sources and weights == charges this is the physical
@@ -435,7 +508,8 @@ def potential_and_forces(arrays, charges, weights, params=None, *, degree,
     doubling via the energy convention is not needed. Implemented as
     `jax.grad` of sum(weights * phi) through the custom-VJP executor.
     """
-    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2)
+    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2,
+            theta, skin)
 
     def weighted(t):
         phi = _phi_from_targets(opts, t, arrays, charges, params)
@@ -478,6 +552,7 @@ class Capacities:
     num_nodes: int                    # includes the +1 scratch row
     approx_width: int
     direct_width: int
+    skin_direct_width: int            # gated Verlet-skin direct list
     depth: int                        # modified-charge level count
     bucket_rows: Tuple[int, ...]      # len == depth
     bucket_widths: Tuple[int, ...]    # len == depth, powers of two
@@ -515,6 +590,7 @@ class Capacities:
             num_nodes=h(need["num_nodes"]) + 1,
             approx_width=h(need["approx_width"]),
             direct_width=h(need["direct_width"]),
+            skin_direct_width=h(need.get("skin_direct_width", 1)),
             depth=need["depth"],
             bucket_rows=tuple(h(r) for r in need["bucket_rows"]),
             bucket_widths=tuple(_round_pow2(w) for w in need["bucket_widths"]),
@@ -551,6 +627,8 @@ class Capacities:
             num_nodes=g(self.num_nodes, need["num_nodes"] + 1),
             approx_width=g(self.approx_width, need["approx_width"]),
             direct_width=g(self.direct_width, need["direct_width"]),
+            skin_direct_width=g(self.skin_direct_width,
+                                need.get("skin_direct_width", 1)),
             depth=max(self.depth, need["depth"]),
             bucket_rows=gt(self.bucket_rows, need["bucket_rows"]),
             bucket_widths=gt(self.bucket_widths, need["bucket_widths"],
@@ -683,6 +761,8 @@ def _plan_dims(plan: Plan) -> dict:
         num_nodes=a["node_lo"].shape[0],
         approx_width=a["approx_idx"].shape[1],
         direct_width=a["direct_idx"].shape[1],
+        skin_direct_width=(a["skin_direct"].shape[1]
+                           if "skin_direct" in a else 1),
         depth=len(bg),
         bucket_rows=tuple(g.shape[0] for g in bg),
         bucket_widths=tuple(g.shape[1] for g in bg),
@@ -733,6 +813,15 @@ def pad_plan(plan: Plan, caps: Capacities) -> Plan:
                          (caps.num_batches, caps.approx_width), -1),
         direct_idx=_pad2(a["direct_idx"],
                          (caps.num_batches, caps.direct_width), -1),
+        approx_skin=_pad2(a["approx_skin"],
+                          (caps.num_batches, caps.approx_width), 0),
+        skin_direct=_pad2(a["skin_direct"],
+                          (caps.num_batches, caps.skin_direct_width), -1),
+        skin_direct_node=_pad2(a["skin_direct_node"],
+                               (caps.num_batches, caps.skin_direct_width),
+                               -1),
+        tgt_mask=_pad2(a["tgt_mask"],
+                       (caps.num_batches, caps.batch_width), False),
         parent_of=_pad2(a["parent_of"], (caps.num_nodes,), scratch),
     )
 

@@ -62,6 +62,7 @@ from repro import compat
 from repro.core import cheby
 from repro.core import eval as ceval
 from repro.core.api import TreecodeConfig, lift_params
+from repro.core import interaction
 from repro.core.interaction import batch_half_extents, mac_accept
 from repro.core.potentials import Kernel
 from repro.core.tree import Tree
@@ -72,12 +73,22 @@ from repro.kernels import ops
 def _traverse_remote(cfg: TreecodeConfig, tree: Tree, bc, br, bhw):
     """Traverse one remote tree for one batch under the space-aware MAC.
 
-    Yields ("approx", node, theta_margin, scaled_fold_margin) and
+    Yields ("approx", node, theta_margin, fold_margin) (raw margins) and
     ("direct", leaf_slots) events. One traversal drives both the
     remote-approx lists and the remote-direct (halo) lists so both apply
-    identical acceptance (min-image distances, fold-free approximation)."""
+    identical acceptance (min-image distances, fold-free approximation).
+
+    Verlet skin: remote pairs within the skin of the MAC boundary are
+    DEMOTED to direct (their leaves enter the halo lists) instead of
+    being dual-listed — runtime gating a remote pair would require halo
+    leaves for clusters that are usually served by the gathered q_hat,
+    inflating permute traffic for pairs that rarely flip. Demotion keeps
+    the exactness horizon (lists valid while drift <= skin/2) and keeps
+    remote approx margins above the same slack floor as local ones."""
     npts = (cfg.degree + 1) ** 3
     space = cfg.space
+    thr_theta = interaction.theta_drift_rate(cfg.theta) * 0.5 * cfg.skin
+    thr_fold = interaction.fold_drift_rate() * 0.5 * cfg.skin
     stack = [0]
     while stack:
         node = stack.pop()
@@ -85,12 +96,13 @@ def _traverse_remote(cfg: TreecodeConfig, tree: Tree, bc, br, bhw):
         chw = 0.5 * (tree.hi[node] - tree.lo[node])
         dist_ok, fold_ok, t_margin, f_margin = mac_accept(
             space, cfg.theta, d, br, tree.radius[node], bhw + chw)
-        if dist_ok and fold_ok and npts < tree.count[node]:
+        mac = dist_ok and fold_ok and npts < tree.count[node]
+        if mac and t_margin > thr_theta and f_margin > thr_fold:
             yield ("approx", node, float(t_margin), float(f_margin))
-        elif not tree.is_leaf[node] and not (dist_ok
-                                             and npts >= tree.count[node]):
+        elif not mac and not tree.is_leaf[node] \
+                and not (dist_ok and npts >= tree.count[node]):
             stack.extend(int(k) for k in tree.children[node] if k >= 0)
-        else:  # leaf, or small-but-separated cluster -> its leaves, direct
+        else:  # leaf, small-but-separated cluster, or skin-demoted pair
             if tree.is_leaf[node]:
                 slots = [int(tree.leaf_index[node])]
             else:
@@ -104,17 +116,18 @@ def _remote_lists(cfg: TreecodeConfig, plans, nranks: int):
     """One cross-rank traversal pass: for every rank r, traverse every
     other rank s's tree with the same uniform MAC.
 
-    Returns (approx, direct, halo_need, mac_slack):
+    Returns (approx, direct, halo_need, theta_slack, fold_slack):
       approx[r]:   [(batch, src rank, node)] remote approx accepts
       direct[r]:   [(batch, src rank, leaf slot)] remote direct hits
       halo_need:   {(src s, dst r): set(leaf slots)} — the halo traffic
-      mac_slack:   min margin (theta and, under a periodic space, the
-                   scaled fold margin) over remote approx accepts — the
-                   cross-rank part of the refit drift budget."""
+      theta/fold_slack: min RAW margins over remote approx accepts (the
+                   cross-rank part of the v2 drift budgets; skin-demoted
+                   pairs never enter the minima)."""
     approx: List[list] = [[] for _ in range(nranks)]
     direct: List[list] = [[] for _ in range(nranks)]
     halo_need: Dict[Tuple[int, int], set] = {}
-    mac_slack = float("inf")
+    theta_slack = float("inf")
+    fold_slack = float("inf")
 
     for r in range(nranks):
         batches = plans[r].batches
@@ -129,14 +142,14 @@ def _remote_lists(cfg: TreecodeConfig, plans, nranks: int):
                     if ev[0] == "approx":
                         _, node, t_margin, f_margin = ev
                         approx[r].append((b, s, node))
-                        mac_slack = min(mac_slack, t_margin)
+                        theta_slack = min(theta_slack, t_margin)
                         if np.isfinite(f_margin):
-                            mac_slack = min(mac_slack, f_margin)
+                            fold_slack = min(fold_slack, f_margin)
                     else:
                         halo_need.setdefault((s, r), set()).update(ev[1])
                         for sl in ev[1]:
                             direct[r].append((b, s, sl))
-    return approx, direct, halo_need, mac_slack
+    return approx, direct, halo_need, theta_slack, fold_slack
 
 
 def _rank_need(plans) -> dict:
@@ -146,7 +159,7 @@ def _rank_need(plans) -> dict:
     need = {k: max(d[k] for d in dims)
             for k in ("num_batches", "batch_width", "num_leaves",
                       "leaf_width", "num_nodes", "approx_width",
-                      "direct_width", "depth")}
+                      "direct_width", "skin_direct_width", "depth")}
     rows = [1] * need["depth"]
     widths = [1] * need["depth"]
     for d in dims:
@@ -197,16 +210,17 @@ _SPMD_CACHE_MAX = 32
 
 def _spmd_executable(*, mesh, axis: str, degree: int, depth: int,
                      perm_rounds, kernel: Kernel, space, backend: str,
-                     keys: Tuple[str, ...], params_treedef, donate: bool):
+                     keys: Tuple[str, ...], params_treedef, donate: bool,
+                     theta: float, skin: float):
     key = (mesh, axis, degree, depth, perm_rounds, kernel, space, backend,
-           keys, params_treedef, donate)
+           keys, params_treedef, donate, theta, skin)
     fn = _SPMD_CACHE.get(key)
     if fn is None:
         fn = _build_spmd_fn(mesh=mesh, axis=axis, degree=degree,
                             depth=depth, perm_rounds=perm_rounds,
                             kernel=kernel, space=space, backend=backend,
                             keys=keys, params_treedef=params_treedef,
-                            donate=donate)
+                            donate=donate, theta=theta, skin=skin)
         while len(_SPMD_CACHE) >= _SPMD_CACHE_MAX:
             _SPMD_CACHE.pop(next(iter(_SPMD_CACHE)))
         _SPMD_CACHE[key] = fn
@@ -214,7 +228,8 @@ def _spmd_executable(*, mesh, axis: str, degree: int, depth: int,
 
 
 def _build_spmd_fn(*, mesh, axis, degree, depth, perm_rounds, kernel,
-                   space, backend, keys, params_treedef, donate):
+                   space, backend, keys, params_treedef, donate,
+                   theta=0.7, skin=0.0):
     def spmd(args, q, params):
         a = {k: v[0] for k, v in args.items()}  # strip sharded lead dim
         q_sorted = q[0][a["charges_perm"]]
@@ -235,12 +250,20 @@ def _build_spmd_fn(*, mesh, axis, degree, depth, perm_rounds, kernel,
 
         grids = cheby.cluster_grid(lo, hi, degree)
         tgt = a["tgt_batched"]
-        phi = ops.batch_cluster_eval(a["approx_idx"], tgt, grids, qhat,
+        if skin > 0.0:
+            # Verlet-skin runtime gate over this rank's LOCAL dual lists
+            # (remote skin pairs are demoted at build; DESIGN.md §4) —
+            # the same routing the single-device executor applies.
+            approx_idx, direct_idx = ceval._skin_routed_lists(
+                a, theta, space)
+        else:
+            approx_idx, direct_idx = a["approx_idx"], a["direct_idx"]
+        phi = ops.batch_cluster_eval(approx_idx, tgt, grids, qhat,
                                      params, kernel=kernel, space=space,
                                      backend=backend)
         leaf_pts, leaf_q = ceval._gathered(
             a["src_sorted"], q_sorted, a["leaf_gather"])
-        phi += ops.batch_cluster_eval(a["direct_idx"], tgt, leaf_pts,
+        phi += ops.batch_cluster_eval(direct_idx, tgt, leaf_pts,
                                       leaf_q, params, kernel=kernel,
                                       space=space, backend=backend)
 
@@ -330,7 +353,12 @@ class ShardedPlan:
     kernel_params: object = ()
     # Min MAC slack over local AND remote approx lists: the drift budget
     # within which a topology-preserving refit keeps every list valid.
+    # `mac_slack` is the v1 compat number; `theta_slack`/`fold_slack` are
+    # the RAW v2 budgets (min over safe local + remote pairs of each
+    # margin, skin-demoted/gated pairs excluded; DESIGN.md §4).
     mac_slack: float = float("inf")
+    theta_slack: float = float("inf")
+    fold_slack: float = float("inf")
     mesh: Optional[object] = None
     axis: str = "data"
     # Strong per-instance refs to the fetched SPMD executables: plans
@@ -352,6 +380,11 @@ class ShardedPlan:
     @property
     def space(self):
         return self.config.space
+
+    @property
+    def skin(self) -> float:
+        """Verlet-skin radius the interaction lists were built with."""
+        return self.config.skin
 
     # ------------------------------------------------------------------
     # host-side construction
@@ -379,11 +412,15 @@ class ShardedPlan:
             plans.append(ceval.prepare_plan(
                 slab, slab, theta=cfg.theta, degree=cfg.degree,
                 leaf_size=cfg.leaf_size,
-                batch_size=cfg.resolved_batch_size(), space=cfg.space))
+                batch_size=cfg.resolved_batch_size(), space=cfg.space,
+                skin=cfg.skin))
 
-        remote_approx, remote_direct, halo_need, remote_slack = \
+        remote_approx, remote_direct, halo_need, r_theta, r_fold = \
             _remote_lists(cfg, plans, nranks)
-        mac_slack = min([remote_slack] + [pl.mac_slack for pl in plans])
+        theta_slack = min([r_theta] + [pl.theta_slack for pl in plans])
+        fold_slack = min([r_fold] + [pl.fold_slack for pl in plans])
+        mac_slack = interaction.scaled_mac_slack(cfg.theta, theta_slack,
+                                                 fold_slack)
 
         # ---- resolve the capacity budget from this build's needs
         need = dict(
@@ -410,6 +447,7 @@ class ShardedPlan:
         l_pad, nl_pad = R.num_leaves, R.leaf_width
         m_pad, scratch = R.num_nodes, R.scratch_node
         a_pad, d_pad = R.approx_width, R.direct_width
+        sd_pad = R.skin_direct_width
         depth = R.depth
         per_pad = caps.slab_width
 
@@ -475,6 +513,7 @@ class ShardedPlan:
             "src_sorted": stack("src_sorted", (per_pad, 3)),
             "charges_perm": stack("src_perm", (per_pad,)),
             "tgt_batched": stack("tgt_batched", (b_pad, nb_pad, 3)),
+            "tgt_mask": stack("tgt_mask", (b_pad, nb_pad), value=False),
             "gather_index": stack("gather_index", (per_pad,),
                                   recompute=fix_gather_index),
             "leaf_gather": stack("leaf_gather", (l_pad, nl_pad), value=-1),
@@ -482,6 +521,10 @@ class ShardedPlan:
             "node_hi": stack("node_hi", (m_pad, 3), value=1),
             "approx_idx": stack("approx_idx", (b_pad, a_pad), value=-1),
             "direct_idx": stack("direct_idx", (b_pad, d_pad), value=-1),
+            "approx_skin": stack("approx_skin", (b_pad, a_pad), value=0),
+            "skin_direct": stack("skin_direct", (b_pad, sd_pad), value=-1),
+            "skin_direct_node": stack("skin_direct_node", (b_pad, sd_pad),
+                                      value=-1),
             "remote_approx_idx": remote_approx_idx.astype(np.int32),
             "remote_direct_idx": remote_direct_idx.astype(np.int32),
         }
@@ -539,7 +582,8 @@ class ShardedPlan:
                    input_pos=jax.device_put(
                        jnp.asarray(input_pos, jnp.int32), replicated),
                    kernel_params=lift_params(kernel, np.dtype(dtype)),
-                   mesh=mesh, axis=axis, mac_slack=mac_slack)
+                   mesh=mesh, axis=axis, mac_slack=mac_slack,
+                   theta_slack=theta_slack, fold_slack=fold_slack)
 
     # ------------------------------------------------------------------
     # device execution
@@ -573,7 +617,7 @@ class ShardedPlan:
             backend="xla" if cfg.backend == "auto" else cfg.backend,
             keys=tuple(sorted(self.arrays)),
             params_treedef=jax.tree.structure(self.kernel_params),
-            donate=donate)
+            donate=donate, theta=cfg.theta, skin=cfg.skin)
         if donate:
             self._fn_donating = fn
         else:
@@ -673,6 +717,9 @@ class ShardedPlan:
             dtype=str(self.dtype),
             space=repr(self.config.space),
             mac_slack=self.mac_slack,
+            theta_slack=self.theta_slack,
+            fold_slack=self.fold_slack,
+            skin=self.config.skin,
             capacity_padded=caps is not None,
             **({"capacities": dataclasses.asdict(caps)} if caps else {}),
         )

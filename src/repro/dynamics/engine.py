@@ -4,24 +4,37 @@ rebuild when you must, never retrace if the capacities hold.
 One `Simulation.step()` is:
 
     1. `advance`   (jit): integrator pre-step — positions move to the
-       force-evaluation point; returns the max particle drift since the
-       last host tree build (one scalar leaves the device per step).
-    2. host decision: REFIT while the drift fits the MAC slack budget
-       (2*sqrt(3)*(1+theta)*drift < safety*slack, see DESIGN.md §4) and the
-       max interval K has not elapsed; otherwise REBUILD the tree on the
-       host (the paper's CPU setup phase) — re-padded into the plan's
-       fixed `Capacities`, so the compiled step is almost always reused.
-    3. `finish`    (jit): device tree refit -> treecode forces (custom-VJP
-       gradients) -> integrator post-step. Forces never visit the host.
+       force-evaluation point; returns the max particle displacement
+       since the LAST force evaluation (one scalar leaves the device per
+       step; minimum-image under periodic spaces).
+    2. host decision: REFIT while that per-step drift fits BOTH live
+       budgets refreshed from the previous refit's boxes (drift-budget
+       v2, DESIGN.md §4):
 
-    Rebuild count  <= steps/K + (drift-triggered rebuilds, rare at MD dt)
+           2*sqrt(3)*(1+theta) * drift < safety * theta_slack   and
+           4 * drift                   < safety * fold_slack
+
+       and the max interval K has not elapsed; otherwise REBUILD the
+       tree on the host (the paper's CPU setup phase) — re-padded into
+       the plan's fixed `Capacities`, so the compiled step is almost
+       always reused. Verlet-skin pairs (plans built with ``skin > 0``)
+       are runtime gated inside the executors and never constrain the
+       budgets, which floors the drift budget at ``skin/2``.
+    3. `finish`    (jit): device tree refit -> on-device slack refresh
+       (exact margins from the refitted boxes, min-reduced across ranks
+       for sharded plans) -> treecode forces (custom-VJP gradients) ->
+       integrator post-step. Forces never visit the host.
+
+    Rebuild count  <= steps/K + (drift-triggered rebuilds, rare at MD dt
+                      because the budgets are refreshed every step)
     Retraces       == 0 unless a capacity grows (geometric, so O(log) in
                       the worst case) — on BOTH strategies: sharded plans
                       are budget-padded too (`ShardedCapacities`), so
                       their rebuilds reuse the compiled SPMD step.
 
-`stats()` reports refit/rebuild/retrace counters; `run(record_every=)`
-logs energy/momentum/temperature via one fused device reduction; the
+`stats()` reports refit/rebuild/retrace counters and all three drift
+budgets (theta / fold / skin); `run(record_every=)` logs
+energy/momentum/temperature via one fused device reduction; the
 `Checkpointer` integration snapshots (x, v, f, phi, key) atomically and
 restores across processes.
 """
@@ -35,6 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.store import Checkpointer
+from repro.core.interaction import (fold_drift_rate, theta_drift_rate,
+                                    scaled_mac_slack as _scaled_slack)
 from repro.dynamics import diagnostics as diag
 from repro.dynamics.integrators import (MDState, get_integrator,
                                         initial_state)
@@ -67,10 +82,13 @@ class Simulation:
       integrator: name ("velocity_verlet" | "leapfrog" | "langevin") or
         an `Integrator`; `integrator_params` forwards factory kwargs
         (e.g. friction/temperature for langevin).
-      refit_interval: K — max steps between host tree rebuilds (the
-        fallback when drift stays within budget).
-      drift_safety: fraction of the MAC slack budget to spend before a
-        drift-triggered rebuild (1.0 = the provable bound).
+      refit_interval: K — max steps between host tree rebuilds. With the
+        v2 refreshed budgets the per-step drift trigger alone guards MAC
+        validity, so K is a coarse safety net (and the explicit fallback
+        cadence when a slack is NaN); the default is correspondingly
+        loose.
+      drift_safety: fraction of the refreshed slack budgets to spend
+        before a drift-triggered rebuild (1.0 = the provable bound).
       rebuild: "auto" (drift trigger + interval), "always" (every step,
         the naive baseline), "never" (trust refit indefinitely —
         exact-direct configs or testing).
@@ -83,7 +101,7 @@ class Simulation:
                  integrator="velocity_verlet",
                  integrator_params: Optional[dict] = None,
                  seed: int = 0,
-                 refit_interval: int = 25,
+                 refit_interval: int = 100,
                  drift_safety: float = 1.0,
                  rebuild: str = "auto",
                  checkpointer: Optional[Checkpointer] = None,
@@ -132,16 +150,26 @@ class Simulation:
         self.state: MDState = self.adapter.commit(initial_state(
             self.adapter.positions(), velocities, seed=seed, dtype=dtype))
         self._arrays = self.adapter.arrays
-        self._x_ref = self.state.x
-        self._slack = float(self.adapter.mac_slack)
+        # Reference for the per-step drift scalar: the positions of the
+        # LAST force evaluation (where the budgets were refreshed from).
+        self._x_eval_ref = self.state.x
         self._theta = float(self.plan.config.theta)
+        self._skin = float(self.adapter.skin)
+        # Live budgets: build-time values until the first finish/init
+        # refresh replaces them with device-computed exact margins.
+        self._theta_slack = float(self.adapter.theta_slack)
+        self._fold_slack = float(self.adapter.fold_slack)
+        self._slack_dev = None  # (theta, fold) device scalars, lazy-read
+        self._slack_fallback = False  # NaN slack seen: interval cadence
 
-        # Counters (stats() surface).
+        # Counters (stats() surface). Rebuild causes PARTITION the
+        # rebuild count: rebuilds == drift + interval + forced.
         self.steps = 0
         self.refits = 0
         self.rebuilds = 0
         self.rebuilds_drift = 0
         self.rebuilds_interval = 0
+        self.rebuilds_forced = 0
         self.force_evals = 0
         self.capacity_growths = 0
         self._steps_since_rebuild = 0
@@ -152,9 +180,9 @@ class Simulation:
         self._finish_history_compiles = 0  # compiles in retired finish fns
 
         # Initial force evaluation (device): seeds f/phi for the first
-        # kick and for step-0 diagnostics.
-        self._arrays, self.state = self._init_forces(self._arrays,
-                                                     self.state)
+        # kick and for step-0 diagnostics, plus the refreshed budgets.
+        self._arrays, self.state, self._slack_dev = self._init_forces(
+            self._arrays, self.state)
         self.adapter.sync_arrays(self._arrays)
         self.force_evals += 1
         self.log = diag.EnergyLog()
@@ -167,12 +195,13 @@ class Simulation:
         integ, dt, inv_m = self.integrator, self.dt, self._inv_m
         space = self.space
 
-        def advance(state, x_ref):
+        def advance(state, x_eval_ref):
             s1 = integ.pre(state, dt, inv_m)
-            # Minimum-image drift under periodic spaces: a particle
-            # wrapped at the last rebuild must not register a spurious
-            # box-length displacement.
-            return s1, max_drift(s1.x, x_ref, space)
+            # Per-step drift since the last force evaluation (where the
+            # budgets were refreshed). Minimum-image under periodic
+            # spaces: a particle wrapped at the last rebuild must not
+            # register a spurious box-length displacement.
+            return s1, max_drift(s1.x, x_eval_ref, space)
 
         self._advance = jax.jit(advance)
         self._make_force_closures()
@@ -181,16 +210,19 @@ class Simulation:
         integ, dt, inv_m = self.integrator, self.dt, self._inv_m
         adapter, q = self.adapter, self.charges
         force = adapter.force_fn()
+        slack = adapter.slack_fn()
 
         def finish(arrays, state):
             arrays = adapter.refit(arrays, state.x)
+            slacks = slack(arrays)  # on-device refresh from refit boxes
             phi, f = force(arrays, state.x, q, q)
-            return arrays, integ.post(state, phi, f, dt, inv_m)
+            return arrays, integ.post(state, phi, f, dt, inv_m), slacks
 
         def init_forces(arrays, state):
             arrays = adapter.refit(arrays, state.x)
+            slacks = slack(arrays)
             phi, f = force(arrays, state.x, q, q)
-            return arrays, state._replace(phi=phi, f=f)
+            return arrays, state._replace(phi=phi, f=f), slacks
 
         self._finish = jax.jit(finish)
         self._init_forces = jax.jit(init_forces)
@@ -220,21 +252,50 @@ class Simulation:
     # stepping
     # ------------------------------------------------------------------
 
+    def _refresh_budgets(self) -> None:
+        """Pull the slacks computed by the last finish/init pass (exact
+        margins from the refitted boxes) onto the host."""
+        if self._slack_dev is not None:
+            self._theta_slack = float(self._slack_dev[0])
+            self._fold_slack = float(self._slack_dev[1])
+            self._slack_dev = None
+
     def _drift_exceeds_budget(self, drift: float) -> bool:
-        # Provable MAC-validity bound (DESIGN.md §4): each box endpoint
-        # moves <= drift per coordinate, so radii grow and centers move
-        # by <= sqrt(3)*drift each; the MAC holds while
-        # 2*sqrt(3)*(1 + theta)*drift < slack.
-        if not math.isfinite(self._slack):
-            return False  # no approx interactions -> refit is exact
-        budget = self.drift_safety * self._slack
-        return 2.0 * math.sqrt(3.0) * (1.0 + self._theta) * drift >= budget
+        """True when the per-step drift is NOT provably within budget.
+
+        Validity bound (DESIGN.md §4): refit remains MAC-valid while,
+        STRICTLY,
+
+            2*sqrt(3)*(1 + theta) * drift < safety * theta_slack   and
+            4 * drift                     < safety * fold_slack
+
+        so this fires on ``>=`` of either budget — equality is not
+        provably valid. +inf slack means the category has no safe approx
+        pairs (no budget to exhaust: refits are exact). A NaN slack
+        (possible when a degenerate build leaves the refresh with no
+        information) means validity is UNKNOWN: instead of silently
+        treating it as "no approx work", the engine falls back to
+        rebuilding on the interval cadence explicitly (`slack_fallback`
+        in `stats()`).
+        """
+        ts, fs = self._theta_slack, self._fold_slack
+        if math.isnan(ts) or math.isnan(fs):
+            self._slack_fallback = True
+            return False  # unknown validity: interval cadence rebuilds
+        exceeded = False
+        if math.isfinite(ts):
+            lhs = theta_drift_rate(self._theta) * drift
+            exceeded |= lhs >= self.drift_safety * ts
+        if math.isfinite(fs):
+            exceeded |= fold_drift_rate() * drift >= self.drift_safety * fs
+        return exceeded
 
     def step(self) -> MDState:
         """One integration step (one force evaluation)."""
-        s1, drift_dev = self._advance(self.state, self._x_ref)
+        s1, drift_dev = self._advance(self.state, self._x_eval_ref)
         drift = float(drift_dev)
         self._last_drift = drift
+        self._refresh_budgets()
 
         policy = self.rebuild_policy
         by_drift = policy == "auto" and self._drift_exceeds_budget(drift)
@@ -259,18 +320,28 @@ class Simulation:
                     self._remake_finish()
             self.plan = self.adapter.plan
             self._arrays = self.adapter.arrays
-            self._x_ref = s1.x
-            self._slack = float(self.adapter.mac_slack)
+            self._theta_slack = float(self.adapter.theta_slack)
+            self._fold_slack = float(self.adapter.fold_slack)
             self._steps_since_rebuild = 0
             self.rebuilds += 1
+            # Cause accounting PARTITIONS the rebuild count (asserted by
+            # tests): drift wins ties with the interval, and rebuilds
+            # with neither cause (policy "always", checkpoint restores)
+            # count as forced.
             if by_drift:
                 self.rebuilds_drift += 1
-            elif policy == "auto":
+            elif by_interval:
                 self.rebuilds_interval += 1
+            else:
+                self.rebuilds_forced += 1
         else:
             self.refits += 1
 
-        self._arrays, self.state = self._finish(self._arrays, s1)
+        self._arrays, self.state, self._slack_dev = self._finish(
+            self._arrays, s1)
+        # The refit/refresh point is s1.x (position-Verlet moves x again
+        # in post; the budgets were refreshed at the force point).
+        self._x_eval_ref = s1.x
         self.adapter.sync_arrays(self._arrays)
         self.steps += 1
         self._steps_since_rebuild += 1
@@ -310,9 +381,12 @@ class Simulation:
         if not self.integrator.phi_at_step_end and self.steps > 0:
             # Position-Verlet leaves phi/f at the midpoint; refresh them
             # at the current positions so the energy is consistent (one
-            # extra force evaluation, only at recording cadence).
-            self._arrays, self.state = self._init_forces(self._arrays,
-                                                         self.state)
+            # extra force evaluation, only at recording cadence). The
+            # refit/refresh point moves with it, so the drift reference
+            # and the budgets stay paired.
+            self._arrays, self.state, self._slack_dev = self._init_forces(
+                self._arrays, self.state)
+            self._x_eval_ref = self.state.x
             self.adapter.sync_arrays(self._arrays)
             self.force_evals += 1
         return diag.summarize(self.state, self.charges, self.masses)
@@ -325,10 +399,13 @@ class Simulation:
           any diagnostics-driven refreshes).
         - ``refits``: steps serviced by the device tree refit alone — no
           host work beyond the one drift scalar.
-        - ``rebuilds``: host tree rebuilds, split into ``rebuilds_drift``
-          (the MAC slack budget was exhausted) and ``rebuilds_interval``
-          (the K-step fallback elapsed); ``rebuild="always"`` rebuilds
-          count toward neither split.
+        - ``rebuilds``: host tree rebuilds, PARTITIONED by cause:
+          ``rebuilds == rebuilds_drift + rebuilds_interval +
+          rebuilds_forced`` always holds. ``rebuilds_drift`` — a drift
+          budget was exhausted (wins ties with the interval);
+          ``rebuilds_interval`` — the K-step fallback elapsed (and drift
+          did not fire); ``rebuilds_forced`` — neither cause
+          (``rebuild="always"`` steps, checkpoint restores).
         - ``compiles``: total jit compilations of the step executables
           (advance + force closures, including retired ones).
         - ``retraces``: compiles beyond the baseline paid by the end of
@@ -341,17 +418,33 @@ class Simulation:
           re-padded into geometrically grown capacities — each one is a
           deliberate, counted retrace, and geometric growth bounds their
           total number over any run.
-        - ``mac_slack`` / ``drift_budget`` / ``last_drift``: the refit
-          validity margin (DESIGN.md §4), the drift it allows, and the
-          drift measured at the last step.
+        - ``theta_slack`` / ``fold_slack``: the LIVE refreshed margins
+          (exact on the last refit's boxes; DESIGN.md §4).
+          ``drift_budget_theta`` / ``drift_budget_fold`` /
+          ``drift_budget_skin``: the per-step drift each budget allows
+          (theta rate 2√3(1+θ), fold rate 4, and the build-time
+          guarantee skin/2); ``drift_budget`` is their effective min.
+        - ``mac_slack``: v1 compatibility alias — both live margins
+          folded into theta-rate units.
+        - ``last_drift``: the per-step drift measured at the last step
+          (since the previous force evaluation, minimum-image).
+        - ``slack_fallback``: a NaN slack was seen — the engine is
+          explicitly rebuilding on the interval cadence.
         - ``plan``: the underlying plan's own `stats()`.
         """
+        self._refresh_budgets()
+        b_theta = (self.drift_safety * self._theta_slack
+                   / theta_drift_rate(self._theta))
+        b_fold = self.drift_safety * self._fold_slack / fold_drift_rate()
+        if math.isnan(b_theta) or math.isnan(b_fold):
+            b_theta = b_fold = 0.0  # NaN slack: interval-cadence fallback
         return dict(
             steps=self.steps,
             refits=self.refits,
             rebuilds=self.rebuilds,
             rebuilds_drift=self.rebuilds_drift,
             rebuilds_interval=self.rebuilds_interval,
+            rebuilds_forced=self.rebuilds_forced,
             retraces=self.retraces,
             compiles=self._total_compiles(),
             capacity_growths=self.capacity_growths,
@@ -361,10 +454,17 @@ class Simulation:
             integrator=self.integrator.name,
             dt=self.dt,
             space=repr(self.space),
-            mac_slack=self._slack,
+            mac_slack=_scaled_slack(self._theta, self._theta_slack,
+                                    self._fold_slack),
+            theta_slack=self._theta_slack,
+            fold_slack=self._fold_slack,
+            skin=self._skin,
+            slack_fallback=self._slack_fallback,
             last_drift=self._last_drift,
-            drift_budget=(self.drift_safety * self._slack
-                          / (2.0 * math.sqrt(3.0) * (1.0 + self._theta))),
+            drift_budget_theta=b_theta,
+            drift_budget_fold=b_fold,
+            drift_budget_skin=0.5 * self._skin,
+            drift_budget=min(b_theta, b_fold),
             plan=self.plan.stats(),
         )
 
@@ -395,14 +495,16 @@ class Simulation:
             if self.adapter.recloses_on_rebuild:
                 self._remake_finish()
         self.rebuilds += 1
+        self.rebuilds_forced += 1  # neither drift- nor interval-caused
         self.plan = self.adapter.plan
         self._arrays = self.adapter.arrays
-        self._x_ref = self.state.x
-        self._slack = float(self.adapter.mac_slack)
+        self._x_eval_ref = self.state.x
+        self._theta_slack = float(self.adapter.theta_slack)
+        self._fold_slack = float(self.adapter.fold_slack)
         self._steps_since_rebuild = 0
         self.steps = int(step)
-        self._arrays, self.state = self._init_forces(self._arrays,
-                                                     self.state)
+        self._arrays, self.state, self._slack_dev = self._init_forces(
+            self._arrays, self.state)
         self.adapter.sync_arrays(self._arrays)
         self.force_evals += 1
         return self.steps

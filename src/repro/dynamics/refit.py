@@ -16,8 +16,9 @@ the jitted executors on every call, so refitting the boxes refits them
 for free. Every particle remains inside its refitted cluster box (the box
 IS the particle bounding box), so barycentric interpolation stays
 well-posed; the only thing drift can invalidate is the MAC inequality of
-the frozen approx lists, which the engine guards with the
-`mac_slack`-based trigger (see DESIGN.md §4 for the bound).
+the frozen approx lists, which the engine guards with the per-step
+drift-vs-refreshed-slack trigger (`refresh_slacks_*` below recompute the
+exact theta/fold margins from the refitted boxes; DESIGN.md §4).
 
 `PlanAdapter` gives the engine one interface over both plan strategies:
 jit-safe `refit` and `force` (input-order positions in, input-order
@@ -33,6 +34,7 @@ import numpy as np
 
 from repro.core import eval as _eval
 from repro.core.api import SingleDevicePlan
+from repro.kernels import ops as _ops
 
 
 def _masked_boxes(pts, valid, old_lo_rows, old_hi_rows):
@@ -121,6 +123,62 @@ def refit_sharded_arrays(arrays: dict, x: jnp.ndarray,
                 tgt_batched=flat[:, :-1].reshape(-1, b, nb, 3))
 
 
+# ---------------------------------------------------------------------------
+# On-device slack refresh (drift-budget v2, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+#
+# Refitted boxes are TRUE bounding boxes of the moved particles, so MAC
+# margins recomputed from them are exact current margins — not the
+# build-time values degraded by a worst-case bound. The engine therefore
+# budgets only the drift since the LAST refit (one step) against these
+# refreshed slacks, instead of cumulative drift against frozen build
+# slack: boxes usually shrink under refit, so the live budget is larger
+# and refit runs lengthen. Skin pairs are runtime gated (self-validating)
+# and excluded from the minima.
+
+
+def refresh_slacks_single(arrays: dict, *, theta: float,
+                          space) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(theta_slack, fold_slack) device scalars of a refitted
+    single-device plan (jit-safe; +inf when no safe approx pairs)."""
+    bc, bhw, rb, has = _ops.batch_boxes(arrays["tgt_batched"],
+                                        arrays["tgt_mask"])
+    return _ops.refreshed_slacks(
+        arrays["approx_idx"], arrays["approx_skin"], bc, bhw, rb, has,
+        arrays["node_lo"], arrays["node_hi"], theta=theta, space=space)
+
+
+def refresh_slacks_sharded(arrays: dict, *, theta: float,
+                           space) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(theta_slack, fold_slack) over a sharded plan's stacked arrays.
+
+    Local per-rank lists are offset into the flat (P*M) node axis and
+    reduced together with the remote (LET) lists — whose entries already
+    index the flat gathered node axis — so one jnp.min over the stacked
+    arrays IS the cross-rank slack reduction (no collective beyond the
+    gather jit emits for the cross-shard node reads). Remote skin pairs
+    are demoted at build, so every remote entry is a safe pair."""
+    lo, hi = arrays["node_lo"], arrays["node_hi"]        # (P, M, 3)
+    p, m = lo.shape[0], lo.shape[1]
+    lo_f = lo.reshape(p * m, 3)
+    hi_f = hi.reshape(p * m, 3)
+    tgt = arrays["tgt_batched"]                          # (P, B, NB, 3)
+    _, b, nb, _ = tgt.shape
+    bc, bhw, rb, has = _ops.batch_boxes(
+        tgt.reshape(p * b, nb, 3), arrays["tgt_mask"].reshape(p * b, nb))
+    off = (jnp.arange(p, dtype=jnp.int32) * m)[:, None, None]
+    la = arrays["approx_idx"]
+    la_f = jnp.where(la >= 0, la + off, -1).reshape(p * b, -1)
+    ls_f = arrays["approx_skin"].reshape(p * b, -1)
+    t_loc, f_loc = _ops.refreshed_slacks(
+        la_f, ls_f, bc, bhw, rb, has, lo_f, hi_f, theta=theta, space=space)
+    ra = arrays["remote_approx_idx"].reshape(p * b, -1)
+    t_rem, f_rem = _ops.refreshed_slacks(
+        ra, jnp.zeros_like(ra), bc, bhw, rb, has, lo_f, hi_f,
+        theta=theta, space=space)
+    return jnp.minimum(t_loc, t_rem), jnp.minimum(f_loc, f_rem)
+
+
 def max_drift(x: jnp.ndarray, x_ref: jnp.ndarray,
               space=None) -> jnp.ndarray:
     """Max particle displacement since the reference build (jit-safe).
@@ -172,10 +230,31 @@ class PlanAdapter:
     def mac_slack(self) -> float:
         raise NotImplementedError
 
+    @property
+    def theta_slack(self) -> float:
+        """Build-time raw theta-margin slack (drift rate 2√3(1+θ))."""
+        return self.plan.theta_slack
+
+    @property
+    def fold_slack(self) -> float:
+        """Build-time raw fold-margin slack (drift rate 4)."""
+        return self.plan.fold_slack
+
+    @property
+    def skin(self) -> float:
+        """Verlet-skin radius of the plan's interaction lists."""
+        return self.plan.skin
+
     def signature(self) -> Tuple:
         raise NotImplementedError
 
     def refit(self, arrays: dict, x) -> dict:
+        raise NotImplementedError
+
+    def slack_fn(self) -> Callable:
+        """Jit-safe (arrays) -> (theta_slack, fold_slack) device scalars
+        recomputed from the REFITTED geometry (the on-device slack
+        refresh the engine budgets per-step drift against)."""
         raise NotImplementedError
 
     def force_fn(self) -> Callable:
@@ -217,6 +296,15 @@ class SingleDeviceAdapter(PlanAdapter):
 
     def refit(self, arrays: dict, x) -> dict:
         return refit_single_arrays(arrays, x)
+
+    def slack_fn(self) -> Callable:
+        cfg = self.plan.config
+
+        def slack(arrays):
+            return refresh_slacks_single(arrays, theta=cfg.theta,
+                                         space=cfg.space)
+
+        return slack
 
     def force_fn(self) -> Callable:
         opts = self.plan.config.exec_opts(self.plan.kernel)
@@ -305,6 +393,15 @@ class ShardedAdapter(PlanAdapter):
 
     def refit(self, arrays: dict, x) -> dict:
         return refit_sharded_arrays(arrays, x, self.plan.depth)
+
+    def slack_fn(self) -> Callable:
+        cfg = self.plan.config
+
+        def slack(arrays):
+            return refresh_slacks_sharded(arrays, theta=cfg.theta,
+                                          space=cfg.space)
+
+        return slack
 
     def force_fn(self) -> Callable:
         fn = self._fn                     # shared cached SPMD executable

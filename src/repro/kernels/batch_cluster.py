@@ -30,6 +30,18 @@ difference form.
 
 Layout: coordinates are coordinate-major (..., 3, P) so the particle axis
 is the TPU lane dimension.
+
+Sentinel contract: a ``-1`` slot in the interaction-list index array
+contributes exactly zero, and sentinels may appear at ANY position in a
+row, not only as trailing padding. The accumulation masks every slot
+individually (``valid * pot`` / the Kahan variant below) and the output
+tile is initialized at slot 0 regardless of that slot's validity, so
+interior sentinels are safe — the Verlet-skin runtime gate
+(drift-budget v2, DESIGN.md §4) relies on this to switch dual-listed
+pairs between the approx and direct kernels by current distance without
+re-packing the lists. Host-BUILT lists still emit trailing padding only
+(less wasted gather bandwidth); the gate is the one producer of
+interior sentinels.
 """
 from __future__ import annotations
 

@@ -61,6 +61,95 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0):
 
 
 # ---------------------------------------------------------------------------
+# Runtime MAC gate (Verlet-skin dual lists, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+#
+# Skin pairs are dual-listed at build time (repro.core.interaction): the
+# executors re-test the pair's MAC on the CURRENT refitted geometry and
+# route it to exactly one side by masking the losing side's index to the
+# -1 sentinel the kernels already skip. Both sides evaluate the SAME
+# predicate on the same inputs, so the routing is complementary by
+# construction. These helpers are jit-safe and shared by the
+# single-device executor (repro.core.eval) and the SPMD body
+# (repro.distributed.bltc).
+
+
+def batch_boxes(tgt: jnp.ndarray, mask: jnp.ndarray):
+    """Current batch geometry from the padded target slab.
+
+    tgt (B, NB, 3) refitted batch-packed targets, mask (B, NB) validity
+    (False = padding). Returns (center (B, 3), half_extent (B, 3),
+    radius (B,), has (B,)); fully padded rows collapse to a point box at
+    the origin and are excluded via `has`.
+    """
+    big = jnp.asarray(jnp.finfo(tgt.dtype).max, tgt.dtype)
+    m = mask[..., None]
+    lo = jnp.min(jnp.where(m, tgt, big), axis=1)
+    hi = jnp.max(jnp.where(m, tgt, -big), axis=1)
+    has = jnp.any(mask, axis=1)
+    lo = jnp.where(has[:, None], lo, 0.0)
+    hi = jnp.where(has[:, None], hi, 0.0)
+    hw = 0.5 * (hi - lo)
+    return 0.5 * (lo + hi), hw, jnp.linalg.norm(hw, axis=-1), has
+
+
+def mac_gate(node_idx: jnp.ndarray, bc, bhw, rb, has,
+             node_lo: jnp.ndarray, node_hi: jnp.ndarray, *,
+             theta: float, space=_FREE) -> jnp.ndarray:
+    """(B, S) bool: MAC of (batch, node_idx[b, s]) holds on CURRENT boxes.
+
+    `bc`/`bhw`/`rb`/`has` come from `batch_boxes`; node_lo/hi are the
+    refitted cluster boxes. Space-aware: minimum-image center distance
+    and the fold-free condition under a `PeriodicBox` (the same
+    acceptance the host traversal applies, DESIGN.md §5). -1 (sentinel)
+    node ids gate to False. The cluster-size condition (n+1)^3 < N_C is
+    topological (drift-invariant) and needs no re-test.
+    """
+    safe = jnp.maximum(node_idx, 0)
+    clo = node_lo[safe]                               # (B, S, 3)
+    chi = node_hi[safe]
+    cc = 0.5 * (clo + chi)
+    chw = 0.5 * (chi - clo)
+    rc = jnp.linalg.norm(chw, axis=-1)
+    d = bc[:, None, :] - cc
+    dm = space.min_image(d)
+    R = jnp.sqrt(jnp.sum(dm * dm, axis=-1))
+    ok = theta * R - (rb[:, None] + rc) > 0.0
+    fold_ok = space.fold_margin(d, bhw[:, None, :] + chw) > 0.0
+    return ok & fold_ok & has[:, None] & (node_idx >= 0)
+
+
+def refreshed_slacks(approx_idx, approx_skin, bc, bhw, rb, has,
+                     node_lo, node_hi, *, theta: float, space=_FREE):
+    """(theta_slack, fold_slack) scalars over the SAFE approx pairs of a
+    refitted plan — the on-device slack refresh (DESIGN.md §4).
+
+    Margins are exact on the current geometry (refitted boxes are true
+    bounding boxes), so the engine may budget future drift against them
+    at the theta/fold rates. Skin pairs (approx_skin != 0) are runtime
+    gated and excluded; empty categories reduce to +inf.
+    """
+    safe = jnp.maximum(approx_idx, 0)
+    clo = node_lo[safe]
+    chi = node_hi[safe]
+    cc = 0.5 * (clo + chi)
+    chw = 0.5 * (chi - clo)
+    rc = jnp.linalg.norm(chw, axis=-1)
+    d = bc[..., None, :] - cc
+    dm = space.min_image(d)
+    R = jnp.sqrt(jnp.sum(dm * dm, axis=-1))
+    t_margin = theta * R - (rb[..., None] + rc)
+    valid = (approx_idx >= 0) & (approx_skin == 0) & has[..., None]
+    inf = jnp.asarray(jnp.inf, t_margin.dtype)
+    theta_slack = jnp.min(jnp.where(valid, t_margin, inf))
+    fold = space.fold_margin(d, bhw[..., None, :] + chw)
+    fold = jnp.broadcast_to(jnp.asarray(fold, t_margin.dtype),
+                            t_margin.shape)
+    fold_slack = jnp.min(jnp.where(valid, fold, inf))
+    return theta_slack, fold_slack
+
+
+# ---------------------------------------------------------------------------
 # batch-cluster evaluation (Eq. 9 / Eq. 11)
 # ---------------------------------------------------------------------------
 

@@ -287,6 +287,199 @@ def test_engine_rejects_bad_args(cloud):
 
 
 # ---------------------------------------------------------------------------
+# drift-budget v2: boundary semantics, NaN fallback, cause counters, skin
+# ---------------------------------------------------------------------------
+
+
+def test_drift_trigger_boundary_matches_documented_bound(cloud):
+    """DESIGN.md §4 states validity STRICTLY: rate*drift < safety*slack.
+    The trigger must therefore fire AT the boundary (equality is not
+    provably valid) and stay silent just below it, for both budgets."""
+    x, q = cloud
+    sim = _make_sim(x, (q * 0.05).astype(np.float32), drift_safety=1.0)
+    rate_t = 2.0 * np.sqrt(3.0) * (1.0 + 0.8)
+
+    # slack chosen so lhs == budget is exact in floats: drift 1.0 gives
+    # lhs = rate_t == slack exactly.
+    sim._theta_slack, sim._fold_slack = rate_t, float("inf")
+    assert sim._drift_exceeds_budget(1.0)                     # equality
+    assert sim._drift_exceeds_budget(1.0001)                  # above
+    assert not sim._drift_exceeds_budget(0.9999)              # below
+
+    # the fold budget triggers at its OWN rate (4), independently
+    sim._theta_slack, sim._fold_slack = float("inf"), 4.0
+    assert sim._drift_exceeds_budget(1.0)                     # 4*d == slack
+    assert not sim._drift_exceeds_budget(0.9999)
+
+    # no approx pairs at all: refits are exact, never triggers
+    sim._theta_slack = sim._fold_slack = float("inf")
+    assert not sim._drift_exceeds_budget(1e9)
+
+
+def test_nan_slack_falls_back_to_interval_rebuilds(cloud):
+    """A NaN slack (degenerate build) must not be silently treated as
+    'no approx work': the engine flags the fallback and rebuilds on the
+    interval cadence exactly."""
+    x, q = cloud
+    sim = _make_sim(x, (q * 0.05).astype(np.float32), refit_interval=4)
+    sim._theta_slack = float("nan")
+    sim._slack_dev = None                      # keep the poked value
+    assert not sim._drift_exceeds_budget(1e9)  # no spurious drift fires
+    assert sim._slack_fallback
+    s = sim.stats()
+    assert s["slack_fallback"]
+    assert s["drift_budget"] == 0.0
+    # NaN re-poked each step (finish refreshes it): interval still fires
+    before = sim.rebuilds
+    for _ in range(4):
+        sim._theta_slack = float("nan")
+        sim._slack_dev = None
+        sim.step()
+    assert sim.rebuilds == before + 1
+    assert sim.rebuilds_interval >= 1
+
+
+def test_rebuild_cause_counters_partition(cloud):
+    """stats() invariant: rebuilds == drift + interval + forced, under
+    every policy — including the drift+interval tie and rebuild='always'
+    (which previously incremented no cause counter)."""
+    x, q = cloud
+    q = (q * 0.05).astype(np.float32)
+
+    forced = _make_sim(x, q, rebuild="always")
+    forced.run(5)
+    s = forced.stats()
+    assert s["rebuilds"] == 5 == s["rebuilds_forced"]
+    assert s["rebuilds_drift"] == s["rebuilds_interval"] == 0
+
+    import jax.numpy as jnp
+    tied = _make_sim(x, q, refit_interval=3)
+    tied.run(2)                                # next step hits K
+    tied.state = tied.state._replace(          # ... and blows the budget
+        x=tied.state.x + jnp.asarray([0.5, 0.0, 0.0], tied.state.x.dtype))
+    tied.step()
+    s = tied.stats()
+    assert s["rebuilds_drift"] == 1            # drift wins the tie
+    assert (s["rebuilds"] == s["rebuilds_drift"] + s["rebuilds_interval"]
+            + s["rebuilds_forced"])
+
+
+def test_skin_floors_the_drift_budget(cloud):
+    """Lists built with skin > 0 keep every SAFE approx margin above the
+    skin threshold, so the build slack is >= rate * skin/2 and the
+    stats() surface exposes all three budgets."""
+    x, q = cloud
+    skin = 0.06
+    plan = _solver(skin=skin).plan(x, nranks=1)
+    rate_t = 2.0 * np.sqrt(3.0) * (1.0 + 0.8)
+    assert plan.theta_slack >= rate_t * skin / 2.0
+    assert plan.skin == skin
+
+    from repro.dynamics import Simulation
+    sim = Simulation(plan, (q * 0.05).astype(np.float32), dt=2e-4)
+    s = sim.stats()
+    assert s["skin"] == skin
+    assert s["drift_budget_skin"] == skin / 2.0
+    assert s["drift_budget_theta"] >= skin / 2.0 * 0.99
+    assert s["drift_budget"] > 0
+
+
+def test_skin_refit_forces_within_f64_envelope(cloud, rng):
+    """Satellite oracle: with skin-padded lists, refit forces at drifts
+    up to skin/2 stay within the f64 direct-sum error envelope of a
+    FRESH tree build (the runtime gate keeps every routed pair either
+    MAC-valid or exactly summed)."""
+    import jax.numpy as jnp
+
+    from repro.core import eval as ev
+    from repro.core.direct import direct_oracle_f64
+    from repro.dynamics import refit_single_arrays
+
+    x, q = cloud
+    skin = 0.08
+    solver = _solver(skin=skin)
+    plan = solver.plan(x, nranks=1, capacities="auto")
+
+    # drift every particle by exactly 0.45 * skin (just under skin/2)
+    step = rng.normal(0, 1, x.shape).astype(np.float32)
+    step *= 0.45 * skin / np.linalg.norm(step, axis=1)[:, None]
+    x1 = x + step
+
+    arrays = refit_single_arrays(plan.inner.arrays, jnp.asarray(x1))
+    opts = plan.config.exec_opts(plan.kernel)
+    _, f_refit = ev.potential_and_forces(
+        arrays, jnp.asarray(q), jnp.asarray(q), plan.kernel_params, **opts)
+    _, f_fresh = _solver().plan(x1, nranks=1).potential_and_forces(q)
+    _, f_ref = direct_oracle_f64(x1, q, kernel=plan.kernel)
+
+    scale = np.abs(f_ref).max()
+    err_refit = np.abs(np.asarray(f_refit) - f_ref).max() / scale
+    err_fresh = np.abs(np.asarray(f_fresh) - f_ref).max() / scale
+    assert err_refit <= 2.0 * err_fresh + 1e-6, (err_refit, err_fresh)
+
+
+def test_skin_trajectory_matches_rebuild_oracle(cloud):
+    """Engine-level: a skin-padded refit trajectory follows the
+    rebuild-every-step oracle and its forces match the f64 direct sum at
+    the end of the run."""
+    from repro.core.direct import direct_oracle_f64
+    from repro.dynamics import Simulation
+
+    x, q = cloud
+    q = (q * 0.05).astype(np.float32)
+    sa = Simulation(_solver(skin=0.05).plan(x, nranks=1), q, dt=2e-4,
+                    refit_interval=100)
+    sb = Simulation(_solver(skin=0.05).plan(x, nranks=1), q, dt=2e-4,
+                    rebuild="always")
+    sa.run(16)
+    sb.run(16)
+    xa, xb = np.asarray(sa.state.x), np.asarray(sb.state.x)
+    assert np.max(np.linalg.norm(xa - xb, axis=1)) / np.abs(xb).max() < 1e-3
+    assert sa.stats()["rebuilds"] < sb.stats()["rebuilds"]
+
+    _, f_ref = direct_oracle_f64(xa, q, kernel=sa.plan.kernel)
+    rel = (np.linalg.norm(np.asarray(sa.state.f) - f_ref)
+           / np.linalg.norm(f_ref))
+    assert rel < 5e-3, rel
+
+
+def test_sharded_skin_refit_equivalence():
+    """4-device sharded MD with skin-padded lists: refit trajectory
+    matches the rebuild-always oracle, end-of-run forces stay inside the
+    f64 direct-sum envelope, and the retrace-free contract holds."""
+    _run_sub("""
+        import numpy as np
+        from repro.core.api import TreecodeConfig, TreecodeSolver
+        from repro.core.direct import direct_oracle_f64
+        from repro.dynamics import Simulation
+
+        rng = np.random.default_rng(0)
+        n = 600
+        x = rng.uniform(-1, 1, (n, 3)).astype(np.float32)
+        q = (rng.uniform(-1, 1, n) * 0.05).astype(np.float32)
+        solver = TreecodeSolver(TreecodeConfig(
+            theta=0.8, degree=3, leaf_size=32, skin=0.05))
+        sa = Simulation(solver.plan(x, nranks=4), q, dt=2e-4,
+                        refit_interval=100)
+        sb = Simulation(solver.plan(x, nranks=4), q, dt=2e-4,
+                        rebuild="always")
+        sa.run(12); sb.run(12)
+        xa = np.asarray(sa.state.x); xb = np.asarray(sb.state.x)
+        dev = float(np.max(np.abs(xa - xb)) / np.abs(xb).max())
+        assert dev < 1e-3, dev
+        s = sa.stats()
+        assert s["retraces"] == 0, s
+        assert s["rebuilds"] < sb.stats()["rebuilds"]
+        assert s["plan"]["skin"] == 0.05
+        _, f_ref = direct_oracle_f64(xa, q, kernel=solver.kernel)
+        rel = float(np.linalg.norm(np.asarray(sa.state.f) - f_ref)
+                    / np.linalg.norm(f_ref))
+        print("FORCE_REL", rel)
+        assert rel < 5e-3, rel
+    """, devices=4)
+
+
+# ---------------------------------------------------------------------------
 # checkpointing
 # ---------------------------------------------------------------------------
 
@@ -333,7 +526,8 @@ def test_sharded_capacities_budget_policy():
 
     rank = dict(num_batches=10, batch_width=24, num_leaves=10,
                 leaf_width=24, num_nodes=17, approx_width=6,
-                direct_width=10, depth=3, bucket_rows=(1, 2, 8),
+                direct_width=10, skin_direct_width=6, depth=3,
+                bucket_rows=(1, 2, 8),
                 bucket_widths=(512, 128, 32), upward_rows=())
     need = dict(nranks=4, rank=rank, slab_width=250,
                 remote_approx_width=5, remote_direct_width=20,

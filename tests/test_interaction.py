@@ -52,6 +52,98 @@ def test_lists_partition_sources_exactly_once(seed, n, leaf, theta, degree,
             err_msg=f"batch {b}: sources not covered exactly once")
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       theta=st.sampled_from([0.6, 0.8]),
+       skin=st.sampled_from([0.02, 0.08]))
+def test_skin_classification_partition(seed, theta, skin):
+    """Verlet-skin invariants (drift-budget v2): every source is still
+    covered exactly once per batch (skin pairs counted from their approx
+    slot — the runtime gate routes, never drops); SAFE pairs keep both
+    margins above the skin thresholds; every flagged pair's full leaf
+    decomposition sits in the skin-direct list under its node id."""
+    from repro.core.interaction import fold_drift_rate, theta_drift_rate
+
+    r = np.random.default_rng(seed)
+    n = 700
+    pts = r.uniform(-1, 1, (n, 3))
+    tree = build_tree(pts, 32)
+    batches = build_batches(pts, 32)
+    lists = build_interaction_lists(tree, batches, theta, 3, skin=skin)
+    base = build_interaction_lists(tree, batches, theta, 3)
+
+    thr = theta_drift_rate(theta) * 0.5 * skin
+    assert lists.theta_slack >= thr or not np.isfinite(lists.theta_slack)
+    assert lists.skin == skin
+    # skin only reclassifies: the approx side (pure + flagged) is the
+    # no-skin approx set, so coverage exactly-once carries over verbatim
+    assert sorted(map(tuple, np.sort(lists.approx, axis=1))) == \
+        sorted(map(tuple, np.sort(base.approx, axis=1)))
+    np.testing.assert_array_equal(np.sort(lists.direct, axis=1),
+                                  np.sort(base.direct, axis=1))
+
+    flagged = 0
+    for b in range(batches.num_batches):
+        skin_slots = {}
+        for j, slot in enumerate(lists.skin_direct[b]):
+            if slot >= 0:
+                skin_slots.setdefault(
+                    int(lists.skin_direct_node[b, j]), set()).add(int(slot))
+        for s_idx, node in enumerate(lists.approx[b]):
+            if node < 0:
+                continue
+            is_skin = lists.approx_skin[b, s_idx] != 0
+            dist = np.linalg.norm(batches.center[b] - tree.center[node])
+            margin = theta * dist - (batches.radius[b] + tree.radius[node])
+            assert margin > 0  # every listed pair is MAC-valid at build
+            if is_skin:
+                flagged += 1
+                assert margin <= thr
+                # full leaf decomposition present under this node id
+                want = set(tree.leaves_in_range(
+                    int(tree.start[node]), int(tree.count[node])).tolist())
+                assert skin_slots.get(int(node)) == want
+            else:
+                assert margin > thr
+        # no skin-direct entries without a flagged owner
+        owners = {int(lists.approx[b, s]) for s in
+                  np.nonzero(lists.approx_skin[b])[0]}
+        assert set(skin_slots) <= owners
+    # the sampled configurations do produce skin pairs (not vacuous)
+    if np.isfinite(base.mac_slack) and base.mac_slack <= thr:
+        assert flagged > 0
+
+
+def test_skin_zero_is_identity():
+    """skin=0 must reproduce the frozen-list behavior bit-for-bit, with
+    empty (all -1) dual lists."""
+    r = np.random.default_rng(7)
+    pts = r.uniform(-1, 1, (500, 3))
+    tree = build_tree(pts, 32)
+    batches = build_batches(pts, 32)
+    a = build_interaction_lists(tree, batches, 0.7, 4)
+    b = build_interaction_lists(tree, batches, 0.7, 4, skin=0.0)
+    np.testing.assert_array_equal(a.approx, b.approx)
+    np.testing.assert_array_equal(a.direct, b.direct)
+    assert not b.approx_skin.any()
+    assert (b.skin_direct == -1).all()
+    assert b.theta_slack == a.theta_slack
+    assert a.mac_slack == b.mac_slack
+
+
+def test_skin_rejects_negative():
+    r = np.random.default_rng(3)
+    pts = r.uniform(-1, 1, (100, 3))
+    tree = build_tree(pts, 32)
+    batches = build_batches(pts, 32)
+    try:
+        build_interaction_lists(tree, batches, 0.7, 2, skin=-0.1)
+    except ValueError as e:
+        assert "skin" in str(e)
+    else:
+        raise AssertionError("negative skin accepted")
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), theta=st.sampled_from([0.6, 0.8]))
 def test_padding_slots_all_trailing(seed, theta):

@@ -361,9 +361,12 @@ def test_registry_kernels_receive_params(x64):
 
 
 def test_deprecated_kappa_shim_warns_and_works(x64):
+    from repro.core import api as _api
+
     rng = np.random.default_rng(8)
     x = rng.uniform(-1, 1, (400, 3))
     q = rng.uniform(-1, 1, 400)
+    _api._reset_deprecation_warnings()
     with pytest.warns(DeprecationWarning, match="kernel_params"):
         cfg = TreecodeConfig(degree=5, leaf_size=64, backend="xla",
                              kernel="yukawa", kappa=0.35)
@@ -376,6 +379,25 @@ def test_deprecated_kappa_shim_warns_and_works(x64):
     phi_new = TreecodeSolver(cfg2).plan(x, nranks=1).execute(q)
     np.testing.assert_allclose(np.asarray(phi_old), np.asarray(phi_new),
                                rtol=1e-12)
+
+
+def test_deprecated_kappa_warns_once_per_process():
+    """Sweep loops construct many configs: the shim warning must fire on
+    the FIRST construction only (and be re-armable for tests)."""
+    from repro.core import api as _api
+
+    _api._reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="kernel_params"):
+        TreecodeConfig(kernel="yukawa", kappa=0.4)
+    # every later construction in the same process stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for k in (0.1, 0.2, 0.3):
+            TreecodeConfig(kernel="yukawa", kappa=k)
+    # the hook re-arms it (so other tests can assert the warning)
+    _api._reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        TreecodeConfig(kernel="yukawa", kappa=0.4)
 
 
 def test_unknown_param_name_rejected():
