@@ -1,0 +1,187 @@
+"""Ensemble serving benchmark: batched throughput, latency, compiles.
+
+Measures the ensemble subsystem (`repro.serve`) on an overhead-dominated
+workload — many small independent systems, the serving regime the
+subsystem targets (DESIGN.md §8). Two phases:
+
+1. **Batched throughput**: for each ensemble size S, a sequential
+   per-system loop of single plans vs ONE `EnsemblePlan` launch, both
+   warm, both through their public plan APIs (per-request numpy charges
+   — what a service pays). Reports evals/s and speedup.
+2. **Service**: a `ServeFrontend` fed mixed-shape requests; reports
+   per-request latency (p50/p99), batch occupancy, bucket count, and
+   the compile/retrace counters, then re-submits the same shapes to
+   demonstrate warm buckets (zero compiles, zero retraces).
+
+Writes `BENCH_serve.json`. `--check` enforces the regression gates:
+batched throughput >= 2x the sequential loop at every measured S >= 8,
+compiles <= number of buckets, and zero compiles/retraces on warm
+re-submission.
+
+    PYTHONPATH=src python benchmarks/serve.py [--check] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+# Bench config: small systems make per-request overhead (dispatch,
+# charge upload, jit-cache lookup) comparable to device compute — the
+# pool one batched launch amortizes. Bigger systems become compute-bound
+# on a single CPU core and the speedup tapers toward 1x (reported, not
+# gated); on accelerators the launch-overhead pool is far larger.
+BENCH_N = 16
+BENCH_DEGREE = 2
+BENCH_LEAF = 16
+BENCH_SIZES = (1, 2, 4, 8, 16)
+GATE_MIN_S = 8
+GATE_SPEEDUP = 2.0
+
+
+def bench_throughput(reps=150, seed=0):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.api import TreecodeConfig, TreecodeSolver
+    from repro.serve import EnsemblePlan
+
+    rng = np.random.default_rng(seed)
+    cfg = TreecodeConfig(degree=BENCH_DEGREE, leaf_size=BENCH_LEAF,
+                         theta=0.7, backend="xla")
+    solver = TreecodeSolver(cfg)
+    rows = []
+    for S in BENCH_SIZES:
+        xs = [rng.random((BENCH_N, 3)) for _ in range(S)]
+        qs = [rng.standard_normal(BENCH_N) for _ in range(S)]
+        plans = [solver.plan(x) for x in xs]
+        ens = EnsemblePlan.build(cfg, xs)
+
+        for p, q in zip(plans, qs):
+            p.execute(q).block_until_ready()
+        ens.execute(qs).block_until_ready()
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            outs = [p.execute(q) for p, q in zip(plans, qs)]
+            jax.block_until_ready(outs)
+        t_seq = (time.perf_counter() - t0) / reps
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(ens.execute(qs))
+        t_ens = (time.perf_counter() - t0) / reps
+
+        rows.append(dict(
+            ensemble_size=S,
+            seq_ms=t_seq * 1e3,
+            ens_ms=t_ens * 1e3,
+            seq_evals_per_s=S / t_seq,
+            ens_evals_per_s=S / t_ens,
+            speedup=t_seq / t_ens,
+            occupancy=ens.occupancy,
+        ))
+        print(f"S={S:3d}: seq {t_seq*1e3:7.2f} ms  ens {t_ens*1e3:7.2f} ms"
+              f"  speedup {t_seq/t_ens:5.2f}x", flush=True)
+    return rows
+
+
+def bench_service(seed=0):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.api import TreecodeConfig
+    from repro.serve import ServeFrontend
+
+    rng = np.random.default_rng(seed)
+    cfg = TreecodeConfig(degree=BENCH_DEGREE, leaf_size=BENCH_LEAF,
+                         theta=0.7, backend="xla")
+    fe = ServeFrontend(cfg, max_batch=8, flush_deadline=0.02)
+
+    # mixed shapes: two quantized size classes (<=64 and <=128 points)
+    # -> two buckets. The same request set is submitted twice — warm
+    # re-submission must reuse both buckets' executables untouched.
+    shapes = [12, 16, 20, 100]
+    reqs = [(rng.random((shapes[i % len(shapes)], 3)),
+             rng.standard_normal(shapes[i % len(shapes)]))
+            for i in range(16)]
+
+    def submit_round():
+        futs = [fe.submit(x, q) for x, q in reqs]
+        fe.flush()
+        for f in futs:
+            f.result()
+
+    submit_round()                       # cold: compiles the buckets
+    cold = fe.stats()
+    c0, r0 = cold["compiles"], cold["retraces"]
+    submit_round()                       # warm: must not compile
+    warm = fe.stats()
+
+    out = dict(
+        cold=dict(compiles=c0, retraces=r0,
+                  num_buckets=cold["num_buckets"]),
+        warm_delta=dict(compiles=warm["compiles"] - c0,
+                        retraces=warm["retraces"] - r0),
+        requests=warm["requests"],
+        flushes=warm["flushes"],
+        num_buckets=warm["num_buckets"],
+        occupancy_mean=warm["occupancy_mean"],
+        latency_p50_ms=warm["latency_p50"] * 1e3,
+        latency_p99_ms=warm["latency_p99"] * 1e3,
+        capacity_grows=warm["capacity_grows"],
+    )
+    print(f"service: {out['requests']} reqs, {out['num_buckets']} buckets, "
+          f"{c0} compiles cold, {out['warm_delta']['compiles']} warm, "
+          f"{out['warm_delta']['retraces']} retraces, "
+          f"p50 {out['latency_p50_ms']:.1f} ms "
+          f"p99 {out['latency_p99_ms']:.1f} ms", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="enforce the regression gates")
+    ap.add_argument("--reps", type=int, default=150)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    throughput = bench_throughput(reps=args.reps)
+    service = bench_service()
+    result = dict(
+        config=dict(n=BENCH_N, degree=BENCH_DEGREE, leaf=BENCH_LEAF,
+                    sizes=list(BENCH_SIZES)),
+        throughput=throughput,
+        service=service,
+    )
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.check:
+        failures = []
+        for row in throughput:
+            if row["ensemble_size"] >= GATE_MIN_S \
+                    and row["speedup"] < GATE_SPEEDUP:
+                failures.append(
+                    f"S={row['ensemble_size']}: speedup "
+                    f"{row['speedup']:.2f}x < {GATE_SPEEDUP}x")
+        if service["cold"]["compiles"] > service["num_buckets"]:
+            failures.append(
+                f"cold compiles {service['cold']['compiles']} > "
+                f"buckets {service['num_buckets']}")
+        if service["warm_delta"]["compiles"] \
+                or service["warm_delta"]["retraces"]:
+            failures.append(
+                f"warm re-submission compiled: {service['warm_delta']}")
+        if failures:
+            raise SystemExit("serve gates FAILED:\n  "
+                             + "\n  ".join(failures))
+        print("serve gates passed: "
+              f">={GATE_SPEEDUP}x batched at S>={GATE_MIN_S}, "
+              "compiles <= buckets, warm re-submission clean")
+
+
+if __name__ == "__main__":
+    main()

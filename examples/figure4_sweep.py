@@ -1,24 +1,76 @@
-"""Reproduce the structure of paper Fig. 4: run time vs error for MAC
-theta in {0.5, 0.7, 0.9} as the interpolation degree n sweeps up, for the
-Coulomb and Yukawa kernels, against the direct-sum baseline (FP64, scaled
-N for a single CPU core).
+"""Paper Fig. 4 sweeps: degree/theta run-time-vs-error curves, plus the
+Yukawa kappa sweep as ONE vmapped ensemble launch.
+
+The kappa sweep used to loop `solver(pts, pts, q, kernel_params=...)`
+per value — five sequential launches of the same geometry. Kernel
+parameters are traced (protocol v2) and the ensemble subsystem stacks
+identical systems at zero padding cost, so the five kappa values now
+ride a single `EnsemblePlan` launch and compile exactly once (asserted).
 
     PYTHONPATH=src python examples/figure4_sweep.py [--n 4000]
+    PYTHONPATH=src python examples/figure4_sweep.py --kappa-only
 """
 import argparse
 
-from benchmarks.fig4 import check_paper_claims, run
+
+def kappa_sweep(n_particles=2000, kappas=(0.1, 0.3, 0.5, 0.7, 1.0),
+                x64=True):
+    """Yukawa phi for every kappa in one batched launch; returns
+    {kappa: rel-l2 distance from the coulomb (kappa->0) limit}."""
+    import jax
+    if x64:
+        jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import eval as _eval
+    from repro.core.api import TreecodeConfig
+    from repro.serve import EnsemblePlan
+
+    rng = np.random.default_rng(0)
+    dtype = np.float64 if x64 else np.float32
+    pts = rng.uniform(-1, 1, (n_particles, 3)).astype(dtype)
+    q = rng.uniform(-1, 1, n_particles).astype(dtype)
+
+    cfg = TreecodeConfig(kernel="yukawa", theta=0.7, degree=6,
+                        leaf_size=200, backend="xla")
+    plan = EnsemblePlan.build(cfg, [pts] * len(kappas))
+    before = _eval.ensemble_compile_count()
+    phi = plan.execute([q] * len(kappas),
+                       kernel_params=[{"kappa": k} for k in kappas])
+    phi.block_until_ready()
+    compiles = _eval.ensemble_compile_count() - before
+    assert compiles == 1, (
+        f"kappa sweep must compile exactly once, compiled {compiles}x")
+
+    phis = [np.asarray(p) for p in plan.split(phi)]
+    base = phis[0]
+    out = {}
+    for k, p in zip(kappas, phis):
+        out[k] = float(np.linalg.norm(p - base) / np.linalg.norm(base))
+    return out, compiles
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--kappa-only", action="store_true",
+                    help="skip the degree/theta sweep")
     args = ap.parse_args()
-    print("kernel,theta,degree,time_s,rel2_err,direct_time_s")
-    rows = run(n_particles=args.n, degrees=(1, 2, 4, 6, 8, 10))
-    print()
-    for msg in check_paper_claims(rows):
-        print(msg)
+
+    if not args.kappa_only:
+        from benchmarks.fig4 import check_paper_claims, run
+        print("kernel,theta,degree,time_s,rel2_err,direct_time_s")
+        rows = run(n_particles=args.n, degrees=(1, 2, 4, 6, 8, 10))
+        print()
+        for msg in check_paper_claims(rows):
+            print(msg)
+        print()
+
+    screen, compiles = kappa_sweep(n_particles=min(args.n, 2000))
+    print(f"kappa sweep: 1 ensemble launch, {compiles} compile")
+    print("kappa,rel2_vs_smallest_kappa")
+    for k, d in screen.items():
+        print(f"{k},{d:.3e}")
 
 
 if __name__ == "__main__":

@@ -543,7 +543,23 @@ def potential_and_forces(arrays, charges, weights, params=None, *, degree,
 
 @dataclasses.dataclass(frozen=True)
 class Capacities:
-    """Fixed padded-dimension budget for shape-stable replans."""
+    """Fixed padded-dimension budget for shape-stable replans.
+
+    `num_targets` / `num_sources` are OPT-IN point budgets (0, the MD
+    default, leaves the particle axes unpadded — the particle count is
+    fixed across MD replans). When set (the ensemble/serving setting,
+    see `repro.serve`), `pad_plan` additionally pads the source slab,
+    the source permutation, and the target `gather_index` so plans over
+    DIFFERENT particle counts become shape-identical and can share one
+    compiled (vmapped) executable. Point-budgeted plans reserve one
+    SCRATCH BATCH row (the last row, never holding a real target) that
+    absorbs the padded `gather_index` entries — the batch-row analogue
+    of the scratch node — and their executors require charge vectors
+    padded to `num_sources` (zeros beyond the real particles), which
+    `repro.serve.EnsemblePlan` handles. Point budgets only ever enter
+    through needs dicts that carry explicit ``num_targets`` /
+    ``num_sources`` keys; `for_plan`/`grown_to_fit` never enable them.
+    """
 
     num_batches: int
     batch_width: int
@@ -557,12 +573,24 @@ class Capacities:
     bucket_rows: Tuple[int, ...]      # len == depth
     bucket_widths: Tuple[int, ...]    # len == depth, powers of two
     upward_rows: Tuple[int, ...] = () # len == depth - 1 (hierarchical)
+    num_targets: int = 0              # 0 = unbudgeted (fixed-N replans)
+    num_sources: int = 0              # 0 = unbudgeted
     headroom: float = 1.15
     growth: float = 1.5
 
     @property
     def scratch_node(self) -> int:
         return self.num_nodes - 1
+
+    @property
+    def points_budgeted(self) -> bool:
+        return self.num_targets > 0
+
+    @property
+    def scratch_batch(self) -> int:
+        """Reserved batch row absorbing padded gather_index entries
+        (point-budgeted plans only; its slots are never real targets)."""
+        return self.num_batches - 1
 
     @classmethod
     def for_plan(cls, plan: "Plan", headroom: float = 1.15,
@@ -572,18 +600,32 @@ class Capacities:
 
     @classmethod
     def for_need(cls, need: dict, headroom: float = 1.15,
-                 growth: float = 1.5) -> "Capacities":
+                 growth: float = 1.5, base: int = 8) -> "Capacities":
         """Initial budget from a raw needs dict (`_plan_dims` keys).
 
         The sharded build aggregates its per-rank needs (element-wise max
         over ranks) into the same dict shape, so one schema serves both
-        execution strategies (see `ShardedCapacities`)."""
+        execution strategies (see `ShardedCapacities`). Needs dicts that
+        carry explicit ``num_targets``/``num_sources`` keys (the
+        ensemble setting) enable the point budgets and reserve the
+        scratch batch row.
+
+        `headroom`/`base` trade budget slack against padded kernel work.
+        The MD default (1.15 / 8) buys drift room and replan stability;
+        ensembles of small systems want TIGHT budgets (1.0 / 1, the
+        `repro.serve` default) — padded slots there are pure memory
+        traffic multiplied by the ensemble width, and re-submission
+        reuse only needs budget EQUALITY, which sticky bucket budgets
+        plus geometric growth provide without slack."""
 
         def h(x):
-            return _round_up(int(np.ceil(x * headroom)))
+            return _round_up(int(np.ceil(x * headroom)), base)
 
+        points = bool(need.get("num_targets", 0))
         return cls(
-            num_batches=h(need["num_batches"]),
+            num_targets=_round_up(need["num_targets"], base) if points else 0,
+            num_sources=_round_up(need["num_sources"], base) if points else 0,
+            num_batches=h(need["num_batches"]) + (1 if points else 0),
             batch_width=h(need["batch_width"]),
             num_leaves=h(need["num_leaves"]),
             leaf_width=h(need["leaf_width"]),
@@ -618,9 +660,17 @@ class Capacities:
             return tuple(g(c, n, rounder) for c, n
                          in zip(caps, tuple(needs) + (0,) * len(caps)))
 
+        # Point budgets grow only when active; the +1 keeps the scratch
+        # batch row (the last one) clear of real target batches.
+        points = self.points_budgeted
         return dataclasses.replace(
             self,
-            num_batches=g(self.num_batches, need["num_batches"]),
+            num_targets=(g(self.num_targets, need.get("num_targets", 0))
+                         if points else 0),
+            num_sources=(g(self.num_sources, need.get("num_sources", 0))
+                         if points else 0),
+            num_batches=g(self.num_batches,
+                          need["num_batches"] + (1 if points else 0)),
             batch_width=g(self.batch_width, need["batch_width"]),
             num_leaves=g(self.num_leaves, need["num_leaves"]),
             leaf_width=g(self.leaf_width, need["leaf_width"]),
@@ -790,6 +840,15 @@ def pad_plan(plan: Plan, caps: Capacities) -> Plan:
         raise ValueError(
             "capacities do not fit this plan; call caps.grown_to_fit(plan) "
             "first (the growth is a deliberate, counted retrace)")
+    if caps.points_budgeted and (plan.num_targets > caps.num_targets
+                                 or plan.num_sources > caps.num_sources):
+        # `fits` can't see this: point budgets are grown only through
+        # needs dicts with explicit num_targets/num_sources keys.
+        raise ValueError(
+            f"plan ({plan.num_targets} targets / {plan.num_sources} "
+            f"sources) exceeds the point budget ({caps.num_targets} / "
+            f"{caps.num_sources}); grow via grown_to_fit_need with "
+            f"explicit num_targets/num_sources keys")
     a = {k: np.asarray(v) for k, v in plan.arrays.items()
          if not isinstance(v, tuple)}
     scratch = caps.scratch_node
@@ -824,6 +883,29 @@ def pad_plan(plan: Plan, caps: Capacities) -> Plan:
                        (caps.num_batches, caps.batch_width), False),
         parent_of=_pad2(a["parent_of"], (caps.num_nodes,), scratch),
     )
+
+    if caps.points_budgeted:
+        # Point budget (ensemble/serving): pad the particle axes so plans
+        # over different N share one executable. Padded gather_index
+        # entries all point at the FIRST slot of the scratch batch row —
+        # masked, list-free, so the potentials there are exactly 0 and
+        # the backward scatter never collides with a real target's slot.
+        if a["tgt_batched"].shape[0] >= caps.num_batches:
+            raise ValueError("point-budgeted capacities must keep the "
+                             "scratch batch row free of real batches")
+        nt, ns = plan.num_targets, plan.num_sources
+        scratch_flat = caps.scratch_batch * caps.batch_width
+        out["gather_index"] = np.concatenate([
+            out["gather_index"],
+            np.full(caps.num_targets - nt, scratch_flat, np.int32)])
+        out["src_sorted"] = _pad2(a["src_sorted"], (caps.num_sources,), 0)
+        # Padded permutation entries map padded source slots to padded
+        # charge slots (charges arrive padded to num_sources, zeros
+        # beyond the real particles), keeping the gather in bounds; the
+        # padded rows are never referenced by any -1-masked table.
+        out["src_perm"] = np.concatenate([
+            a["src_perm"],
+            np.arange(ns, caps.num_sources, dtype=np.int32)])
 
     bg_old = plan.arrays["bucket_gather"]
     bn_old = plan.arrays["bucket_nodes"]
@@ -873,6 +955,78 @@ def plan_signature(plan: Plan) -> Tuple:
         (k, tuple(leaf_sig(x) for x in v) if isinstance(v, tuple)
          else leaf_sig(v))
         for k, v in plan.arrays.items()))
+
+
+# ---------------------------------------------------------------------------
+# Ensemble executors: one launch over a leading systems axis
+# ---------------------------------------------------------------------------
+#
+# Plans padded into one (point-budgeted) `Capacities` are shape-identical
+# pytrees, so S of them stack along a leading axis and the whole pipeline
+# vmaps over it: one compiled executable, one device launch, S systems.
+# Per-system charges and kernel-parameter values ride as traced inputs
+# (protocol v2), so replica ensembles, kappa scans and mixed many-small-
+# box workloads all share the executable of their budget. This is the
+# batching contract `repro.serve` builds on.
+
+
+def _ensemble_execute_impl(arrays, charges, params=None, **opts):
+    """Vmapped `_execute_impl`: every `arrays` leaf, `charges`, and every
+    `params` leaf carries a leading systems axis."""
+    return jax.vmap(
+        lambda a, q, p: _execute_impl(a, q, p, **opts))(
+            arrays, charges, params)
+
+
+#: Jitted batched executor: potentials for S stacked systems in one
+#: launch, (S, num_targets_capacity), padded target slots exactly 0.
+ensemble_execute = jax.jit(_ensemble_execute_impl,
+                           static_argnames=_EXEC_OPTS)
+
+#: Same, donating the stacked charge slab (iterative ensemble loops).
+ensemble_execute_donating = jax.jit(_ensemble_execute_impl,
+                                    static_argnames=_EXEC_OPTS,
+                                    donate_argnums=(1,))
+
+
+def _ensemble_pf_impl(arrays, charges, weights, params=None, *, degree,
+                      kernel, space=_FREE, backend="auto", kahan=False,
+                      precompute="direct", approx_r2="diff",
+                      theta=0.7, skin=0.0):
+    opts = (degree, kernel, space, backend, kahan, precompute, approx_r2,
+            theta, skin)
+
+    def one(a, q, w, p):
+        def weighted(t):
+            phi = _phi_from_targets(opts, t, a, q, p)
+            return jnp.sum(phi * w), phi
+
+        (_, phi), wg = jax.value_and_grad(weighted, has_aux=True)(
+            a["tgt_batched"])
+        return phi, -wg.reshape(-1, 3)[a["gather_index"]]
+
+    return jax.vmap(one)(arrays, charges, weights, params)
+
+
+#: Jitted batched (phi, F) for S stacked systems in one launch. Padded
+#: target slots carry zero weights, so their forces are exactly 0 (the
+#: scratch-batch slot their gather entries share has no interaction
+#: lists, hence no dependence on any coordinate).
+ensemble_potential_and_forces = jax.jit(_ensemble_pf_impl,
+                                        static_argnames=_EXEC_OPTS)
+
+
+def ensemble_compile_count() -> int:
+    """Total jit compilations of the ensemble executors (serving's
+    compile/retrace counters difference these)."""
+    total = 0
+    for fn in (ensemble_execute, ensemble_execute_donating,
+               ensemble_potential_and_forces):
+        try:
+            total += fn._cache_size()
+        except Exception:
+            pass
+    return total
 
 
 def add_hierarchical_tables(plan: Plan) -> Plan:

@@ -153,6 +153,10 @@ def refreshed_slacks(approx_idx, approx_skin, bc, bhw, rb, has,
 # batch-cluster evaluation (Eq. 9 / Eq. 11)
 # ---------------------------------------------------------------------------
 
+#: Element budget for the unscanned small-shape XLA path: the full
+#: (B, S, NB, m) pairwise tensor (x3 for displacements) stays ~MBs.
+_FLAT_MAX = 1 << 18
+
 
 @functools.partial(
     jax.jit,
@@ -191,9 +195,32 @@ def batch_cluster_eval(
     if backend != "xla":
         raise ValueError(f"unknown backend {backend!r}")
 
+    # XLA small-shape path: when the full (B, S, NB, m) pairwise
+    # intermediate is modest, one fused masked contraction beats the
+    # scan — the scan's per-iteration bodies are too small to vectorize
+    # and its chunk padding quantizes cost in batch_chunk-row steps.
+    # This is the regime ensemble serving lives in (many small systems,
+    # heavily capacity-padded lists), and it also speeds up small
+    # single-system plans. Kahan accumulation needs the scan's ordered
+    # sums, so it keeps the chunked path.
+    if not kahan and idx.size * tgt.shape[1] * src_pts.shape[1] <= _FLAT_MAX:
+        safe = jnp.maximum(idx, 0)
+        pts = src_pts[safe]                         # (B, S, m, 3)
+        qs = src_q[safe]                            # (B, S, m)
+        pw = (kernel.pairwise_matmul if r2_mode == "matmul"
+              else kernel.pairwise)
+        g = pw(tgt[:, None], pts, params, space)    # (B, S, NB, m)
+        valid = (idx >= 0).astype(tgt.dtype)
+        return jnp.einsum("bsnm,bsm,bs->bn", g, qs, valid)
+
     # XLA path: scan over (batch-chunk, slot) to bound the (bc, NB, m)
-    # pairwise intermediate.
+    # pairwise intermediate. The chunk is rebalanced so padding never
+    # adds a near-empty extra chunk (17 rows at chunk 16 would otherwise
+    # pad to 32 — doubling the kernel work for one row over the
+    # boundary; rebalanced, it runs 2 chunks of 9).
     bsz, nb = tgt.shape[0], tgt.shape[1]
+    nchunk = -(-bsz // batch_chunk)
+    batch_chunk = -(-bsz // nchunk)
     idx_p, _ = _pad_axis(idx, 0, batch_chunk, value=-1)
     tgt_p, _ = _pad_axis(tgt, 0, batch_chunk)
     nchunk = idx_p.shape[0] // batch_chunk

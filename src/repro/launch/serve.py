@@ -1,95 +1,92 @@
-"""Batched serving launcher: prefill + decode loop with greedy sampling.
+"""Treecode serving launcher: batched ensemble evaluation service.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --smoke \
-        --batch 4 --prompt-len 16 --new-tokens 24
+Drives `repro.serve.ServeFrontend` with a stream of synthetic
+mixed-shape requests and prints the service counters — a quick
+end-to-end check that mixed particle counts bucket into few compiled
+executables and warm buckets never recompile:
 
-On TPU the same entry point serves the full config on the production mesh
-(params TP-sharded, KV cache batch-sharded); --smoke runs the reduced
-config end-to-end on the host.
+    PYTHONPATH=src python -m repro.launch.serve --requests 32 \
+        --max-batch 8 --sizes 96,128,180 --kernel yukawa
+
+This entry point replaced the seed repo's LM prefill/decode skeleton;
+the old flags (--arch/--prompt-len/--new-tokens/...) exit with a
+pointer here. For throughput/latency measurement use
+``benchmarks/serve.py`` (writes BENCH_serve.json).
 """
 import argparse
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import ARCH_IDS, get_config, rule_set_for
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models.api import Model
-from repro.models.config import RULE_SETS, make_shardings, shard_ctx_for_mesh
-from repro.models.layers import decl_logical, decl_shapes, materialize
+_REMOVED_FLAGS = ("--arch", "--smoke", "--mesh", "--prompt-len",
+                  "--new-tokens")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b", choices=ARCH_IDS)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default="host",
-                    choices=["host", "single", "multi"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=24)
-    args = ap.parse_args()
+def _reject_removed_flags(argv):
+    hit = [f for f in _REMOVED_FLAGS
+           if any(a == f or a.startswith(f + "=") for a in argv)]
+    if hit:
+        raise SystemExit(
+            f"{' '.join(hit)}: the LM-serving skeleton was removed; this "
+            "entry point now serves the treecode ensemble service "
+            "(see module docstring for flags, benchmarks/serve.py for "
+            "measurement)")
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = Model(cfg)
-    mesh = (make_host_mesh() if args.mesh == "host"
-            else make_production_mesh(multi_pod=args.mesh == "multi"))
-    ctx = shard_ctx_for_mesh(mesh)
-    rules = RULE_SETS[rule_set_for(args.arch)]
-    decls = model.decls()
-    p_shard = make_shardings(decl_logical(decls), decl_shapes(decls),
-                             rules, mesh)
 
-    cache_len = args.prompt_len + args.new_tokens
-    if cfg.family == "vlm":
-        cache_len += cfg.n_patches
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    _reject_removed_flags(argv)
+    ap = argparse.ArgumentParser(
+        description="batched treecode evaluation service (smoke driver)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="number of synthetic requests to submit")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="ensemble width each bucket packs into")
+    ap.add_argument("--sizes", default="96,128,180",
+                    help="comma-separated particle counts to cycle over")
+    ap.add_argument("--kernel", default="coulomb")
+    ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--theta", type=float, default=0.7)
+    ap.add_argument("--leaf-size", type=int, default=32)
+    ap.add_argument("--deadline", type=float, default=0.05,
+                    help="flush deadline in seconds")
+    ap.add_argument("--forces", action="store_true",
+                    help="request forces with every evaluation")
+    args = ap.parse_args(argv)
+
+    from repro.core.api import TreecodeConfig
+    from repro.serve import ServeFrontend
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    cfg = TreecodeConfig(kernel=args.kernel, degree=args.degree,
+                         theta=args.theta, leaf_size=args.leaf_size)
+    fe = ServeFrontend(cfg, max_batch=args.max_batch,
+                       flush_deadline=args.deadline)
 
     rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
-        jnp.int32)}
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.zeros((args.batch, cfg.src_seq, cfg.d_model),
-                                    cfg.adtype)
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.zeros(
-            (args.batch, cfg.n_patches, cfg.vision_dim), cfg.adtype)
+    t0 = time.monotonic()
+    futs = []
+    for i in range(args.requests):
+        n = sizes[i % len(sizes)]
+        futs.append(fe.submit(rng.random((n, 3)), rng.standard_normal(n),
+                              forces=args.forces))
+    fe.flush()                       # drain stragglers
+    for f in futs:
+        f.result()
+    wall = time.monotonic() - t0
 
-    with mesh:
-        params = jax.jit(lambda: materialize(decls, jax.random.key(0)),
-                         out_shardings=p_shard)()
-
-        @jax.jit
-        def prefill(p, b):
-            return model.prefill(p, b, ctx, cache_len=cache_len)
-
-        @jax.jit
-        def decode(p, b):
-            return model.decode(p, b, ctx)
-
-        t0 = time.time()
-        logits, cache = prefill(params, batch)
-        jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
-
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out_tokens = [tok]
-        t0 = time.time()
-        for _ in range(args.new_tokens - 1):
-            logits, cache = decode(params, {"tokens": tok, "cache": cache})
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-
-    gen = np.asarray(jnp.concatenate(out_tokens, axis=1))
-    tput = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)
-    print(f"{cfg.name}: prefill({args.batch}x{args.prompt_len}) "
-          f"{t_prefill*1e3:.0f} ms; decode {args.new_tokens-1} steps "
-          f"{t_decode*1e3:.0f} ms ({tput:.1f} tok/s)")
-    print("generated token ids (first row):", gen[0][:16])
+    s = fe.stats()
+    print(f"served {s['requests']} requests in {wall:.2f} s "
+          f"({s['requests'] / wall:.1f} req/s) across "
+          f"{s['num_buckets']} buckets / {s['flushes']} flushes")
+    print(f"compiles={s['compiles']} retraces={s['retraces']} "
+          f"capacity_grows={s['capacity_grows']} "
+          f"occupancy_mean={s['occupancy_mean']:.2f}")
+    print(f"latency p50={s['latency_p50'] * 1e3:.1f} ms "
+          f"p99={s['latency_p99'] * 1e3:.1f} ms")
+    if s["retraces"]:
+        raise SystemExit("retraces detected: warm buckets recompiled")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,17 @@
+"""Ensemble serving: batched multi-system treecode evaluation.
+
+Two layers (DESIGN.md §8):
+
+- `EnsemblePlan` / `EnsembleMD` (`repro.serve.batched`) — S systems
+  padded into one shared `Capacities` budget, vmapped into one device
+  launch; plan-protocol compatible.
+- `ServeFrontend` (`repro.serve.service`) — request queue that buckets
+  systems by compile shape, packs buckets into fixed-width ensemble
+  plans, flushes on size/deadline, returns futures.
+"""
+from repro.serve.batched import EnsembleMD, EnsemblePlan
+from repro.serve.service import (ServeFrontend, ServeFuture, bucket_key,
+                                 quantize_points)
+
+__all__ = ["EnsemblePlan", "EnsembleMD", "ServeFrontend", "ServeFuture",
+           "bucket_key", "quantize_points"]

@@ -1,0 +1,446 @@
+"""Batched ensemble evaluation: S treecode systems, one device launch.
+
+`EnsemblePlan` vmaps the capacity-padded single-device pipeline over a
+leading systems axis. Every member is padded into ONE shared
+(point-budgeted) `Capacities` budget, so the stacked arrays are a
+shape-identical pytree per member and the whole evaluation compiles
+once per (budget, config-statics) pair — replica ensembles, kernel
+parameter scans, and mixed many-small-box workloads all run in a single
+launch, amortizing dispatch overhead the way GPU tree codes amortize
+kernel-launch overhead by saturating the device with independent work.
+
+    plan = EnsemblePlan.build(config, [x0, x1, x2])     # mixed sizes OK
+    phi = plan.execute([q0, q1, q2])                    # ONE launch
+    phi, F = plan.potential_and_forces([q0, q1, q2])
+    plan.split(phi)                                     # per-system views
+
+Per-system charges and kernel-parameter values are traced inputs
+(protocol v2), so a 5-value kappa scan over one geometry is
+
+    plan = EnsemblePlan.build(cfg, [x] * 5)
+    phi = plan.execute([q] * 5,
+                       kernel_params=[{"kappa": k} for k in kappas])
+
+and compiles exactly once. `EnsembleMD` is the batched-MD hook: replica
+ensembles advance with a device tree refit + force evaluation + kick in
+one launch per step.
+
+The request-level front (shape bucketing, flush policy, futures) lives
+in `repro.serve.service`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eval as _eval
+from repro.core.api import TreecodeConfig, _resolve_dtype
+from repro.core.potentials import Kernel
+from repro.dynamics.integrators import (MDState, get_integrator,
+                                        initial_state)
+from repro.dynamics.refit import refit_single_arrays
+
+
+def _member_need(inner: _eval.Plan) -> dict:
+    """A member's needs dict WITH the explicit point-budget keys (the
+    only way point budgets enter a `Capacities`; see eval.py)."""
+    return dict(_eval._plan_dims(inner),
+                num_targets=inner.num_targets,
+                num_sources=inner.num_sources)
+
+
+def _max_need(needs: Sequence[dict]) -> dict:
+    """Element-wise max over needs dicts (ragged tuples zero-extended),
+    so the initial shared budget fits every member without triggering
+    the geometric-growth overshoot."""
+    out = dict(needs[0])
+    for n in needs[1:]:
+        for k, v in n.items():
+            cur = out[k]
+            if isinstance(v, tuple):
+                d = max(len(cur), len(v))
+                out[k] = tuple(
+                    max(cur[i] if i < len(cur) else 0,
+                        v[i] if i < len(v) else 0) for i in range(d))
+            else:
+                out[k] = max(cur, v)
+    return out
+
+
+def _stack_members(members: Sequence[_eval.Plan], width: int) -> dict:
+    """Stack shape-identical member arrays along a leading systems axis,
+    replicating the last member into the dummy slots (their outputs are
+    sliced away; their charges are zero)."""
+    mems = list(members) + [members[-1]] * (width - len(members))
+    out = {}
+    for k, v in mems[0].arrays.items():
+        if isinstance(v, tuple):
+            out[k] = tuple(jnp.stack([m.arrays[k][i] for m in mems])
+                           for i in range(len(v)))
+        else:
+            out[k] = jnp.stack([m.arrays[k] for m in mems])
+    return out
+
+
+class EnsemblePlan:
+    """Plan-protocol executor over S stacked systems (targets == sources).
+
+    Implements `execute` / `potential_and_forces` / `stats` / `replan`
+    with a leading systems axis: `execute` takes a LIST of per-system
+    charge vectors (or an already stacked/padded ``(width, num_sources)``
+    array) and returns stacked padded potentials ``(width,
+    num_targets)``; `split` trims them back to per-system views.
+    `kernel_params` takes a list (per system), a dict (broadcast), or
+    None (the config defaults).
+
+    All members must share the config's statics — kernel, space, theta,
+    degree, leaf/batch size, backend, precompute, dtype — which is
+    exactly the serving bucket key (`repro.serve.service`). Mixed
+    particle counts are fine: the shared budget point-pads them.
+
+    `ensemble_width` fixes the stacked width independently of the
+    number of real systems (dummy slots repeat the last member with
+    zero charges), so a serving bucket keeps ONE executable across
+    flushes of varying occupancy.
+    """
+
+    nranks = 1
+    strategy = "ensemble"
+
+    def __init__(self, config: TreecodeConfig, kernel: Kernel,
+                 members: List[_eval.Plan], capacities: _eval.Capacities,
+                 dtype: np.dtype, ensemble_width: int,
+                 positions: Optional[List[np.ndarray]] = None):
+        self.config = config
+        self.kernel = kernel
+        self.members = members
+        self.capacities = capacities
+        self.dtype = dtype
+        self.ensemble_width = ensemble_width
+        self.positions = positions
+        self.sizes = tuple(m.num_targets for m in members)
+        self.arrays = _stack_members(members, ensemble_width)
+        # Default kernel parameters, lifted and broadcast over the width.
+        self.kernel_params = jax.tree.map(
+            lambda v: jnp.broadcast_to(
+                jnp.asarray(v, dtype=dtype),
+                (ensemble_width,) + np.shape(v)),
+            kernel.params)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(cls, config: TreecodeConfig, systems: Sequence,
+              *, capacities: Optional[_eval.Capacities] = None,
+              ensemble_width: Optional[int] = None,
+              kernel: Optional[Kernel] = None,
+              headroom: float = 1.0) -> "EnsemblePlan":
+        """Build an ensemble plan over `systems` (a sequence of (N_i, 3)
+        position arrays, each its own targets == sources geometry).
+
+        `capacities` seeds the shared budget (a serving bucket passes its
+        sticky budget here so warm flushes stay shape-identical); None
+        budgets this build's own needs. Either way the budget is grown
+        to fit every member (geometric growth — a deliberate, counted
+        recompile when it changes a sticky budget). Budgets without
+        point budgets get them enabled at the members' max counts.
+
+        Fresh ensemble budgets are TIGHT (headroom 1.0, no round-up) —
+        padded slots cost memory traffic multiplied by the ensemble
+        width, and serving reuse needs budget equality, not slack
+        (re-submission of same-shaped systems hits the same budget;
+        bigger systems grow it geometrically, a counted recompile).
+        Pass ``headroom > 1`` for MD-style drift slack instead.
+        """
+        systems = [np.asarray(s) for s in systems]
+        if not systems:
+            raise ValueError("EnsemblePlan.build needs at least one system")
+        if ensemble_width is not None and ensemble_width < len(systems):
+            raise ValueError(
+                f"ensemble_width={ensemble_width} < {len(systems)} systems")
+        kernel = config.make_kernel() if kernel is None else kernel
+        dtype = _resolve_dtype(config, systems[0])
+
+        inners = []
+        for pts in systems:
+            if pts.ndim != 2 or pts.shape[1] != 3:
+                raise ValueError(
+                    f"each system must be (N, 3) positions, got {pts.shape}")
+            inner = _eval.prepare_plan(
+                pts.astype(dtype, copy=False), pts.astype(dtype, copy=False),
+                theta=config.theta, degree=config.degree,
+                leaf_size=config.leaf_size,
+                batch_size=config.resolved_batch_size(),
+                space=config.space, skin=config.skin)
+            if config.precompute == "hierarchical":
+                inner = _eval.add_hierarchical_tables(inner)
+            inners.append(inner)
+
+        needs = [_member_need(i) for i in inners]
+        if capacities is None:
+            caps = _eval.Capacities.for_need(_max_need(needs),
+                                             headroom=headroom, base=1)
+        else:
+            caps = capacities
+            if not caps.points_budgeted:
+                caps = dataclasses.replace(
+                    caps,
+                    num_targets=max(n["num_targets"] for n in needs),
+                    num_sources=max(n["num_sources"] for n in needs))
+        for n in needs:
+            caps = caps.grown_to_fit_need(n)
+
+        members = [_eval.pad_plan(i, caps) for i in inners]
+        width = ensemble_width if ensemble_width else len(members)
+        return cls(config, kernel, members, caps, dtype, width,
+                   positions=[s.astype(dtype, copy=False) for s in systems])
+
+    # ------------------------------------------------------------------
+    # inputs: charges / weights / params with a systems axis
+    # ------------------------------------------------------------------
+
+    @property
+    def num_systems(self) -> int:
+        return len(self.members)
+
+    @property
+    def occupancy(self) -> float:
+        return self.num_systems / self.ensemble_width
+
+    @property
+    def num_targets(self) -> int:
+        """Padded per-system target count (the point budget)."""
+        return self.capacities.num_targets
+
+    @property
+    def num_sources(self) -> int:
+        return self.capacities.num_sources
+
+    @property
+    def space(self):
+        return self.config.space
+
+    def signature(self) -> Tuple:
+        """Shape/dtype signature of the stacked arrays: equal signatures
+        reuse one compiled ensemble executable (the warm-bucket test)."""
+        return _eval.plan_signature(self)
+
+    def _charges(self, charges) -> jnp.ndarray:
+        """(width, num_sources) stacked charge slab from a per-system
+        list (padded with zeros; dummy slots all-zero) or a pre-stacked
+        array."""
+        if isinstance(charges, (list, tuple)):
+            if len(charges) != self.num_systems:
+                raise ValueError(
+                    f"expected {self.num_systems} charge vectors, "
+                    f"got {len(charges)}")
+            ns = self.capacities.num_sources
+            slab = np.zeros((self.ensemble_width, ns), self.dtype)
+            for i, (q, n) in enumerate(zip(charges, self.sizes)):
+                q = np.asarray(q, self.dtype)
+                if q.shape != (n,):
+                    raise ValueError(
+                        f"system {i} has {n} particles, charges {q.shape}")
+                slab[i, :n] = q
+            return jnp.asarray(slab)
+        q = jnp.asarray(charges)
+        expect = (self.ensemble_width, self.capacities.num_sources)
+        if q.shape != expect:
+            raise ValueError(
+                f"stacked charges must be {expect}, got {q.shape}")
+        return q.astype(self.dtype) if q.dtype != self.dtype else q
+
+    def _params(self, kernel_params):
+        """Per-call kernel parameters with a systems axis. A LIST gives
+        per-system values (normalized through the kernel, padded by
+        repeating the last entry); a dict or raw pytree broadcasts; None
+        uses the config defaults."""
+        if kernel_params is None:
+            return self.kernel_params
+        if isinstance(kernel_params, list):
+            if len(kernel_params) != self.num_systems:
+                raise ValueError(
+                    f"expected {self.num_systems} kernel_params entries, "
+                    f"got {len(kernel_params)}")
+            norm = [self.kernel.normalize_params(p) for p in kernel_params]
+            norm += [norm[-1]] * (self.ensemble_width - len(norm))
+            return jax.tree.map(
+                lambda *vs: jnp.stack(
+                    [jnp.asarray(v, dtype=self.dtype) for v in vs]), *norm)
+        p = self.kernel.normalize_params(kernel_params)
+        return jax.tree.map(
+            lambda v: jnp.broadcast_to(
+                jnp.asarray(v, dtype=self.dtype),
+                (self.ensemble_width,) + np.shape(v)), p)
+
+    def split(self, stacked) -> List[jnp.ndarray]:
+        """Trim a stacked output — phi (width, nt) or forces
+        (width, nt, 3) — back to per-system views (dummy slots dropped)."""
+        return [stacked[i, :n] for i, n in enumerate(self.sizes)]
+
+    # ------------------------------------------------------------------
+    # plan protocol
+    # ------------------------------------------------------------------
+
+    def execute(self, charges, kernel_params=None) -> jnp.ndarray:
+        """Stacked potentials (width, num_targets), ONE device launch.
+
+        Padded target slots are exactly 0; `split` recovers per-system
+        input-order potentials."""
+        fn = (_eval.ensemble_execute_donating if self.config.donate_charges
+              else _eval.ensemble_execute)
+        return fn(self.arrays, self._charges(charges),
+                  self._params(kernel_params),
+                  **self.config.exec_opts(self.kernel))
+
+    def potential_and_forces(self, charges, weights=None,
+                             kernel_params=None):
+        """Stacked (phi, F): (width, nt) and (width, nt, 3), one launch.
+
+        `weights` defaults to the charges (targets == sources: the
+        physical force on charge q_i). Padded slots carry zero weights,
+        so their forces are exactly 0."""
+        q = self._charges(charges)
+        w = q if weights is None else self._charges(weights)
+        return _eval.ensemble_potential_and_forces(
+            self.arrays, q, w, self._params(kernel_params),
+            **self.config.exec_opts(self.kernel))
+
+    def stats(self) -> dict:
+        """Ensemble geometry/budget counters (plan-protocol surface)."""
+        return dict(
+            strategy="ensemble",
+            nranks=1,
+            num_systems=self.num_systems,
+            ensemble_width=self.ensemble_width,
+            occupancy=self.occupancy,
+            sizes=self.sizes,
+            num_targets=self.capacities.num_targets,
+            num_sources=self.capacities.num_sources,
+            padding_waste=float(np.mean(
+                [m.padding_waste for m in self.members])),
+            dtype=str(self.dtype),
+            space=repr(self.config.space),
+            theta_slack=float(min(m.theta_slack for m in self.members)),
+            fold_slack=float(min(m.fold_slack for m in self.members)),
+            skin=float(self.config.skin),
+            capacity_padded=True,
+            capacities=dataclasses.asdict(self.capacities),
+        )
+
+    def replan(self, systems, sources=None, *,
+               capacities="keep") -> "EnsemblePlan":
+        """Rebuild every member for moved/replaced systems under the
+        same config. `capacities="keep"` (default) re-pads into this
+        plan's budget — growing it geometrically on overflow, which is
+        the counted-recompile path — and keeps the ensemble width (grown
+        to fit if more systems arrive)."""
+        if sources is not None:
+            raise ValueError("ensemble plans require targets == sources")
+        if capacities == "keep":
+            capacities = self.capacities
+        width = max(self.ensemble_width, len(systems))
+        return EnsemblePlan.build(self.config, systems,
+                                  capacities=capacities,
+                                  ensemble_width=width, kernel=self.kernel)
+
+
+class EnsembleMD:
+    """Batched-MD hook: a replica ensemble steps in ONE device launch.
+
+    Minimal by design — the full refit-vs-rebuild engine lives in
+    `repro.dynamics.Simulation`; this hook covers the serving-adjacent
+    replica case (many independent systems, shared budget) where every
+    step is a device tree REFIT (topology frozen between `replan` calls,
+    exactly a `Simulation` with ``rebuild="never"``). One jitted step:
+    integrator pre → vmapped device refit → batched forces → post.
+
+        md = EnsembleMD(plan, charges, dt=1e-3)
+        md.run(100)                     # 100 launches, S systems each
+        xs = md.split_positions()       # per-system trajectories
+    """
+
+    def __init__(self, plan: EnsemblePlan, charges, *, dt: float,
+                 velocities=None, masses=1.0,
+                 integrator="velocity_verlet",
+                 integrator_params: Optional[dict] = None, seed: int = 0):
+        self.plan = plan
+        self.dt = float(dt)
+        self.integrator = get_integrator(integrator,
+                                         **(integrator_params or {}))
+        self.charges = plan._charges(charges)    # (W, ns) zero-padded
+        m = jnp.asarray(masses, plan.dtype)
+        inv_m = 1.0 / m
+        self._inv_m = inv_m[:, None] if inv_m.ndim == 1 else inv_m
+        self.steps = 0
+
+        # Stacked state: per-system rows padded with zeros (padded rows
+        # see zero forces — their gather slots carry no interaction
+        # lists — so they stay exactly at rest).
+        if plan.positions is None:
+            raise ValueError("EnsembleMD needs a plan built via "
+                             "EnsemblePlan.build (positions retained)")
+        if plan.capacities.num_targets != plan.capacities.num_sources:
+            # refit treats state.x as both the scatter source for
+            # tgt_batched and the gather source for src_sorted
+            raise ValueError("batched MD needs num_targets == num_sources "
+                             "in the point budget")
+        nt = plan.capacities.num_targets
+        xs = np.zeros((plan.ensemble_width, nt, 3), plan.dtype)
+        vs = np.zeros_like(xs)
+        for i, n in enumerate(plan.sizes):
+            xs[i, :n] = plan.positions[i]
+            if velocities is not None:
+                vs[i, :n] = np.asarray(velocities[i], plan.dtype)
+        states = [initial_state(xs[i], vs[i], seed=seed + i,
+                                dtype=plan.dtype)
+                  for i in range(plan.ensemble_width)]
+        self.state: MDState = jax.tree.map(
+            lambda *leaves: jnp.stack(leaves), *states)
+        self.arrays = plan.arrays
+
+        integ, dt_, inv_m_ = self.integrator, self.dt, self._inv_m
+        opts = plan.config.exec_opts(plan.kernel)
+        params = plan.kernel_params
+        q = self.charges
+
+        def step(arrays, state):
+            s1 = jax.vmap(lambda s: integ.pre(s, dt_, inv_m_))(state)
+            arrays = jax.vmap(refit_single_arrays)(arrays, s1.x)
+            phi, f = _eval._ensemble_pf_impl(arrays, q, q, params, **opts)
+            s2 = jax.vmap(
+                lambda s, p, g: integ.post(s, p, g, dt_, inv_m_))(
+                    s1, phi, f)
+            return arrays, s2
+
+        def init_forces(arrays, state):
+            arrays = jax.vmap(refit_single_arrays)(arrays, state.x)
+            phi, f = _eval._ensemble_pf_impl(arrays, q, q, params, **opts)
+            return arrays, state._replace(phi=phi, f=f)
+
+        self._step = jax.jit(step)
+        self.arrays, self.state = jax.jit(init_forces)(self.arrays,
+                                                       self.state)
+
+    def step(self) -> MDState:
+        """One batched integration step (one launch, S force sums)."""
+        self.arrays, self.state = self._step(self.arrays, self.state)
+        self.steps += 1
+        return self.state
+
+    def run(self, steps: int) -> "EnsembleMD":
+        for _ in range(steps):
+            self.step()
+        return self
+
+    def split_positions(self) -> List[jnp.ndarray]:
+        return self.plan.split(self.state.x)
+
+    def split_velocities(self) -> List[jnp.ndarray]:
+        return self.plan.split(self.state.v)

@@ -1,0 +1,304 @@
+"""Ensemble serving subsystem: batched-vs-loop equivalence, capacity
+growth, compile-count invariants, and the request service."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import eval as _eval  # noqa: E402
+from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
+from repro.core.space import PeriodicBox  # noqa: E402
+from repro.serve import (EnsembleMD, EnsemblePlan, ServeFrontend,  # noqa: E402
+                         bucket_key, quantize_points)
+
+CFG = TreecodeConfig(degree=3, leaf_size=16, theta=0.7, backend="xla")
+
+
+def _systems(rng, sizes, box=None):
+    xs = [np.asarray(rng.random((n, 3)), np.float64) for n in sizes]
+    if box is not None:
+        xs = [x * box for x in xs]
+    qs = [rng.standard_normal(n) for n in sizes]
+    return xs, qs
+
+
+def _loop_reference(cfg, xs, qs, kps=None, forces=False):
+    solver = TreecodeSolver(cfg)
+    out = []
+    for i, (x, q) in enumerate(zip(xs, qs)):
+        plan = solver.plan(x)
+        kp = None if kps is None else kps[i]
+        if forces:
+            out.append(plan.potential_and_forces(q, kernel_params=kp))
+        else:
+            out.append(plan.execute(q, kernel_params=kp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-loop equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_matches_loop_free_space(rng, x64):
+    xs, qs = _systems(rng, [40, 64, 52])
+    plan = EnsemblePlan.build(CFG, xs)
+    phi = plan.execute(qs)
+    for got, ref in zip(plan.split(phi), _loop_reference(CFG, xs, qs)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0, atol=1e-13)
+
+
+def test_ensemble_matches_loop_periodic(rng, x64):
+    cfg = dataclasses.replace(CFG, space=PeriodicBox((2.0, 2.0, 2.0)))
+    xs, qs = _systems(rng, [36, 48], box=2.0)
+    plan = EnsemblePlan.build(cfg, xs)
+    phi = plan.execute(qs)
+    for got, ref in zip(plan.split(phi), _loop_reference(cfg, xs, qs)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0, atol=1e-13)
+
+
+def test_ensemble_forces_match_loop(rng, x64):
+    xs, qs = _systems(rng, [32, 56, 44])
+    plan = EnsemblePlan.build(CFG, xs)
+    phi, F = plan.potential_and_forces(qs)
+    refs = _loop_reference(CFG, xs, qs, forces=True)
+    for i, (rp, rf) in enumerate(refs):
+        n = len(qs[i])
+        np.testing.assert_allclose(np.asarray(phi[i, :n]), np.asarray(rp),
+                                   rtol=0, atol=1e-13)
+        np.testing.assert_allclose(np.asarray(F[i, :n]), np.asarray(rf),
+                                   rtol=0, atol=1e-12)
+
+
+def test_padded_force_rows_are_zero(rng, x64):
+    xs, qs = _systems(rng, [24, 48])
+    plan = EnsemblePlan.build(CFG, xs)
+    _, F = plan.potential_and_forces(qs)
+    # member 0 occupies 24 of num_targets rows: the rest carry zero
+    # weights and no interaction lists, so their forces are exactly 0
+    pad = np.asarray(F[0, 24:])
+    assert pad.size > 0
+    np.testing.assert_array_equal(pad, 0.0)
+
+
+def test_per_system_kernel_params_one_compile(rng, x64):
+    cfg = dataclasses.replace(CFG, kernel="yukawa")
+    xs, qs = _systems(rng, [40] * 5)
+    plan = EnsemblePlan.build(cfg, [xs[0]] * 5)
+    kps = [{"kappa": k} for k in (0.1, 0.3, 0.5, 0.7, 1.0)]
+    before = _eval.ensemble_compile_count()
+    phi = plan.execute([qs[0]] * 5, kernel_params=kps)
+    phi.block_until_ready()
+    assert _eval.ensemble_compile_count() - before == 1
+    refs = _loop_reference(cfg, [xs[0]] * 5, [qs[0]] * 5, kps=kps)
+    for got, ref in zip(plan.split(phi), refs):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0, atol=1e-13)
+
+
+def test_capacity_growth_on_oversized_member(rng, x64):
+    xs, qs = _systems(rng, [24, 28])
+    plan = EnsemblePlan.build(CFG, xs)
+    caps = plan.capacities
+    # one member overflows the shared point budget -> budget grows,
+    # results stay correct
+    xs2, qs2 = _systems(rng, [24, caps.num_targets + 40])
+    plan2 = plan.replan(xs2)
+    assert plan2.capacities.num_targets > caps.num_targets
+    phi = plan2.execute(qs2)
+    for got, ref in zip(plan2.split(phi), _loop_reference(CFG, xs2, qs2)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0, atol=1e-13)
+
+
+def test_ensemble_stats_surface(rng, x64):
+    xs, qs = _systems(rng, [30, 50])
+    plan = EnsemblePlan.build(CFG, xs, ensemble_width=4)
+    s = plan.stats()
+    assert s["strategy"] == "ensemble"
+    assert s["num_systems"] == 2 and s["ensemble_width"] == 4
+    assert s["occupancy"] == 0.5
+    assert s["capacity_padded"] and s["capacities"]["num_targets"] >= 50
+    # dummy slots ride along with zero charges, results unchanged
+    phi = plan.execute(qs)
+    for got, ref in zip(plan.split(phi), _loop_reference(CFG, xs, qs)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=0, atol=1e-13)
+
+
+# ---------------------------------------------------------------------------
+# batched MD hook
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_md_matches_simulations(rng, x64):
+    from repro.dynamics.engine import Simulation
+    sizes = [40, 40, 40]
+    xs, qs = _systems(rng, sizes)
+    qs = [q * 0.1 for q in qs]
+    plan = EnsemblePlan.build(CFG, xs)
+    md = EnsembleMD(plan, qs, dt=1e-3, seed=11)
+    md.run(5)
+    solver = TreecodeSolver(CFG)
+    for i, (x, q) in enumerate(zip(xs, qs)):
+        sim = Simulation(solver.plan(x, capacities="auto"), q, dt=1e-3,
+                         seed=11 + i, rebuild="never")
+        sim.run(5)
+        np.testing.assert_allclose(
+            np.asarray(md.split_positions()[i]), np.asarray(sim.state.x),
+            rtol=0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# capacities: point budgets
+# ---------------------------------------------------------------------------
+
+
+def test_point_budgets_opt_in(rng, x64):
+    xs, _ = _systems(rng, [40])
+    inner = _eval.prepare_plan(xs[0], xs[0], theta=0.7, degree=3,
+                               leaf_size=16, batch_size=16)
+    # _plan_dims alone never enables point budgets (the MD path)
+    caps_md = _eval.Capacities.for_need(_eval._plan_dims(inner))
+    assert not caps_md.points_budgeted
+    need = dict(_eval._plan_dims(inner), num_targets=inner.num_targets,
+                num_sources=inner.num_sources)
+    caps = _eval.Capacities.for_need(need)
+    assert caps.points_budgeted
+    assert caps.num_targets >= inner.num_targets
+    padded = _eval.pad_plan(inner, caps)
+    assert padded.arrays["gather_index"].shape == (caps.num_targets,)
+    # padded gather entries all hit the scratch batch row
+    extra = np.asarray(padded.arrays["gather_index"][inner.num_targets:])
+    assert (extra == caps.scratch_batch * caps.batch_width).all()
+
+
+def test_pad_plan_rejects_point_overflow(rng, x64):
+    xs, _ = _systems(rng, [24])
+    inner = _eval.prepare_plan(xs[0], xs[0], theta=0.7, degree=3,
+                               leaf_size=16, batch_size=16)
+    need = dict(_eval._plan_dims(inner), num_targets=24, num_sources=24)
+    caps = _eval.Capacities.for_need(need, base=1)
+    big, _ = _systems(rng, [64])
+    inner_big = _eval.prepare_plan(big[0], big[0], theta=0.7, degree=3,
+                                   leaf_size=16, batch_size=16)
+    with pytest.raises(ValueError, match="point budget"):
+        _eval.pad_plan(inner_big, caps.grown_to_fit(inner_big))
+
+
+# ---------------------------------------------------------------------------
+# service
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_and_bucket_key():
+    assert quantize_points(1) == 64
+    assert quantize_points(64) == 64
+    assert quantize_points(65) == 128
+    assert quantize_points(700) == 1024
+    cfg_a = dataclasses.replace(CFG, kernel="yukawa",
+                                kernel_params={"kappa": 0.3})
+    cfg_b = dataclasses.replace(CFG, kernel="yukawa",
+                                kernel_params={"kappa": 0.9})
+    # kernel parameter VALUES are traced: same bucket
+    assert bucket_key(cfg_a, 50) == bucket_key(cfg_b, 60)
+    # different statics or size class: different buckets
+    assert bucket_key(cfg_a, 50) != bucket_key(cfg_a, 100)
+    assert bucket_key(CFG, 50) != bucket_key(cfg_a, 50)
+
+
+def test_service_results_match_direct_eval(rng, x64):
+    fe = ServeFrontend(CFG, max_batch=4)
+    xs, qs = _systems(rng, [20, 36, 28])
+    futs = [fe.submit(x, q) for x, q in zip(xs, qs)]
+    fe.flush()
+    for f, (x, q) in zip(futs, zip(xs, qs)):
+        ref = TreecodeSolver(CFG).plan(x).execute(q)
+        np.testing.assert_allclose(f.result(), np.asarray(ref),
+                                   rtol=0, atol=1e-13)
+
+
+def test_warm_bucket_zero_compiles(rng, x64):
+    fe = ServeFrontend(CFG, max_batch=4)
+    xs, qs = _systems(rng, [24, 32, 40, 16])
+    futs = [fe.submit(x, q) for x, q in zip(xs, qs)]   # fills -> flush
+    assert all(f.done() for f in futs)
+    s1 = fe.stats()
+    assert s1["flushes"] == 1 and s1["num_buckets"] == 1
+    assert s1["compiles"] <= s1["num_buckets"]
+    # re-submit the SAME systems: zero compiles, zero retraces
+    futs = [fe.submit(x, q) for x, q in zip(xs, qs)]
+    assert all(f.done() for f in futs)
+    s2 = fe.stats()
+    assert s2["compiles"] == s1["compiles"]
+    assert s2["retraces"] == 0
+    assert s2["occupancy_mean"] == 1.0
+
+
+def test_deadline_flush_with_injected_clock(rng, x64):
+    t = [0.0]
+    fe = ServeFrontend(CFG, max_batch=8, flush_deadline=0.5,
+                       clock=lambda: t[0])
+    xs, qs = _systems(rng, [20])
+    fut = fe.submit(xs[0], qs[0])
+    assert fe.poll() == 0 and not fut.done()        # deadline not reached
+    t[0] = 0.49
+    assert fe.poll() == 0 and not fut.done()
+    t[0] = 0.51
+    assert fe.poll() == 1 and fut.done()            # deadline flush
+    assert fe.stats()["queue_depth"] == 0
+
+
+def test_future_result_forces_flush(rng, x64):
+    fe = ServeFrontend(CFG, max_batch=8)
+    xs, qs = _systems(rng, [20])
+    fut = fe.submit(xs[0], qs[0])
+    assert not fut.done()                           # batch not full
+    phi = fut.result()                              # forces its bucket
+    assert fut.done() and phi.shape == (20,)
+
+
+def test_mixed_forces_batch(rng, x64):
+    fe = ServeFrontend(CFG, max_batch=2)
+    xs, qs = _systems(rng, [20, 30])
+    f1 = fe.submit(xs[0], qs[0], forces=True)
+    f2 = fe.submit(xs[1], qs[1])                    # auto-flush at 2
+    phi1, F1 = f1.result()
+    phi2 = f2.result()
+    plan = TreecodeSolver(CFG).plan(xs[0])
+    rp, rf = plan.potential_and_forces(qs[0])
+    np.testing.assert_allclose(phi1, np.asarray(rp), rtol=0, atol=1e-13)
+    np.testing.assert_allclose(F1, np.asarray(rf), rtol=0, atol=1e-12)
+    assert phi2.shape == (30,)
+
+
+def test_service_latency_and_stats_counters(rng, x64):
+    t = [0.0]
+    fe = ServeFrontend(CFG, max_batch=2, clock=lambda: t[0])
+    xs, qs = _systems(rng, [20, 24])
+    fe.submit(xs[0], qs[0])
+    t[0] = 0.25
+    fe.submit(xs[1], qs[1])                         # flush at t=0.25
+    s = fe.stats()
+    assert s["requests"] == 2 and s["flushes"] == 1
+    assert s["latency_p99"] >= s["latency_p50"] >= 0.0
+    assert 0.0 < s["occupancy_mean"] <= 1.0
+    assert s["strategy"] == "serve"
+    (bstats,) = s["buckets"].values()
+    assert bstats["requests"] == 2 and bstats["flushes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# launch CLI
+# ---------------------------------------------------------------------------
+
+
+def test_launch_serve_rejects_removed_lm_flags():
+    from repro.launch.serve import main
+    with pytest.raises(SystemExit, match="LM-serving skeleton"):
+        main(["--arch", "gemma-7b", "--smoke"])
