@@ -10,16 +10,21 @@ Runs the same trajectory twice from identical initial conditions:
   - "rebuild": `Simulation(rebuild="always")` — a host tree build +
     re-pad every step, the behaviour of the pre-dynamics example loop.
 
-Emits BENCH_md_step.json with ms/step for both modes, a per-step
-timeline of the refit run classifying each step (refit vs rebuild) and
-the median rebuild/refit step-time ratio, refit/rebuild/retrace
-counters, energy drift, the relative trajectory deviation between the
-two modes, and the end-of-run force error of BOTH modes against the
-float64 direct-sum oracle (the identical-accuracy acceptance check).
+Emits BENCH_md_step.json (the `repro.bench/1` BenchReport schema:
+config / metrics / phases / counters) with ms/step for both modes, a
+per-step timeline of the refit run classifying each step (refit vs
+rebuild) and the median rebuild/refit step-time ratio,
+refit/rebuild/retrace counters, energy drift, the relative trajectory
+deviation between the two modes, and the end-of-run force error of BOTH
+modes against the float64 direct-sum oracle (the identical-accuracy
+acceptance check). With ``--trace PATH`` the phase-span tracer
+(`repro.obs`) is enabled: the report's ``phases`` carry the
+advance/finish/rebuild breakdown of the refit run's steady loop and a
+Chrome-trace file is written to PATH.
 
     PYTHONPATH=src python benchmarks/md_step.py \
         [--n 1500] [--steps 200] [--skin 0.05] [--refit-interval 100] \
-        [--max-rebuilds N] [--check]
+        [--max-rebuilds N] [--trace PATH] [--check]
 
 `--check` asserts the smoke thresholds (used by CI): >= 1 refit without
 a rebuild, energy drift below --drift-tol, trajectory deviation below
@@ -27,10 +32,11 @@ a rebuild, energy drift below --drift-tol, trajectory deviation below
 refit ms/step < rebuild ms/step, refit-mode force error within
 --force-factor of the rebuild-every-step mode's against the f64 oracle,
 and — when --max-rebuilds is given — the rebuild-count regression gate
-(must not exceed the seed trajectory's count).
+(must not exceed the seed trajectory's count). With --trace it also
+asserts the attribution-honesty gate: phases sum to >= 90% of the
+steady-loop wall time.
 """
 import argparse
-import json
 import os
 import sys
 import time
@@ -39,22 +45,12 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import obs  # noqa: E402
 from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
 from repro.core.direct import direct_oracle_f64  # noqa: E402
 from repro.dynamics import Simulation  # noqa: E402
 
-
-def json_safe(obj):
-    """Replace non-finite floats (inf fold_slack in free space, NaN
-    ratios) with None: json.dump would emit Infinity/NaN tokens that
-    strict RFC-8259 parsers reject."""
-    if isinstance(obj, dict):
-        return {k: json_safe(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [json_safe(v) for v in obj]
-    if isinstance(obj, float) and not np.isfinite(obj):
-        return None
-    return obj
+json_safe = obs.json_safe  # non-finite floats -> None (RFC-8259)
 
 
 def build_sim(x, q, args, rebuild):
@@ -70,6 +66,8 @@ def run_mode(x, q, args, rebuild):
     sim = build_sim(x, q, args, rebuild)
     sim.log.record(0, sim.diagnostics())  # E(0) baseline for drift()
     sim.step()                       # compile + first step (excluded)
+    if obs.enabled():
+        obs.clear()  # phases describe the steady loop only
     record = max(1, args.steps // 20)
     timeline = []
     t0 = time.time()
@@ -90,6 +88,9 @@ def run_mode(x, q, args, rebuild):
     # token that strict JSON parsers reject.
     ratio = (float(np.median(rebuild_ms)) / float(np.median(refit_ms))
              if refit_ms and rebuild_ms else None)
+    phases = {k.split(".", 1)[1]: v
+              for k, v in obs.phase_totals("md.").items()} \
+        if obs.enabled() else {}
     s = sim.stats()
 
     # End-of-run force accuracy vs the f64 direct-sum oracle (host-side
@@ -119,7 +120,9 @@ def run_mode(x, q, args, rebuild):
         drift_budget=s["drift_budget"],
         last_drift=s["last_drift"],
         force_error_f64=force_err,
+        compiles=s["compiles"],
         timeline=timeline,
+        phases=phases,
     )
 
 
@@ -152,13 +155,25 @@ def main(argv=None):
     ap.add_argument("--max-rebuilds", type=int, default=0,
                     help="regression gate: refit-mode rebuilds must not "
                     "exceed this (0 = skip; CI passes the seed count)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable phase-span tracing; writes a "
+                    "Chrome-trace JSON here and fills the report's "
+                    "phases breakdown")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
 
     rng = np.random.default_rng(0)
     x = rng.uniform(-1, 1, (args.n, 3)).astype(np.float32)
     q = (rng.uniform(-1, 1, args.n) * 0.05).astype(np.float32)
 
     sim_r, refit = run_mode(x, q, args, "auto")
+    if args.trace:
+        # Written now: each run_mode clears the span buffer, so this
+        # trace is exactly the refit run's steady loop.
+        obs.write_chrome_trace(args.trace, process_name="repro.md_step")
+        print(f"wrote {args.trace}")
     sim_b, rebuild = run_mode(x, q, args, "always")
 
     xr, xb = np.asarray(sim_r.state.x), np.asarray(sim_b.state.x)
@@ -166,18 +181,27 @@ def main(argv=None):
                      / max(np.max(np.linalg.norm(xb, axis=1)), 1e-30))
     speedup = rebuild["ms_per_step"] / max(refit["ms_per_step"], 1e-30)
 
-    result = dict(
-        bench="md_step",
-        n=args.n, steps=args.steps, dt=args.dt,
-        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
-        skin=args.skin,
-        integrator=args.integrator, refit_interval=args.refit_interval,
-        refit=refit, rebuild=rebuild,
-        rebuild_over_refit=refit["rebuild_over_refit"],
-        speedup=speedup, trajectory_deviation=traj_dev,
-    )
-    with open(args.out, "w") as f:
-        json.dump(json_safe(result), f, indent=2)
+    refit_phases = refit.pop("phases")
+    rebuild.pop("phases")
+    report = obs.bench_report(
+        "md_step",
+        config=dict(
+            n=args.n, steps=args.steps, dt=args.dt,
+            theta=args.theta, degree=args.degree,
+            leaf_size=args.leaf_size, skin=args.skin,
+            integrator=args.integrator,
+            refit_interval=args.refit_interval,
+            traced=bool(args.trace)),
+        metrics=dict(
+            refit=refit, rebuild=rebuild,
+            rebuild_over_refit=refit["rebuild_over_refit"],
+            speedup=speedup, trajectory_deviation=traj_dev),
+        # phases: the refit run's steady loop (ms over steady_seconds)
+        phases=refit_phases,
+        counters=dict(
+            compiles=refit["compiles"], retraces=refit["retraces"],
+            refits=refit["refits"], rebuilds=refit["rebuilds"]))
+    obs.write_report(args.out, report)
 
     print(f"refit:   {refit['ms_per_step']:8.1f} ms/step  "
           f"rebuilds {refit['rebuilds']}  refits {refit['refits']}  "
@@ -194,6 +218,7 @@ def main(argv=None):
     print(f"wrote {args.out}")
 
     if args.check:
+        obs.validate_report(report)  # shared schema gate (repro.bench/1)
         k = args.refit_interval
         f_gate = (refit["force_error_f64"]
                   <= args.force_factor * rebuild["force_error_f64"] + 1e-6)
@@ -214,6 +239,11 @@ def main(argv=None):
         if args.max_rebuilds:
             checks[f"rebuilds <= seed count {args.max_rebuilds}"] = \
                 refit["rebuilds"] <= args.max_rebuilds
+        if args.trace:
+            cov = obs.phase_coverage(report,
+                                     refit["steady_seconds"] * 1e3)
+            checks[f"phase coverage {cov:.0%} >= 90% of steady wall"] = \
+                cov >= 0.9
         failed = [name for name, ok in checks.items() if not ok]
         for name, ok in checks.items():
             print(f"  [{'ok' if ok else 'FAIL'}] {name}")

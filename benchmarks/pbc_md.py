@@ -6,12 +6,16 @@ kernels, traced kernel parameters, and wrap-at-rebuild dynamics — on the
 classic molten-salt configuration: a perturbed cubic lattice of
 alternating +/- charges under a screened Coulomb (Yukawa) interaction.
 
-Emits BENCH_pbc_md.json with ms/step, refit/rebuild/retrace counters,
-energy and momentum drift, and the relative deviation against a
-rebuild-every-step run of the same trajectory.
+Emits BENCH_pbc_md.json (the `repro.bench/1` BenchReport schema:
+config / metrics / phases / counters) with ms/step, refit/rebuild/
+retrace counters, energy and momentum drift, and the relative deviation
+against a rebuild-every-step run of the same trajectory. With
+``--trace PATH`` the phase-span tracer (`repro.obs`) is enabled: the
+report's ``phases`` carry the refit run's steady-loop breakdown and a
+Chrome-trace file is written to PATH.
 
     PYTHONPATH=src python benchmarks/pbc_md.py \
-        [--m 8] [--steps 50] [--kappa 0.8] [--check]
+        [--m 8] [--steps 50] [--kappa 0.8] [--trace PATH] [--check]
 
 `--check` asserts the smoke thresholds (used by CI): energy drift below
 --drift-tol over the run, >= 1 refit without a rebuild, retraces <= 2
@@ -19,7 +23,6 @@ after the first step, and every final position within one wrap of the
 primary cell.
 """
 import argparse
-import json
 import os
 import sys
 import time
@@ -28,6 +31,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import obs  # noqa: E402
 from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
 from repro.core.space import PeriodicBox  # noqa: E402
 from repro.dynamics import Simulation  # noqa: E402
@@ -61,7 +65,14 @@ def main(argv=None):
     ap.add_argument("--check", action="store_true",
                     help="assert smoke thresholds (CI)")
     ap.add_argument("--drift-tol", type=float, default=1e-3)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable phase-span tracing; writes a "
+                    "Chrome-trace JSON here and fills the report's "
+                    "phases breakdown")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
 
     x, q, L = salt_box(args.m, args.jitter)
     box = PeriodicBox((L, L, L))
@@ -74,21 +85,34 @@ def main(argv=None):
                          refit_interval=args.refit_interval,
                          rebuild=rebuild)
         sim.step()                   # compile + first step (excluded)
+        if obs.enabled():
+            obs.clear()  # phases describe the steady loop only
         t0 = time.time()
         sim.run(args.steps - 1, record_every=max(1, args.steps // 10))
         steady = time.time() - t0
+        phases = {k.split(".", 1)[1]: v
+                  for k, v in obs.phase_totals("md.").items()} \
+            if obs.enabled() else {}
         s = sim.stats()
         return sim, dict(
             mode=rebuild,
             ms_per_step=steady / max(args.steps - 1, 1) * 1e3,
+            steady_seconds=steady,
             steps=s["steps"], refits=s["refits"],
             rebuilds=s["rebuilds"], retraces=s["retraces"],
+            compiles=s["compiles"],
             energy_drift=sim.log.drift(),
             momentum_drift=sim.log.momentum_drift(),
             mac_slack=s["mac_slack"],
+            phases=phases,
         )
 
     sim_r, refit = run("auto")
+    if args.trace:
+        # Written now: each run clears the span buffer, so this trace is
+        # exactly the refit run's steady loop.
+        obs.write_chrome_trace(args.trace, process_name="repro.pbc_md")
+        print(f"wrote {args.trace}")
     sim_b, rebuild = run("always")
     xr, xb = np.asarray(sim_r.state.x), np.asarray(sim_b.state.x)
     # compare modulo wrapping (the two runs may wrap at different steps)
@@ -96,17 +120,25 @@ def main(argv=None):
     traj_dev = float(np.max(np.linalg.norm(d, axis=1)) / L)
 
     n = args.m ** 3
-    result = dict(
-        bench="pbc_md",
-        n=n, box=L, steps=args.steps, dt=args.dt,
-        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
-        kernel="yukawa", kappa=args.kappa,
-        refit_interval=args.refit_interval,
-        refit=refit, rebuild=rebuild,
-        trajectory_deviation=traj_dev,
-    )
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+    refit_phases = refit.pop("phases")
+    rebuild.pop("phases")
+    report = obs.bench_report(
+        "pbc_md",
+        config=dict(
+            n=n, box=L, steps=args.steps, dt=args.dt,
+            theta=args.theta, degree=args.degree,
+            leaf_size=args.leaf_size, kernel="yukawa", kappa=args.kappa,
+            jitter=args.jitter, refit_interval=args.refit_interval,
+            traced=bool(args.trace)),
+        metrics=dict(
+            refit=refit, rebuild=rebuild,
+            trajectory_deviation=traj_dev),
+        # phases: the refit run's steady loop (ms over steady_seconds)
+        phases=refit_phases,
+        counters=dict(
+            compiles=refit["compiles"], retraces=refit["retraces"],
+            refits=refit["refits"], rebuilds=refit["rebuilds"]))
+    obs.write_report(args.out, report)
 
     print(f"N={n} box=[0,{L})^3 yukawa kappa={args.kappa}")
     print(f"refit:   {refit['ms_per_step']:8.1f} ms/step  "
@@ -119,6 +151,7 @@ def main(argv=None):
 
     in_cell = (xr.min() > -1.0) and (xr.max() < L + 1.0)
     if args.check:
+        obs.validate_report(report)  # shared schema gate (repro.bench/1)
         checks = {
             f"energy drift < {args.drift_tol}":
                 refit["energy_drift"] < args.drift_tol,
@@ -127,6 +160,11 @@ def main(argv=None):
             "positions within one wrap of the cell": in_cell,
             "trajectory deviation < 1e-2 box units": traj_dev < 1e-2,
         }
+        if args.trace:
+            cov = obs.phase_coverage(report,
+                                     refit["steady_seconds"] * 1e3)
+            checks[f"phase coverage {cov:.0%} >= 90% of steady wall"] = \
+                cov >= 0.9
         failed = [name for name, ok in checks.items() if not ok]
         for name, ok in checks.items():
             print(f"  [{'ok' if ok else 'FAIL'}] {name}")

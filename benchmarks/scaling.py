@@ -1,103 +1,212 @@
-"""Fig. 5/6 analogue: weak + strong scaling of the distributed BLTC.
+"""Single-device treecode scaling ladder with a per-phase breakdown.
 
-Real multi-GPU wall-clock scaling is not measurable on one CPU core, so
-this benchmark does what CAN be measured honestly here:
-  - runs the full RCB + LET + shard_map pipeline on P simulated host
-    devices (subprocess per P, XLA_FLAGS device count),
-  - times the three phases the paper's Fig. 6(c,d) breaks down: setup
-    (host tree/lists/LET schedule), precompute+compute (device step), and
-    reports accuracy vs direct summation,
-  - reports the LET communication volume (bytes all-gathered + halo) per
-    rank, whose growth rate is the paper's O(log N) claim.
+The paper's headline single-GPU result (Fig. 3/4) is treecode cost
+growing as O(N log N) while direct summation grows as O(N^2). This
+bench measures that on the sizes a CI runner can afford — N = 10^4 and
+10^5 by default, 10^6 with ``--large`` — and, because wall-clock alone
+hides *where* the time goes, it runs with the `repro.obs` phase-span
+tracer always on and partitions the ladder's wall time into phases:
 
-CSV: mode,P,N,setup_s,device_s,err,let_bytes_per_rank
+- ``plan.build``     — host tree build + interaction lists + packing
+  (the per-stage split rides in each row's ``build_ms``),
+- ``scaling.compile``— first execute per size: trace + XLA compile
+  (cross-checked against the obs compile event log),
+- ``scaling.execute``— warm jitted evaluations (the O(N log N) claim),
+- ``scaling.accuracy`` — sampled direct-sum error check.
+
+Emits BENCH_scaling.json (the `repro.bench/1` BenchReport schema) with
+one row per size (build/compile/execute ms, points/s, sampled relative
+error, static occupancy) and the aggregated phases. ``--trace PATH``
+additionally writes the Chrome-trace file.
+
+    PYTHONPATH=src python benchmarks/scaling.py \
+        [--sizes 10000,100000] [--large] [--reps 3] [--trace PATH] \
+        [--check]
+
+`--check` asserts (used by CI): phases cover >= 90% of the ladder wall
+(the attribution-honesty gate), sampled error < --err-tol at every
+size, exactly one fresh executor compile per size (shape-keyed cache,
+zero retraces on warm repeats), and a sub-quadratic effective scaling
+exponent log(t2/t1)/log(n2/n1) <= --max-exponent between consecutive
+sizes.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import subprocess
 import sys
-import textwrap
+import time
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+import numpy as np
 
-_WORKER = """
-import json, time
-import numpy as np, jax, jax.numpy as jnp
-from repro.core.api import TreecodeConfig
-from repro.core.direct import direct_sum
-from repro.distributed.bltc import ShardedPlan
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-P = {P}; N = {N}
-rng = np.random.default_rng(0)
-pts = rng.uniform(-1, 1, (N, 3)).astype(np.float32)
-q = rng.uniform(-1, 1, N).astype(np.float32)
-cfg = TreecodeConfig(theta=0.8, degree={degree}, leaf_size={leaf},
-                     backend="xla")
-
-t0 = time.time()
-plan = ShardedPlan.build(pts, cfg, P)   # unified-API sharded plan
-setup_s = time.time() - t0
-
-phi = plan.execute(q)  # compile + run
-t0 = time.time()
-phi = plan.execute(q)
-jax.block_until_ready(phi)
-device_s = time.time() - t0
-
-sample = np.random.default_rng(1).choice(N, min(N, 2000), replace=False)
-phi_ds = direct_sum(jnp.asarray(pts[sample]), jnp.asarray(pts),
-                    jnp.asarray(q), kernel=cfg.make_kernel())
-err = float(jnp.linalg.norm(phi_ds - jnp.asarray(np.asarray(phi)[sample]))
-            / jnp.linalg.norm(phi_ds))
-
-# LET wire volume per rank: gathered qhat + metadata + halo leaves
-m = plan.arrays["node_lo"].shape[1]
-k3 = (cfg.degree + 1) ** 3
-gathered = (P - 1) * m * (k3 + 6) * 4
-halo = sum(int(plan.arrays[f"halo_send_{{i}}"].shape[1])
-           for i in range(len(plan.perm_rounds)))
-halo_bytes = halo * plan.arrays["leaf_gather"].shape[2] * 16
-print(json.dumps({{"setup_s": setup_s, "device_s": device_s, "err": err,
-                   "let_bytes": gathered + halo_bytes}}))
-"""
+from repro import obs  # noqa: E402
 
 
-def run_case(p, n, degree=6, leaf=128, timeout=1800):
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(ROOT, "src"),
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={p}")
-    code = textwrap.dedent(_WORKER.format(P=p, N=n, degree=degree, leaf=leaf))
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=timeout, env=env, cwd=ROOT)
-    if out.returncode != 0:
-        raise RuntimeError(out.stderr[-2000:])
-    return json.loads(out.stdout.strip().splitlines()[-1])
+def bench_size(solver, n, reps, err_sample, seed=0):
+    """One ladder rung: build, compile, warm executes, sampled error."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.direct import direct_sum
+
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, (n, 3)).astype(np.float32)
+    q = (rng.uniform(-1, 1, n) * 0.05).astype(np.float32)
+
+    compiles_before = obs.log.count(owner="core.eval", kind="compile")
+    plan = solver.plan(x)            # traced: plan.build + children
+
+    with obs.span("scaling.compile"):
+        phi = plan.execute(q)        # fresh shapes -> trace + XLA compile
+        jax.block_until_ready(phi)
+
+    exec_ms = []
+    with obs.span("scaling.execute"):
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(plan.execute(q))
+            exec_ms.append((time.perf_counter() - t0) * 1e3)
+
+    compile_events = [
+        e for e in obs.log.events(owner="core.eval", kind="compile")
+        if e["fn"].startswith("execute")]
+    compiles = obs.log.count(owner="core.eval", kind="compile") \
+        - compiles_before
+    compile_ms = compile_events[-1]["wall_ms"] if compiles else 0.0
+
+    with obs.span("scaling.accuracy"):
+        sample = np.random.default_rng(1).choice(
+            n, min(n, err_sample), replace=False)
+        phi_ref = direct_sum(jnp.asarray(x[sample]), jnp.asarray(x),
+                             jnp.asarray(q),
+                             kernel=solver.config.make_kernel())
+        err = float(jnp.linalg.norm(phi_ref - phi[sample])
+                    / jnp.linalg.norm(phi_ref))
+
+    s = plan.stats()
+    return dict(
+        n=n,
+        build_ms=dict(s["build_phases"]),
+        build_total_ms=sum(s["build_phases"].values()),
+        compile_ms=compile_ms,
+        compiles=compiles,
+        exec_ms=float(np.median(exec_ms)),
+        points_per_s=n / (float(np.median(exec_ms)) * 1e-3),
+        err_sampled=err,
+        err_sample=int(len(sample)),
+        occupancy=s["occupancy"],
+    )
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="both",
-                    choices=["weak", "strong", "both"])
-    ap.add_argument("--base-n", type=int, default=4096)
-    ap.add_argument("--ranks", type=int, nargs="*", default=[1, 2, 4])
-    args = ap.parse_args()
+    ap.add_argument("--sizes", default="10000,100000",
+                    help="comma-separated ladder sizes (CI default)")
+    ap.add_argument("--large", action="store_true",
+                    help="append the opt-in 10^6 rung")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="warm executes per size (median reported)")
+    ap.add_argument("--theta", type=float, default=0.7)
+    ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--leaf-size", type=int, default=64)
+    ap.add_argument("--kernel", default="coulomb")
+    ap.add_argument("--err-sample", type=int, default=1000,
+                    help="direct-sum sample targets per size")
+    ap.add_argument("--err-tol", type=float, default=1e-2)
+    ap.add_argument("--max-exponent", type=float, default=1.8,
+                    help="max effective scaling exponent between "
+                    "consecutive sizes (N^2 direct would be 2.0)")
+    ap.add_argument("--out", default="BENCH_scaling.json")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="also write the Chrome-trace JSON here")
+    ap.add_argument("--check", action="store_true",
+                    help="assert smoke thresholds (CI)")
+    args = ap.parse_args(argv)
 
-    print("mode,P,N,setup_s,device_s,err,let_bytes_per_rank")
-    if args.mode in ("weak", "both"):
-        for p in args.ranks:
-            n = args.base_n * p   # fixed N per rank (paper Fig. 5)
-            r = run_case(p, n)
-            print(f"weak,{p},{n},{r['setup_s']:.2f},{r['device_s']:.2f},"
-                  f"{r['err']:.2e},{r['let_bytes']}", flush=True)
-    if args.mode in ("strong", "both"):
-        n = args.base_n * max(args.ranks)
-        for p in args.ranks:
-            r = run_case(p, n)
-            print(f"strong,{p},{n},{r['setup_s']:.2f},{r['device_s']:.2f},"
-                  f"{r['err']:.2e},{r['let_bytes']}", flush=True)
+    # The per-phase breakdown IS the bench: tracing is always on here.
+    obs.enable()
+    obs.clear()
+
+    from repro.core.api import TreecodeConfig, TreecodeSolver
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    if args.large:
+        sizes.append(1_000_000)
+    solver = TreecodeSolver(TreecodeConfig(
+        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
+        kernel=args.kernel))
+
+    rows = []
+    t_wall = time.perf_counter()
+    for n in sizes:
+        row = bench_size(solver, n, args.reps, args.err_sample)
+        rows.append(row)
+        print(f"N={n:8d}: build {row['build_total_ms']:8.1f} ms  "
+              f"compile {row['compile_ms']:8.1f} ms  "
+              f"exec {row['exec_ms']:8.2f} ms  "
+              f"({row['points_per_s']:.2e} pts/s)  "
+              f"err {row['err_sampled']:.2e}", flush=True)
+    wall_ms = (time.perf_counter() - t_wall) * 1e3
+
+    # Effective exponent between consecutive rungs: log-slope of the
+    # warm execute time. O(N log N) lands near 1.0-1.2; direct is 2.0.
+    exponents = []
+    for a, b in zip(rows, rows[1:]):
+        exponents.append(float(
+            np.log(b["exec_ms"] / a["exec_ms"])
+            / np.log(b["n"] / a["n"])))
+
+    phases = obs.phase_totals()
+    top_phases = {k: v for k, v in phases.items()
+                  if k in ("plan.build", "scaling.compile",
+                           "scaling.execute", "scaling.accuracy")}
+    if args.trace:
+        obs.write_chrome_trace(args.trace, process_name="repro.scaling")
+        print(f"wrote {args.trace}")
+
+    report = obs.bench_report(
+        "scaling",
+        config=dict(
+            sizes=sizes, reps=args.reps, theta=args.theta,
+            degree=args.degree, leaf_size=args.leaf_size,
+            kernel=args.kernel, err_sample=args.err_sample),
+        metrics=dict(
+            rows=rows, wall_ms=wall_ms,
+            scaling_exponents=exponents),
+        # phases: disjoint partition of the ladder wall (plan.build's
+        # tree/lists/pack children ride in each row's build_ms)
+        phases=top_phases,
+        counters=dict(
+            compiles=sum(r["compiles"] for r in rows),
+            sizes=len(sizes)))
+    obs.write_report(args.out, report)
+    cov = obs.phase_coverage(report, wall_ms)
+    print(f"ladder wall {wall_ms:.0f} ms, phase coverage {cov:.0%}: "
+          + ", ".join(f"{k}={v:.0f}ms"
+                      for k, v in sorted(top_phases.items(),
+                                         key=lambda kv: -kv[1])))
+    print(f"wrote {args.out}")
+
+    if args.check:
+        obs.validate_report(report)  # shared schema gate (repro.bench/1)
+        checks = {
+            f"phase coverage {cov:.0%} >= 90% of ladder wall": cov >= 0.9,
+            "one executor compile per size":
+                all(r["compiles"] == 1 for r in rows),
+        }
+        for r in rows:
+            checks[f"N={r['n']} sampled err {r['err_sampled']:.2e} < "
+                   f"{args.err_tol}"] = r["err_sampled"] < args.err_tol
+        for (a, b), ex in zip(zip(rows, rows[1:]), exponents):
+            checks[f"exponent {ex:.2f} <= {args.max_exponent} "
+                   f"({a['n']}->{b['n']})"] = ex <= args.max_exponent
+        failed = [name for name, ok in checks.items() if not ok]
+        for name, ok in checks.items():
+            print(f"  [{'ok' if ok else 'FAIL'}] {name}")
+        if failed:
+            raise SystemExit(f"scaling checks failed: {failed}")
+        print("all scaling checks passed")
 
 
 if __name__ == "__main__":

@@ -13,20 +13,30 @@ subsystem targets (DESIGN.md §8). Two phases:
    the compile/retrace counters, then re-submits the same shapes to
    demonstrate warm buckets (zero compiles, zero retraces).
 
-Writes `BENCH_serve.json`. `--check` enforces the regression gates:
-batched throughput >= 2x the sequential loop at every measured S >= 8,
-compiles <= number of buckets, and zero compiles/retraces on warm
-re-submission.
+Writes `BENCH_serve.json` (the `repro.bench/1` BenchReport schema:
+config / metrics / phases / counters). With ``--trace PATH`` the
+phase-span tracer (`repro.obs`) is enabled: the report's ``phases``
+carry the service phase's enqueue/flush/plan_build/execute/resolve
+breakdown and a Chrome-trace file is written to PATH. `--check`
+enforces the regression gates: batched throughput >= 2x the sequential
+loop at every measured S >= 8, compiles <= number of buckets, and zero
+compiles/retraces on warm re-submission.
 
-    PYTHONPATH=src python benchmarks/serve.py [--check] [--out PATH]
+    PYTHONPATH=src python benchmarks/serve.py [--check] [--out PATH] \
+        [--trace PATH]
 """
 from __future__ import annotations
 
 import argparse
-import json
+import os
+import sys
 import time
 
 import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import obs  # noqa: E402
 
 # Bench config: small systems make per-request overhead (dispatch,
 # charge upload, jit-cache lookup) comparable to device compute — the
@@ -97,6 +107,8 @@ def bench_service(seed=0):
     cfg = TreecodeConfig(degree=BENCH_DEGREE, leaf_size=BENCH_LEAF,
                          theta=0.7, backend="xla")
     fe = ServeFrontend(cfg, max_batch=8, flush_deadline=0.02)
+    if obs.enabled():
+        obs.clear()  # phases describe the service phase only
 
     # mixed shapes: two quantized size classes (<=64 and <=128 points)
     # -> two buckets. The same request set is submitted twice — warm
@@ -145,21 +157,43 @@ def main():
                     help="enforce the regression gates")
     ap.add_argument("--reps", type=int, default=150)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable phase-span tracing; writes a "
+                    "Chrome-trace JSON here and fills the report's "
+                    "phases breakdown (service phase)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     throughput = bench_throughput(reps=args.reps)
     service = bench_service()
-    result = dict(
+    phases = {k.split(".", 1)[1]: v
+              for k, v in obs.phase_totals("serve.").items()} \
+        if obs.enabled() else {}
+    if args.trace:
+        obs.write_chrome_trace(args.trace, process_name="repro.serve")
+        print(f"wrote {args.trace}")
+    report = obs.bench_report(
+        "serve",
         config=dict(n=BENCH_N, degree=BENCH_DEGREE, leaf=BENCH_LEAF,
-                    sizes=list(BENCH_SIZES)),
-        throughput=throughput,
-        service=service,
-    )
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=2)
+                    sizes=list(BENCH_SIZES), reps=args.reps,
+                    traced=bool(args.trace)),
+        metrics=dict(throughput=throughput, service=service),
+        # phases: the service phase (both submit rounds)
+        phases=phases,
+        counters=dict(
+            cold_compiles=service["cold"]["compiles"],
+            warm_compiles=service["warm_delta"]["compiles"],
+            warm_retraces=service["warm_delta"]["retraces"],
+            num_buckets=service["num_buckets"],
+            flushes=service["flushes"],
+            capacity_grows=service["capacity_grows"]))
+    obs.write_report(args.out, report)
     print(f"wrote {args.out}")
 
     if args.check:
+        obs.validate_report(report)  # shared schema gate (repro.bench/1)
         failures = []
         for row in throughput:
             if row["ensemble_size"] >= GATE_MIN_S \

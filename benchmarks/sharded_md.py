@@ -8,13 +8,20 @@ test (DESIGN.md §7): rebuilds reuse the compiled SPMD step, so a rebuild
 step costs host tree construction on top of one normal step — NOT a full
 shard_map retrace — and `stats()["retraces"] == 0`.
 
-Emits BENCH_sharded_md.json with median ms/step per class, the ratio,
-rebuild/refit/retrace counters, energy drift, and the raw per-step
-timeline.
+Emits BENCH_sharded_md.json (the `repro.bench/1` BenchReport schema:
+config / metrics / phases / counters) with median ms/step per class, the
+ratio, rebuild/refit/retrace counters plus the SPMD executable-cache
+miss count from the `repro.obs` event log, energy drift, and the raw
+per-step timeline. With ``--trace PATH`` the phase-span tracer is
+enabled: the report's ``phases`` carry the steady-loop breakdown
+(including the sharded replan spans `plan.rcb` / `plan.local_plans` /
+`plan.let_traversal` / `plan.pad` under rebuild steps) and a
+Chrome-trace file is written to PATH.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python benchmarks/sharded_md.py \
-        [--n 1200] [--steps 40] [--nranks 4] [--refit-interval 8] [--check]
+        [--n 1200] [--steps 40] [--nranks 4] [--refit-interval 8] \
+        [--trace PATH] [--check]
 
 `--check` asserts the smoke thresholds (used by CI): >= 2 rebuilds,
 >= 1 refit, retraces == 0, zero capacity growths, energy drift below
@@ -22,7 +29,6 @@ timeline.
 of a median refit step.
 """
 import argparse
-import json
 import os
 import sys
 import time
@@ -31,6 +37,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import obs  # noqa: E402
 from repro.core.api import TreecodeConfig, TreecodeSolver  # noqa: E402
 from repro.dynamics import Simulation  # noqa: E402
 
@@ -57,7 +64,14 @@ def main(argv=None):
     ap.add_argument("--max-rebuilds", type=int, default=0,
                     help="regression gate: rebuilds must not exceed this "
                     "(0 = skip; CI passes the seed trajectory's count)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable phase-span tracing; writes a "
+                    "Chrome-trace JSON here and fills the report's "
+                    "phases breakdown")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
 
     import jax
     nranks = args.nranks or jax.device_count()
@@ -80,7 +94,11 @@ def main(argv=None):
 
     sim.log.record(0, sim.diagnostics())   # E(0) baseline for drift()
     sim.step()                       # compile + first step (excluded)
+    if obs.enabled():
+        obs.clear()  # phases describe the steady loop only
+    spmd_misses_warm = obs.log.count(kind="spmd_cache_miss")
     timeline = []
+    t_loop = time.time()
     for _ in range(args.steps - 1):
         before = sim.rebuilds
         t0 = time.time()
@@ -91,6 +109,18 @@ def main(argv=None):
             ms=ms, kind="rebuild" if sim.rebuilds > before else "refit"))
         if sim.steps % max(1, args.steps // 10) == 0:
             sim.log.record(sim.steps, sim.diagnostics())
+    steady = time.time() - t_loop
+    # SPMD executable-cache misses after warm-up: the retrace-free
+    # contract says rebuilds reuse the compiled step, so this stays 0.
+    spmd_misses = obs.log.count(kind="spmd_cache_miss") - spmd_misses_warm
+    # Top-level step phases for the report; the sharded replan's nested
+    # breakdown (rcb / local_plans / let_traversal / pad / commit) rides
+    # under metrics — those spans nest inside md.rebuild_host and would
+    # double-count against the steady wall.
+    phases = {k.split(".", 1)[1]: v
+              for k, v in obs.phase_totals("md.").items()} \
+        if obs.enabled() else {}
+    replan_phases = obs.phase_totals("plan.") if obs.enabled() else {}
 
     refit_ms = [t["ms"] for t in timeline if t["kind"] == "refit"]
     rebuild_ms = [t["ms"] for t in timeline if t["kind"] == "rebuild"]
@@ -103,39 +133,33 @@ def main(argv=None):
              if refit_ms and rebuild_ms else float("nan"))
 
     s = sim.stats()
-    result = dict(
-        bench="sharded_md",
-        n=args.n, nranks=nranks, steps=args.steps, dt=args.dt,
-        theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
-        skin=args.skin,
-        refit_interval=args.refit_interval,
-        refit_ms_per_step=med_refit,
-        rebuild_ms_per_step=med_rebuild,
-        rebuild_over_refit=(None if np.isnan(ratio) else ratio),
-        refits=s["refits"], rebuilds=s["rebuilds"],
-        retraces=s["retraces"], compiles=s["compiles"],
-        capacity_growths=s["capacity_growths"],
-        halo_rounds=s["plan"]["halo_rounds"],
-        halo_rounds_active=s["plan"]["halo_rounds_active"],
-        energy_drift=sim.log.drift(),
-        momentum_drift=sim.log.momentum_drift(),
-        mac_slack=s["mac_slack"],
-        timeline=timeline,
-    )
-    # Non-finite floats (inf mac_slack on approx-free builds, NaN
-    # ratios) become None: json.dump's Infinity/NaN tokens are not
-    # valid strict JSON.
-    def json_safe(obj):
-        if isinstance(obj, dict):
-            return {k: json_safe(v) for k, v in obj.items()}
-        if isinstance(obj, (list, tuple)):
-            return [json_safe(v) for v in obj]
-        if isinstance(obj, float) and not np.isfinite(obj):
-            return None
-        return obj
-
-    with open(args.out, "w") as f:
-        json.dump(json_safe(result), f, indent=2)
+    report = obs.bench_report(
+        "sharded_md",
+        config=dict(
+            n=args.n, nranks=nranks, steps=args.steps, dt=args.dt,
+            theta=args.theta, degree=args.degree,
+            leaf_size=args.leaf_size, skin=args.skin,
+            refit_interval=args.refit_interval, traced=bool(args.trace)),
+        metrics=dict(
+            refit_ms_per_step=med_refit,
+            rebuild_ms_per_step=med_rebuild,
+            rebuild_over_refit=(None if np.isnan(ratio) else ratio),
+            steady_seconds=steady,
+            halo_rounds=s["plan"]["halo_rounds"],
+            halo_rounds_active=s["plan"]["halo_rounds_active"],
+            energy_drift=sim.log.drift(),
+            momentum_drift=sim.log.momentum_drift(),
+            mac_slack=s["mac_slack"],
+            replan_phases=replan_phases,
+            timeline=timeline),
+        # phases: top-level md.* spans of the steady loop
+        phases=phases,
+        counters=dict(
+            compiles=s["compiles"], retraces=s["retraces"],
+            refits=s["refits"], rebuilds=s["rebuilds"],
+            capacity_growths=s["capacity_growths"],
+            spmd_cache_misses=spmd_misses))
+    obs.write_report(args.out, report)
 
     print(f"N={args.n} P={nranks} steps={args.steps} "
           f"K={args.refit_interval}")
@@ -145,15 +169,22 @@ def main(argv=None):
           f"{len(rebuild_ms)})  ratio {ratio:.2f}x")
     print(f"rebuilds {s['rebuilds']}  refits {s['refits']}  "
           f"retraces {s['retraces']}  compiles {s['compiles']}  "
+          f"spmd cache misses {spmd_misses}  "
           f"drift {sim.log.drift():.2e}")
+    if args.trace:
+        obs.write_chrome_trace(args.trace,
+                               process_name="repro.sharded_md")
+        print(f"wrote {args.trace}")
     print(f"wrote {args.out}")
 
     if args.check:
+        obs.validate_report(report)  # shared schema gate (repro.bench/1)
         checks = {
             ">= 2 rebuilds exercised": s["rebuilds"] >= 2,
             ">= 1 refit step": s["refits"] >= 1,
             "retraces == 0 (compiled SPMD step reused)":
                 s["retraces"] == 0,
+            "spmd cache misses == 0 after warm-up": spmd_misses == 0,
             "no capacity growths at this size":
                 s["capacity_growths"] == 0,
             f"energy drift < {args.drift_tol}":

@@ -66,6 +66,9 @@ import numpy as np
 from repro.core import eval as _eval
 from repro.core.potentials import Kernel, resolve_kernel
 from repro.core.space import FreeSpace, PeriodicBox, resolve_space
+from repro.obs import events as _events
+from repro.obs import trace as _trace
+from repro.obs.occupancy import static_occupancy as _static_occupancy
 
 _BACKENDS = ("auto", "pallas", "pallas_interpret", "xla")
 _PRECOMPUTES = ("direct", "hierarchical")
@@ -342,9 +345,16 @@ class SingleDevicePlan:
         values for this call without recompiling."""
         fn = (_eval.execute_donating if self.config.donate_charges
               else _eval.execute)
-        return fn(self.inner.arrays, self._charges(charges),
-                  self._params(kernel_params),
-                  **self.config.exec_opts(self.kernel))
+        with _trace.span("eval.execute"):
+            out, _ = _events.log_compiles(
+                "execute_donating" if self.config.donate_charges
+                else "execute",
+                fn, self.inner.arrays, self._charges(charges),
+                self._params(kernel_params),
+                key=lambda: hash(_eval.plan_signature(self.inner)),
+                site="SingleDevicePlan.execute", owner="core.eval",
+                **self.config.exec_opts(self.kernel))
+        return out
 
     def potential_and_forces(self, charges, weights=None,
                              kernel_params=None):
@@ -364,9 +374,15 @@ class SingleDevicePlan:
             w = q
         else:
             w = self._charges(weights)
-        return _eval.potential_and_forces(
-            self.inner.arrays, q, w, self._params(kernel_params),
-            **self.config.exec_opts(self.kernel))
+        with _trace.span("eval.potential_and_forces"):
+            out, _ = _events.log_compiles(
+                "potential_and_forces", _eval.potential_and_forces,
+                self.inner.arrays, q, w, self._params(kernel_params),
+                key=lambda: hash(_eval.plan_signature(self.inner)),
+                site="SingleDevicePlan.potential_and_forces",
+                owner="core.eval",
+                **self.config.exec_opts(self.kernel))
+        return out
 
     @property
     def mac_slack(self) -> float:
@@ -422,6 +438,10 @@ class SingleDevicePlan:
             fold_slack=self.inner.fold_slack,
             skin=self.inner.skin,
             capacity_padded=caps is not None,
+            # Observability (repro.obs): host build-phase wall times and
+            # padded-vs-real utilization of the packed arrays.
+            build_phases=dict(self.inner.build_ms),
+            occupancy=_static_occupancy(self.inner),
             **({"capacities": dataclasses.asdict(caps)} if caps else {}),
         )
 

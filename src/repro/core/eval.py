@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+import time
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,7 @@ from repro.core.potentials import Kernel
 from repro.core.space import FREE as _FREE
 from repro.core.tree import Batches, Tree, build_batches, build_tree
 from repro.kernels import ops
+from repro.obs import trace as _trace
 
 
 def _round_up(x: int, base: int = 8) -> int:
@@ -68,6 +70,10 @@ class Plan:
     # The Space the plan was built in (geometry wrapped at build time for
     # periodic boxes; the executors fold displacements to minimum image).
     space: object = _FREE
+    # Host build-phase wall times in ms (tree_build / interaction_lists /
+    # pack), measured unconditionally — the build is heavy host work, so
+    # a few perf_counter reads are free. Surfaced via plan.stats().
+    build_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def prepare_plan(
@@ -90,14 +96,33 @@ def prepare_plan(
     `repro.core.interaction`). `skin` is the Verlet-skin radius: pairs
     within the skin of the MAC boundary are dual-listed and gated by
     current distance at evaluation time (drift-budget v2)."""
+    with _trace.span("plan.build"):
+        return _prepare_plan_timed(
+            targets, sources, theta=theta, degree=degree,
+            leaf_size=leaf_size, batch_size=batch_size, space=space,
+            skin=skin)
+
+
+def _prepare_plan_timed(targets, sources, *, theta, degree, leaf_size,
+                        batch_size, space, skin):
+    build_ms: Dict[str, float] = {}
     targets = np.asarray(space.wrap(np.asarray(targets)))
     sources = np.asarray(space.wrap(np.asarray(sources)))
     dtype = targets.dtype
 
-    tree = build_tree(sources, leaf_size)
-    batches = build_batches(targets, batch_size)
-    lists = build_interaction_lists(tree, batches, theta, degree, space,
-                                    skin=skin)
+    t0 = time.perf_counter()
+    with _trace.span("plan.tree_build"):
+        tree = build_tree(sources, leaf_size)
+        batches = build_batches(targets, batch_size)
+    t1 = time.perf_counter()
+    build_ms["tree_build"] = (t1 - t0) * 1e3
+    with _trace.span("plan.interaction_lists"):
+        lists = build_interaction_lists(tree, batches, theta, degree, space,
+                                        skin=skin)
+    t2 = time.perf_counter()
+    build_ms["interaction_lists"] = (t2 - t1) * 1e3
+    _pack_span = _trace.span("plan.pack")
+    _pack_span.__enter__()
 
     nb_pad = _round_up(batches.max_count)
     nl_pad = _round_up(tree.max_leaf_count)
@@ -177,6 +202,8 @@ def prepare_plan(
         parent_of=jnp.asarray(tree.parent, jnp.int32),
     )
     meta = (degree,)
+    _pack_span.__exit__(None, None, None)
+    build_ms["pack"] = (time.perf_counter() - t2) * 1e3
     return Plan(
         arrays=arrays, meta=meta, tree=tree, batches=batches,
         padding_waste=float(lists.padding_waste),
@@ -184,7 +211,7 @@ def prepare_plan(
         mac_slack=float(lists.mac_slack),
         theta_slack=float(lists.theta_slack),
         fold_slack=float(lists.fold_slack),
-        skin=float(skin), space=space,
+        skin=float(skin), space=space, build_ms=build_ms,
     )
 
 
@@ -836,6 +863,12 @@ def pad_plan(plan: Plan, caps: Capacities) -> Plan:
     only on `caps`, so jitted executors compiled for one capacity-padded
     plan are reused by every later one.
     """
+    with _trace.span("plan.pad"):
+        return _pad_plan_impl(plan, caps)
+
+
+def _pad_plan_impl(plan: Plan, caps: Capacities) -> Plan:
+    _t_pad = time.perf_counter()
     if not caps.fits(plan):
         raise ValueError(
             "capacities do not fit this plan; call caps.grown_to_fit(plan) "
@@ -940,8 +973,11 @@ def pad_plan(plan: Plan, caps: Capacities) -> Plan:
 
     arrays = {k: (v if isinstance(v, tuple) else jnp.asarray(v))
               for k, v in out.items()}
+    build_ms = dict(plan.build_ms)
+    build_ms["pad"] = build_ms.get("pad", 0.0) \
+        + (time.perf_counter() - _t_pad) * 1e3
     return dataclasses.replace(plan, arrays=arrays, capacities=caps,
-                               scratch_node=scratch)
+                               scratch_node=scratch, build_ms=build_ms)
 
 
 def plan_signature(plan: Plan) -> Tuple:

@@ -21,6 +21,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.trace import traced as _traced
+
 _SPLIT_RATIO = 1.0 / np.sqrt(2.0)
 
 
@@ -73,6 +75,7 @@ class Tree:
         return np.arange(i0, i1)
 
 
+@_traced("tree.build_tree")
 def build_tree(points: np.ndarray, leaf_size: int) -> Tree:
     """Build the source tree (or, with leaf_size=N_B, the target batches).
 
@@ -164,6 +167,7 @@ def build_tree(points: np.ndarray, leaf_size: int) -> Tree:
     )
 
 
+@_traced("tree.refit_tree")
 def refit_tree(tree: Tree, points: np.ndarray) -> Tree:
     """Recompute box geometry for moved particles under a FIXED topology.
 

@@ -52,6 +52,7 @@ common width (padded slots carry zero charge and are never gathered).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -68,6 +69,9 @@ from repro.core.potentials import Kernel
 from repro.core.tree import Tree
 from repro.distributed.rcb import RCB, rcb_partition
 from repro.kernels import ops
+from repro.obs import events as _events
+from repro.obs import trace as _trace
+from repro.obs.occupancy import static_occupancy as _static_occ
 
 
 def _traverse_remote(cfg: TreecodeConfig, tree: Tree, bc, br, bhw):
@@ -224,6 +228,17 @@ def _spmd_executable(*, mesh, axis: str, degree: int, depth: int,
         while len(_SPMD_CACHE) >= _SPMD_CACHE_MAX:
             _SPMD_CACHE.pop(next(iter(_SPMD_CACHE)))
         _SPMD_CACHE[key] = fn
+        # A cache miss constructs a fresh jit wrapper; the XLA compile
+        # itself happens at its first call (and is logged by that call
+        # site, e.g. the MD engine's finish wrapper). Recording the miss
+        # with the full statics key makes "why did this retrace" a
+        # query: a second spmd_cache_miss for one budget IS the answer.
+        _events.record(
+            "spmd_cache_miss", "spmd",
+            key=(degree, depth, len(perm_rounds), backend, donate,
+                 theta, skin),
+            site="distributed.bltc._spmd_executable",
+            owner="distributed.bltc")
     return fn
 
 
@@ -361,6 +376,9 @@ class ShardedPlan:
     fold_slack: float = float("inf")
     mesh: Optional[object] = None
     axis: str = "data"
+    # Host build wall time per stage (ms): rcb / local_plans /
+    # let_traversal / pad / commit — stats()["build_phases"].
+    build_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
     # Strong per-instance refs to the fetched SPMD executables: plans
     # must not lose their compiled traces to module-cache FIFO eviction
     # (the module cache shares across plans; these pin for this plan).
@@ -402,21 +420,39 @@ class ShardedPlan:
         with headroom; an explicit `ShardedCapacities` (e.g. a previous
         plan's, via `replan`) is grown to fit and otherwise reused
         verbatim, keeping the padded pytree shape-identical."""
+        with _trace.span("plan.build_sharded"):
+            return cls._build_impl(points, cfg, nranks, mesh=mesh,
+                                   axis=axis, kernel=kernel,
+                                   capacities=capacities)
+
+    @classmethod
+    def _build_impl(cls, points, cfg, nranks, *, mesh, axis, kernel,
+                    capacities):
         points = np.asarray(cfg.space.wrap(np.asarray(points)))
         dtype = points.dtype
-        rcb = rcb_partition(points, nranks)
+        build_ms: Dict[str, float] = {}
+        _t = time.perf_counter()
+        with _trace.span("plan.rcb"):
+            rcb = rcb_partition(points, nranks)
+        build_ms["rcb"] = (time.perf_counter() - _t) * 1e3
 
-        plans = []
-        for r in range(nranks):
-            slab = points[rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]]
-            plans.append(ceval.prepare_plan(
-                slab, slab, theta=cfg.theta, degree=cfg.degree,
-                leaf_size=cfg.leaf_size,
-                batch_size=cfg.resolved_batch_size(), space=cfg.space,
-                skin=cfg.skin))
+        _t = time.perf_counter()
+        with _trace.span("plan.local_plans"):
+            plans = []
+            for r in range(nranks):
+                slab = points[rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]]
+                plans.append(ceval.prepare_plan(
+                    slab, slab, theta=cfg.theta, degree=cfg.degree,
+                    leaf_size=cfg.leaf_size,
+                    batch_size=cfg.resolved_batch_size(), space=cfg.space,
+                    skin=cfg.skin))
+        build_ms["local_plans"] = (time.perf_counter() - _t) * 1e3
 
-        remote_approx, remote_direct, halo_need, r_theta, r_fold = \
-            _remote_lists(cfg, plans, nranks)
+        _t = time.perf_counter()
+        with _trace.span("plan.let_traversal"):
+            remote_approx, remote_direct, halo_need, r_theta, r_fold = \
+                _remote_lists(cfg, plans, nranks)
+        build_ms["let_traversal"] = (time.perf_counter() - _t) * 1e3
         theta_slack = min([r_theta] + [pl.theta_slack for pl in plans])
         fold_slack = min([r_fold] + [pl.fold_slack for pl in plans])
         mac_slack = interaction.scaled_mac_slack(cfg.theta, theta_slack,
@@ -442,6 +478,9 @@ class ShardedPlan:
                 f"repro.core.eval.ShardedCapacities, got "
                 f"{type(capacities).__name__}")
 
+        _t = time.perf_counter()
+        _pad_span = _trace.span("plan.pad")
+        _pad_span.__enter__()
         R = caps.rank
         b_pad, nb_pad = R.num_batches, R.batch_width
         l_pad, nl_pad = R.num_leaves, R.leaf_width
@@ -552,14 +591,19 @@ class ShardedPlan:
         # rebuild that handed the MD engine uncommitted arrays would
         # retrace the step once even at identical shapes; committing here
         # keeps one stable signature across every rebuild.
+        _pad_span.__exit__(None, None, None)
+        build_ms["pad"] = (time.perf_counter() - _t) * 1e3
         if mesh is None:
             mesh = compat.make_mesh((nranks,), (axis,))
         sharded = jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec(axis))
         replicated = jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec())
-        arrays = {k: jax.device_put(jnp.asarray(v), sharded)
-                  for k, v in arrays.items()}
+        _t = time.perf_counter()
+        with _trace.span("plan.commit"):
+            arrays = {k: jax.device_put(jnp.asarray(v), sharded)
+                      for k, v in arrays.items()}
+        build_ms["commit"] = (time.perf_counter() - _t) * 1e3
 
         # ---- device rank tables (charge staging + dynamics adapter)
         rank_gather = np.full((nranks, per_pad), -1, np.int64)
@@ -583,7 +627,8 @@ class ShardedPlan:
                        jnp.asarray(input_pos, jnp.int32), replicated),
                    kernel_params=lift_params(kernel, np.dtype(dtype)),
                    mesh=mesh, axis=axis, mac_slack=mac_slack,
-                   theta_slack=theta_slack, fold_slack=fold_slack)
+                   theta_slack=theta_slack, fold_slack=fold_slack,
+                   build_ms=build_ms)
 
     # ------------------------------------------------------------------
     # device execution
@@ -659,8 +704,12 @@ class ShardedPlan:
         loops run allocation-free). `kernel_params` overrides the kernel
         parameter values for this call without recompiling."""
         fn = self._spmd_fn(donate=self.config.donate_charges)
-        phi_rank = fn(self.arrays, self._rank_charges(charges),
-                      self._params(kernel_params))
+        with _trace.span("eval.execute_sharded"):
+            phi_rank, _ = _events.log_compiles(
+                "spmd", fn, self.arrays, self._rank_charges(charges),
+                self._params(kernel_params),
+                key=lambda: repr(self.capacities),
+                site="ShardedPlan.execute", owner="distributed.bltc")
         return self._unrank(phi_rank)
 
     def potential_and_forces(self, charges, weights=None,
@@ -721,6 +770,11 @@ class ShardedPlan:
             fold_slack=self.fold_slack,
             skin=self.config.skin,
             capacity_padded=caps is not None,
+            # Observability (repro.obs): host build wall time per stage
+            # and padded-vs-real utilization of the stacked arrays (all
+            # ranks pooled).
+            build_phases=dict(self.build_ms),
+            occupancy=_static_occ(self),
             **({"capacities": dataclasses.asdict(caps)} if caps else {}),
         )
 

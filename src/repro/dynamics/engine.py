@@ -54,6 +54,9 @@ from repro.dynamics import diagnostics as diag
 from repro.dynamics.integrators import (MDState, get_integrator,
                                         initial_state)
 from repro.dynamics.refit import make_adapter, max_drift
+from repro.obs import events as _events
+from repro.obs import trace as _trace
+from repro.obs.occupancy import occupancy_counters as _occ_counters
 
 _REBUILD_POLICIES = ("auto", "always", "never")
 
@@ -94,6 +97,12 @@ class Simulation:
         exact-direct configs or testing).
       checkpointer/checkpoint_every: trajectory snapshots via the
         fault-tolerant `Checkpointer` (atomic, async, elastic).
+      profile: fuse device-side occupancy counters (`repro.obs`) into
+        the finish pass as an extra aux output — skin accept/demote
+        rates and masked-lane waste appear under
+        ``stats()["occupancy"]``. Changes the finish closure's output
+        pytree, so flipping it mid-run would retrace; set at
+        construction. No extra kernel launches either way.
     """
 
     def __init__(self, plan, charges, *, dt: float,
@@ -105,7 +114,8 @@ class Simulation:
                  drift_safety: float = 1.0,
                  rebuild: str = "auto",
                  checkpointer: Optional[Checkpointer] = None,
-                 checkpoint_every: int = 0):
+                 checkpoint_every: int = 0,
+                 profile: bool = False):
         if rebuild not in _REBUILD_POLICIES:
             raise ValueError(f"rebuild must be one of {_REBUILD_POLICIES}")
         if refit_interval < 1:
@@ -116,6 +126,11 @@ class Simulation:
         self.rebuild_policy = rebuild
         self.checkpointer = checkpointer
         self.checkpoint_every = int(checkpoint_every)
+        self.profile = bool(profile)
+        # Owner token scoping this engine's entries in the global
+        # compile/retrace event log (repro.obs.events).
+        self.obs_owner = f"Simulation@{id(self):x}"
+        self._occ_dev = None
 
         self.adapter = make_adapter(plan)
         if getattr(plan, "capacities", "n/a") is None:
@@ -181,8 +196,10 @@ class Simulation:
 
         # Initial force evaluation (device): seeds f/phi for the first
         # kick and for step-0 diagnostics, plus the refreshed budgets.
-        self._arrays, self.state, self._slack_dev = self._init_forces(
-            self._arrays, self.state)
+        self._arrays, self.state, self._slack_dev, self._occ_dev = \
+            self._call_logged("init_forces", self._init_forces,
+                              "Simulation.__init__",
+                              self._arrays, self.state)
         self.adapter.sync_arrays(self._arrays)
         self.force_evals += 1
         self.log = diag.EnergyLog()
@@ -211,18 +228,34 @@ class Simulation:
         adapter, q = self.adapter, self.charges
         force = adapter.force_fn()
         slack = adapter.slack_fn()
+        # Occupancy counters ride the finish pass as an aux output (no
+        # extra launches; DESIGN.md §9). `occ` is {} (a leafless pytree)
+        # when profiling is off, so the closure's trace signature — and
+        # the compile counters tests assert — are independent of the
+        # flag's value at any given construction. Skin-gate rates need
+        # the unstacked batch-box layout, so they are single-device only.
+        profile, theta, space = self.profile, self._theta, self.space
+        occ_skin = self._skin if getattr(self.plan, "nranks", 1) == 1 else 0.0
+
+        def occ_of(arrays):
+            if not profile:
+                return {}
+            return _occ_counters(arrays, theta=theta, space=space,
+                                 skin=occ_skin)
 
         def finish(arrays, state):
             arrays = adapter.refit(arrays, state.x)
             slacks = slack(arrays)  # on-device refresh from refit boxes
             phi, f = force(arrays, state.x, q, q)
-            return arrays, integ.post(state, phi, f, dt, inv_m), slacks
+            return (arrays, integ.post(state, phi, f, dt, inv_m), slacks,
+                    occ_of(arrays))
 
         def init_forces(arrays, state):
             arrays = adapter.refit(arrays, state.x)
             slacks = slack(arrays)
             phi, f = force(arrays, state.x, q, q)
-            return arrays, state._replace(phi=phi, f=f), slacks
+            return (arrays, state._replace(phi=phi, f=f), slacks,
+                    occ_of(arrays))
 
         self._finish = jax.jit(finish)
         self._init_forces = jax.jit(init_forces)
@@ -236,17 +269,40 @@ class Simulation:
         self._finish_history_compiles += _cache_size(self._init_forces)
         self._make_force_closures()
 
+    def _compile_key(self):
+        """Static cache key recorded with compile events: the capacity
+        budget (array shapes derive from it), lazily materialized."""
+        caps = getattr(self.plan, "capacities", None)
+        return repr(caps) if caps is not None else "unpadded"
+
+    def _call_logged(self, label, fn, site, *args):
+        """Call a jitted executable; log a compile event if its cache
+        grew (key + call site + wall time; `repro.obs.events`)."""
+        out, _ = _events.log_compiles(label, fn, *args,
+                                      key=self._compile_key, site=site,
+                                      owner=self.obs_owner)
+        return out
+
     def _total_compiles(self) -> int:
+        """Legacy jit-cache sum — kept as the cross-check for the event
+        log (`compiles`); the tier-1 suite asserts they agree."""
         return (_cache_size(self._advance) + _cache_size(self._finish)
                 + _cache_size(self._init_forces)
                 + self._finish_history_compiles)
+
+    @property
+    def compiles(self) -> int:
+        """Total jit compilations of the step executables, from the
+        compile/retrace event log (the single source of truth; every
+        executable call site routes through `_call_logged`)."""
+        return _events.log.count(owner=self.obs_owner)
 
     @property
     def retraces(self) -> int:
         """Compilations beyond the ones paid by the end of step 1."""
         if self._baseline_compiles is None:
             return 0
-        return max(0, self._total_compiles() - self._baseline_compiles)
+        return max(0, self.compiles - self._baseline_compiles)
 
     # ------------------------------------------------------------------
     # stepping
@@ -292,8 +348,14 @@ class Simulation:
 
     def step(self) -> MDState:
         """One integration step (one force evaluation)."""
-        s1, drift_dev = self._advance(self.state, self._x_eval_ref)
-        drift = float(drift_dev)
+        with _trace.span("md.advance"):
+            s1, drift_dev = self._call_logged(
+                "advance", self._advance, "Simulation.step",
+                self.state, self._x_eval_ref)
+            # The one host<->device sync of a refit step: the drift
+            # scalar. Inside the span so enabled traces attribute the
+            # device wait to the phase that caused it.
+            drift = float(drift_dev)
         self._last_drift = drift
         self._refresh_budgets()
 
@@ -309,6 +371,8 @@ class Simulation:
             # per-particle lattice shift: velocities, forces and energies
             # are all minimum-image invariant, so the trajectory is
             # unchanged while coordinates stay bounded).
+            _rb_span = _trace.span("md.rebuild_host")
+            _rb_span.__enter__()
             s1 = s1._replace(x=self.space.wrap(s1.x))
             invalidated = self.adapter.rebuild(np.asarray(s1.x))
             if invalidated:
@@ -334,11 +398,20 @@ class Simulation:
                 self.rebuilds_interval += 1
             else:
                 self.rebuilds_forced += 1
+            _rb_span.__exit__(None, None, None)
         else:
             self.refits += 1
 
-        self._arrays, self.state, self._slack_dev = self._finish(
-            self._arrays, s1)
+        with _trace.span("md.finish"):
+            self._arrays, self.state, self._slack_dev, self._occ_dev = \
+                self._call_logged("finish", self._finish, "Simulation.step",
+                                  self._arrays, s1)
+            if _trace.enabled():
+                # Honest device-time attribution: only when tracing, pay
+                # the sync here so the span covers the device work this
+                # call launched (disabled runs keep the async pipeline;
+                # the next step's drift scalar is the natural sync).
+                jax.block_until_ready(self.state)
         # The refit/refresh point is s1.x (position-Verlet moves x again
         # in post; the budgets were refreshed at the force point).
         self._x_eval_ref = s1.x
@@ -348,7 +421,7 @@ class Simulation:
         self.force_evals += 1
 
         if self._baseline_compiles is None:
-            self._baseline_compiles = self._total_compiles()
+            self._baseline_compiles = self.compiles
 
         if (self.checkpointer is not None and self.checkpoint_every
                 and self.steps % self.checkpoint_every == 0):
@@ -378,18 +451,21 @@ class Simulation:
         in one fused device reduction (`repro.dynamics.diagnostics`).
         Integrators that leave phi/f at a midpoint get one extra force
         evaluation here so the reported energy is consistent."""
-        if not self.integrator.phi_at_step_end and self.steps > 0:
-            # Position-Verlet leaves phi/f at the midpoint; refresh them
-            # at the current positions so the energy is consistent (one
-            # extra force evaluation, only at recording cadence). The
-            # refit/refresh point moves with it, so the drift reference
-            # and the budgets stay paired.
-            self._arrays, self.state, self._slack_dev = self._init_forces(
-                self._arrays, self.state)
-            self._x_eval_ref = self.state.x
-            self.adapter.sync_arrays(self._arrays)
-            self.force_evals += 1
-        return diag.summarize(self.state, self.charges, self.masses)
+        with _trace.span("md.diagnostics"):
+            if not self.integrator.phi_at_step_end and self.steps > 0:
+                # Position-Verlet leaves phi/f at the midpoint; refresh
+                # them at the current positions so the energy is
+                # consistent (one extra force evaluation, only at
+                # recording cadence). The refit/refresh point moves with
+                # it, so the drift reference and the budgets stay paired.
+                self._arrays, self.state, self._slack_dev, self._occ_dev \
+                    = self._call_logged("init_forces", self._init_forces,
+                                        "Simulation.diagnostics",
+                                        self._arrays, self.state)
+                self._x_eval_ref = self.state.x
+                self.adapter.sync_arrays(self._arrays)
+                self.force_evals += 1
+            return diag.summarize(self.state, self.charges, self.masses)
 
     def stats(self) -> dict:
         """Engine counters and budgets. Semantics:
@@ -407,7 +483,12 @@ class Simulation:
           did not fire); ``rebuilds_forced`` — neither cause
           (``rebuild="always"`` steps, checkpoint restores).
         - ``compiles``: total jit compilations of the step executables
-          (advance + force closures, including retired ones).
+          (advance + force closures, including retired ones), counted
+          from the compile/retrace event log (`repro.obs.events`;
+          every executable call site routes through it). The legacy
+          jit-cache sum is kept as ``compiles_cache`` — the two always
+          agree (tier-1 asserted) and the alias exists only as the
+          cross-check.
         - ``retraces``: compiles beyond the baseline paid by the end of
           step 1. This is 0 while every rebuild fits the plan's capacity
           budget — on BOTH strategies: single-device plans re-pad into
@@ -446,8 +527,10 @@ class Simulation:
             rebuilds_interval=self.rebuilds_interval,
             rebuilds_forced=self.rebuilds_forced,
             retraces=self.retraces,
-            compiles=self._total_compiles(),
+            compiles=self.compiles,
+            compiles_cache=self._total_compiles(),
             capacity_growths=self.capacity_growths,
+            capacity_grows=self.capacity_growths,  # serve-naming alias
             force_evals=self.force_evals,
             refit_interval=self.refit_interval,
             rebuild_policy=self.rebuild_policy,
@@ -466,6 +549,9 @@ class Simulation:
             drift_budget_skin=0.5 * self._skin,
             drift_budget=min(b_theta, b_fold),
             plan=self.plan.stats(),
+            **({"occupancy": {k: float(v)
+                              for k, v in self._occ_dev.items()}}
+               if self.profile and self._occ_dev else {}),
         )
 
     def save_checkpoint(self, background: bool = True) -> None:
@@ -503,8 +589,10 @@ class Simulation:
         self._fold_slack = float(self.adapter.fold_slack)
         self._steps_since_rebuild = 0
         self.steps = int(step)
-        self._arrays, self.state, self._slack_dev = self._init_forces(
-            self._arrays, self.state)
+        self._arrays, self.state, self._slack_dev, self._occ_dev = \
+            self._call_logged("init_forces", self._init_forces,
+                              "Simulation.restore_checkpoint",
+                              self._arrays, self.state)
         self.adapter.sync_arrays(self._arrays)
         self.force_evals += 1
         return self.steps

@@ -53,10 +53,17 @@ def main(argv=None):
                     help="flush deadline in seconds")
     ap.add_argument("--forces", action="store_true",
                     help="request forces with every evaluation")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable phase-span tracing and write a "
+                         "Chrome-trace/Perfetto JSON file here")
     args = ap.parse_args(argv)
 
+    from repro import obs
     from repro.core.api import TreecodeConfig
     from repro.serve import ServeFrontend
+
+    if args.trace:
+        obs.enable()
 
     sizes = [int(s) for s in args.sizes.split(",") if s]
     cfg = TreecodeConfig(kernel=args.kernel, degree=args.degree,
@@ -85,6 +92,13 @@ def main(argv=None):
           f"occupancy_mean={s['occupancy_mean']:.2f}")
     print(f"latency p50={s['latency_p50'] * 1e3:.1f} ms "
           f"p99={s['latency_p99'] * 1e3:.1f} ms")
+    if args.trace:
+        obs.write_chrome_trace(args.trace, process_name="repro.serve")
+        totals = obs.phase_totals("serve.")
+        print("phases (ms): " + ", ".join(
+            f"{k.split('.', 1)[1]}={v:.1f}" for k, v in
+            sorted(totals.items(), key=lambda kv: -kv[1])))
+        print(f"wrote {args.trace}")
     if s["retraces"]:
         raise SystemExit("retraces detected: warm buckets recompiled")
 

@@ -1,0 +1,138 @@
+"""Compile/retrace event log: every jit compile, queryable.
+
+The repo's compile accounting predates this module and lives in three
+places with three vocabularies: ``Simulation._total_compiles()`` (sums
+``_cache_size()`` over its closures), ``ServeFrontend`` per-flush deltas
+of ``ensemble_compile_count()``, and the sharded module cache
+``_SPMD_CACHE`` (silent). This module unifies them: call sites that can
+trigger a compile wrap the call in :func:`log_compiles`, which detects a
+jit-cache growth and records an event carrying
+
+- ``kind``   — ``"compile"`` (fresh key) or ``"retrace"`` (a key the
+  owner expected to be warm; the caller classifies, since only it knows
+  its warm set — e.g. a serve bucket after capacity growth is a
+  *compile*, the same bucket without growth is a *retrace*),
+- ``fn``     — the executable's label (``"finish"``, ``"spmd"``, ...),
+- ``key``    — the static cache key (plan signature / bucket key /
+  SPMD budget statics) as a string,
+- ``site``   — the triggering call site (``"Simulation.step"``, ...),
+- ``wall_ms``— wall time of the compiling call (includes trace+XLA
+  compile; for cache-hit calls no event is recorded at all),
+- ``owner``  — the component that owns the executable, so per-object
+  counters can be derived from the global log.
+
+``stats()`` in the engine and frontend are derived from this log (single
+source of truth) and cross-checked against the legacy ``_cache_size``
+sums by the tier-1 suite.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = ["EventLog", "log", "log_compiles", "record", "cache_size"]
+
+MAX_EVENTS = 50_000
+
+
+class EventLog:
+    """Append-only bounded event log with per-owner filtering."""
+
+    def __init__(self, max_events: int = MAX_EVENTS):
+        self._lock = threading.Lock()
+        self._events: List[Dict[str, Any]] = []
+        self._max = max_events
+        self._seq = 0
+
+    def record(self, kind: str, fn: str, key: Any = None,
+               site: str = "", wall_ms: float = 0.0,
+               owner: Optional[str] = None, count: int = 1,
+               **extra: Any) -> Dict[str, Any]:
+        ev = {
+            "seq": 0, "t": time.time(), "kind": kind, "fn": fn,
+            "key": None if key is None else str(key), "site": site,
+            "wall_ms": wall_ms, "owner": owner, "count": count,
+        }
+        if extra:
+            ev.update(extra)
+        with self._lock:
+            self._seq += 1
+            ev["seq"] = self._seq
+            if len(self._events) >= self._max:
+                del self._events[0: self._max // 10]
+            self._events.append(ev)
+        return ev
+
+    def events(self, owner: Optional[str] = None,
+               kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        with self._lock:
+            evs = list(self._events)
+        if owner is not None:
+            evs = [e for e in evs if e["owner"] == owner]
+        if kind is not None:
+            evs = [e for e in evs if e["kind"] == kind]
+        return evs
+
+    def count(self, owner: Optional[str] = None,
+              kind: Optional[str] = None) -> int:
+        return sum(e["count"] for e in self.events(owner, kind))
+
+    def counters(self, owner: Optional[str] = None) -> Dict[str, int]:
+        """Flat ``{kind: total_count}`` for an owner (or globally)."""
+        out: Dict[str, int] = {}
+        for e in self.events(owner):
+            out[e["kind"]] = out.get(e["kind"], 0) + e["count"]
+        return out
+
+    def clear(self, owner: Optional[str] = None) -> None:
+        with self._lock:
+            if owner is None:
+                self._events.clear()
+            else:
+                self._events[:] = [e for e in self._events
+                                   if e["owner"] != owner]
+
+
+#: Process-global log. Components pass an ``owner`` token so their
+#: ``stats()`` can be derived from the shared log without cross-talk.
+log = EventLog()
+
+
+def record(kind: str, fn: str, **kw: Any) -> Dict[str, Any]:
+    """Record an event on the global log (see :meth:`EventLog.record`)."""
+    return log.record(kind, fn, **kw)
+
+
+def cache_size(fn: Any) -> int:
+    """Tracing-cache size of a jitted callable (0 if not jitted)."""
+    try:
+        return fn._cache_size()
+    except Exception:
+        return 0
+
+
+def log_compiles(fn_label: str, fn: Callable, *args: Any,
+                 key: Any = None, site: str = "",
+                 owner: Optional[str] = None,
+                 kind: str = "compile",
+                 **kwargs: Any) -> Tuple[Any, bool]:
+    """Call ``fn(*args, **kwargs)``; if its jit cache grew, log an event.
+
+    Returns ``(result, compiled)``. Cache-hit calls record nothing and
+    read only two cheap ``_cache_size()`` integers, so wrapping every
+    step-loop call is safe. ``kind`` lets the caller pre-classify
+    (``"retrace"`` for a growth it expected not to happen).
+    """
+    before = cache_size(fn)
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    after = cache_size(fn)
+    grew = after > before
+    if grew:
+        if callable(key):  # lazy keys: only materialized on a compile
+            key = key()
+        log.record(kind, fn_label, key=key, site=site,
+                   wall_ms=(time.perf_counter() - t0) * 1e3,
+                   owner=owner, count=after - before)
+    return out, grew

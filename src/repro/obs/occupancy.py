@@ -1,0 +1,121 @@
+"""Device-side occupancy counters and host-side capacity utilization.
+
+Two layers, one purpose: turn padded-capacity *headroom* (a design-time
+guess) into a *measured* utilization number.
+
+- :func:`occupancy_counters` is **jit-safe** and meant to be fused into
+  an already-launched pass (the MD engine rides it on the finish
+  closure as an optional aux output — no extra kernel launches, see
+  DESIGN.md §9). It recomputes the runtime MAC gate on the same inputs
+  as ``_skin_routed_lists`` so skin accept/demote rates reflect the
+  routing the force evaluation actually used, and reports masked-lane
+  waste over the effective lists the kernels iterated.
+- :func:`static_occupancy` is host-side and free: padded-vs-real
+  points/nodes/lanes straight from the plan's array shapes. It feeds
+  ``plan.stats()["occupancy"]``.
+
+All device counters are returned as 0-d jnp arrays in a flat dict so the
+caller can attach them to an existing jitted output pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+__all__ = ["occupancy_counters", "static_occupancy"]
+
+
+def _frac(num, den):
+    den = jnp.maximum(den, 1)
+    return num.astype(jnp.float32) / den.astype(jnp.float32)
+
+
+def occupancy_counters(arrays: Dict[str, Any], *, theta: float,
+                       space, skin: float = 0.0) -> Dict[str, Any]:
+    """Jit-safe occupancy/waste counters over a plan's packed arrays.
+
+    Returns 0-d device scalars:
+
+    - ``target_slot_occupancy``: real targets / padded target slots,
+    - ``approx_lane_occupancy`` / ``direct_lane_occupancy``: active
+      (non ``-1``) lanes over the *effective* routed lists,
+    - ``masked_lane_waste``: 1 − active/total over approx+direct lanes
+      combined (the fraction of kernel work masked off),
+    - with ``skin > 0``: ``skin_pairs``, ``skin_accept_rate``,
+      ``skin_demote_rate`` — how the runtime MAC gate routed the
+      Verlet-skin dual lists this step.
+    """
+    tgt_mask = arrays["tgt_mask"]
+    counters: Dict[str, Any] = {
+        "target_slot_occupancy": jnp.mean(tgt_mask.astype(jnp.float32)),
+    }
+
+    approx_idx = arrays["approx_idx"]
+    direct_idx = arrays["direct_idx"]
+    if skin > 0.0:
+        # Same predicate + inputs as _skin_routed_lists: counters must
+        # describe the routing the force kernels actually saw.
+        from repro.core.eval import _skin_routed_lists
+        from repro.kernels import ops as _ops
+
+        bc, bhw, rb, has = _ops.batch_boxes(arrays["tgt_batched"], tgt_mask)
+        gate_a = _ops.mac_gate(approx_idx, bc, bhw, rb, has,
+                               arrays["node_lo"], arrays["node_hi"],
+                               theta=theta, space=space)
+        skin_slot = (arrays["approx_skin"] != 0) & (approx_idx >= 0)
+        skin_pairs = jnp.sum(skin_slot)
+        skin_accept = jnp.sum(skin_slot & gate_a)
+        counters["skin_pairs"] = skin_pairs
+        counters["skin_accept_rate"] = _frac(skin_accept, skin_pairs)
+        counters["skin_demote_rate"] = _frac(skin_pairs - skin_accept,
+                                             skin_pairs)
+        approx_idx, direct_idx = _skin_routed_lists(arrays, theta, space)
+
+    a_active = jnp.sum(approx_idx >= 0)
+    d_active = jnp.sum(direct_idx >= 0)
+    a_total = approx_idx.size
+    d_total = direct_idx.size
+    counters["approx_lane_occupancy"] = _frac(a_active, jnp.asarray(a_total))
+    counters["direct_lane_occupancy"] = _frac(d_active, jnp.asarray(d_total))
+    counters["masked_lane_waste"] = 1.0 - _frac(
+        a_active + d_active, jnp.asarray(a_total + d_total))
+    return counters
+
+
+def static_occupancy(plan) -> Dict[str, float]:
+    """Host-side padded-vs-real utilization from a plan's array shapes.
+
+    Works on any object with ``arrays`` (the packed dict) plus
+    ``num_targets`` / ``num_sources``; extra keys appear when the
+    corresponding arrays exist. Free to compute — pure shape arithmetic
+    and a few host reductions on already-materialized masks.
+    """
+    arrays = plan.arrays
+    out: Dict[str, float] = {}
+
+    tgt = arrays.get("tgt_batched")
+    if tgt is not None:
+        slots = 1  # all dims but the trailing xyz axis are target slots
+        for d in tgt.shape[:-1]:
+            slots *= int(d)
+        out["target_slots"] = float(slots)
+        out["target_slot_occupancy"] = (
+            float(getattr(plan, "num_targets", 0)) / slots if slots else 0.0)
+
+    leaf = arrays.get("leaf_gather")
+    if leaf is not None:
+        import numpy as np
+        lg = np.asarray(leaf)
+        out["leaf_slot_occupancy"] = (
+            float((lg >= 0).sum()) / lg.size if lg.size else 0.0)
+
+    for name, key in (("approx_idx", "approx_lane_occupancy"),
+                      ("direct_idx", "direct_lane_occupancy"),
+                      ("skin_direct", "skin_direct_lane_occupancy")):
+        a = arrays.get(name)
+        if a is not None and a.size:
+            import numpy as np
+            an = np.asarray(a)
+            out[key] = float((an >= 0).sum()) / an.size
+    return out

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.core import eval as _eval
 from repro.core.api import TreecodeConfig
+from repro.obs import events as _events
+from repro.obs import trace as _trace
 from repro.serve.batched import EnsemblePlan
 
 
@@ -160,6 +162,11 @@ class ServeFrontend:
         self.capacity_grows = 0
         self.latencies: List[float] = []
         self.occupancies: List[float] = []
+        # Owner token scoping this frontend's entries in the global
+        # compile/retrace event log (repro.obs.events). stats() derives
+        # its counters from the log; the attributes above are kept in
+        # lockstep as the legacy cross-check (tier-1 asserted equal).
+        self.obs_owner = f"ServeFrontend@{id(self):x}"
 
     # ------------------------------------------------------------------
 
@@ -177,19 +184,20 @@ class ServeFrontend:
             raise ValueError(
                 f"charges must be ({points.shape[0]},), got {charges.shape}")
 
-        key = bucket_key(cfg, points.shape[0])
-        bucket = self.buckets.get(key)
-        if bucket is None:
-            bucket = self.buckets[key] = _Bucket(cfg)
-        fut = ServeFuture(self, key, forces)
-        bucket.queue.append(
-            _Request(points, charges, kernel_params, fut, self.clock()))
-        if bucket.deadline is None:
-            bucket.deadline = self.clock() + self.flush_deadline
-        bucket.requests += 1
-        self.requests += 1
-        if len(bucket.queue) >= self.max_batch:
-            self._flush_bucket(key, bucket)
+        with _trace.span("serve.enqueue"):
+            key = bucket_key(cfg, points.shape[0])
+            bucket = self.buckets.get(key)
+            if bucket is None:
+                bucket = self.buckets[key] = _Bucket(cfg)
+            fut = ServeFuture(self, key, forces)
+            bucket.queue.append(
+                _Request(points, charges, kernel_params, fut, self.clock()))
+            if bucket.deadline is None:
+                bucket.deadline = self.clock() + self.flush_deadline
+            bucket.requests += 1
+            self.requests += 1
+            if len(bucket.queue) >= self.max_batch:
+                self._flush_bucket(key, bucket)
         return fut
 
     def poll(self) -> int:
@@ -216,14 +224,19 @@ class ServeFrontend:
     # ------------------------------------------------------------------
 
     def _flush_bucket(self, key, bucket: _Bucket) -> None:
+        with _trace.span("serve.flush"):
+            self._flush_bucket_impl(key, bucket)
+
+    def _flush_bucket_impl(self, key, bucket: _Bucket) -> None:
         batch = bucket.queue[:self.max_batch]
         bucket.queue = bucket.queue[self.max_batch:]
         bucket.deadline = (None if not bucket.queue
                            else self.clock() + self.flush_deadline)
 
-        plan = EnsemblePlan.build(
-            bucket.config, [r.points for r in batch],
-            capacities=bucket.capacities, ensemble_width=self.max_batch)
+        with _trace.span("serve.plan_build"):
+            plan = EnsemblePlan.build(
+                bucket.config, [r.points for r in batch],
+                capacities=bucket.capacities, ensemble_width=self.max_batch)
         grew = (bucket.capacities is not None
                 and plan.capacities != bucket.capacities)
         bucket.capacities = plan.capacities          # sticky budget
@@ -242,15 +255,17 @@ class ServeFrontend:
         bucket.warm_kinds.add(kind)
 
         before = _eval.ensemble_compile_count()
-        if want_forces:
-            phi, F = plan.potential_and_forces(charges,
-                                               kernel_params=params)
-            phi.block_until_ready()
-            phis, Fs = plan.split(phi), plan.split(F)
-        else:
-            phi = plan.execute(charges, kernel_params=params)
-            phi.block_until_ready()
-            phis, Fs = plan.split(phi), None
+        t_exec = time.perf_counter()
+        with _trace.span("serve.execute"):
+            if want_forces:
+                phi, F = plan.potential_and_forces(charges,
+                                                   kernel_params=params)
+                phi.block_until_ready()
+                phis, Fs = plan.split(phi), plan.split(F)
+            else:
+                phi = plan.execute(charges, kernel_params=params)
+                phi.block_until_ready()
+                phis, Fs = plan.split(phi), None
         delta = _eval.ensemble_compile_count() - before
 
         self.flushes += 1
@@ -260,23 +275,36 @@ class ServeFrontend:
         if grew:
             self.capacity_grows += 1
             bucket.capacity_grows += 1
+            _events.record("capacity_grow", f"ensemble_{kind}",
+                           key=f"bucket(n<={key[1]})",
+                           site="ServeFrontend._flush_bucket",
+                           owner=self.obs_owner)
         elif delta and warm:
             # a warm bucket (no budget growth, executor kind already
             # compiled) recompiled: a retrace — CI asserts this stays 0
             self.retraces += delta
+        if delta:
+            _events.record("compile", f"ensemble_{kind}",
+                           key=f"bucket(n<={key[1]}, {kind})",
+                           site="ServeFrontend._flush_bucket",
+                           wall_ms=(time.perf_counter() - t_exec) * 1e3,
+                           owner=self.obs_owner, count=delta,
+                           retrace=bool(warm and not grew))
         self.occupancies.append(plan.occupancy)
 
-        now = self.clock()
-        for i, r in enumerate(batch):
-            lat = now - r.t_submit
-            self.latencies.append(lat)
-            out = np.asarray(phis[i])
-            if r.future.want_forces:
-                if Fs is None:
-                    raise RuntimeError("forces requested but not computed")
-                r.future._resolve((out, np.asarray(Fs[i])), lat)
-            else:
-                r.future._resolve(out, lat)
+        with _trace.span("serve.resolve"):
+            now = self.clock()
+            for i, r in enumerate(batch):
+                lat = now - r.t_submit
+                self.latencies.append(lat)
+                out = np.asarray(phis[i])
+                if r.future.want_forces:
+                    if Fs is None:
+                        raise RuntimeError(
+                            "forces requested but not computed")
+                    r.future._resolve((out, np.asarray(Fs[i])), lat)
+                else:
+                    r.future._resolve(out, lat)
 
     # ------------------------------------------------------------------
 
@@ -284,9 +312,13 @@ class ServeFrontend:
         return sum(len(b.queue) for b in self.buckets.values())
 
     def stats(self) -> dict:
-        """Service counters, shape-consistent with `Simulation.stats()`:
-        compiles/retraces are executable-cache deltas, the latency and
-        occupancy summaries aggregate over resolved requests/flushes."""
+        """Service counters, shape-consistent with `Simulation.stats()`.
+
+        ``compiles`` / ``retraces`` / ``capacity_growths`` are derived
+        from the compile/retrace event log (`repro.obs.events`, scoped
+        by this frontend's ``obs_owner``) — the single source of truth;
+        ``capacity_grows`` is the legacy alias and the running
+        attributes stay in lockstep as the cross-check."""
         lat = sorted(self.latencies)
 
         def pct(p):
@@ -295,6 +327,12 @@ class ServeFrontend:
             return float(lat[min(len(lat) - 1,
                                  int(round(p * (len(lat) - 1))))])
 
+        evs = _events.log.events(owner=self.obs_owner)
+        compiles = sum(e["count"] for e in evs if e["kind"] == "compile")
+        retraces = sum(e["count"] for e in evs
+                       if e["kind"] == "compile" and e.get("retrace"))
+        grows = sum(e["count"] for e in evs
+                    if e["kind"] == "capacity_grow")
         return dict(
             strategy="serve",
             requests=self.requests,
@@ -304,9 +342,10 @@ class ServeFrontend:
             num_buckets=len(self.buckets),
             max_batch=self.max_batch,
             flush_deadline=self.flush_deadline,
-            compiles=self.compiles,
-            retraces=self.retraces,
-            capacity_grows=self.capacity_grows,
+            compiles=compiles,
+            retraces=retraces,
+            capacity_growths=grows,
+            capacity_grows=grows,
             latency_p50=pct(0.50),
             latency_p99=pct(0.99),
             occupancy_mean=(float(np.mean(self.occupancies))
