@@ -145,6 +145,11 @@ class TreecodeConfig:
     approx_r2: str = "diff"      # diff | matmul (MXU form, beyond-paper)
     dtype: str = "auto"          # auto | float32 | float64
     donate_charges: bool = False
+    # Plan construction backend: "host" is the paper's CPU setup phase
+    # (`eval.prepare_plan`); "device" builds the whole plan on the
+    # accelerator from a Morton ordering (`repro.devtree`) so rebuilds
+    # never sync particle positions to the host.
+    build_backend: str = "host"  # host | device
 
     def __post_init__(self):
         def bad(msg):
@@ -174,6 +179,14 @@ class TreecodeConfig:
                 f"choose from {_APPROX_R2}")
         if self.dtype not in _DTYPES:
             bad(f"unknown dtype {self.dtype!r}; choose from {_DTYPES}")
+        if self.build_backend not in ("host", "device"):
+            bad(f"unknown build_backend {self.build_backend!r}; "
+                f"choose from ('host', 'device')")
+        if self.build_backend == "device" \
+                and self.precompute == "hierarchical":
+            bad("build_backend='device' does not support "
+                "precompute='hierarchical' (the upward-pass tables are "
+                "host-built); use precompute='direct'")
         if not isinstance(self.kernel, (str, Kernel)):
             bad(f"kernel must be a registry name or a Kernel instance, "
                 f"got {type(self.kernel).__name__}")
@@ -424,6 +437,7 @@ class SingleDevicePlan:
         return dict(
             strategy="single_device",
             nranks=1,
+            build_backend=getattr(self.inner, "build_backend", "host"),
             num_targets=self.inner.num_targets,
             num_sources=self.inner.num_sources,
             num_nodes=tree.num_nodes,
@@ -460,11 +474,27 @@ class SingleDevicePlan:
             capacities = self.inner.capacities
         return _plan_single(self.config, self.kernel, targets,
                             targets if sources is None else sources,
-                            capacities=capacities)
+                            capacities=capacities,
+                            pair_caps=(self.inner.dev or {}).get("pair_caps")
+                            if self.inner.build_backend == "device" else None)
 
 
 def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
-                 sources, capacities=None) -> SingleDevicePlan:
+                 sources, capacities=None,
+                 pair_caps=None) -> SingleDevicePlan:
+    if config.build_backend == "device":
+        # Device build: positions stay wherever they are (jnp arrays are
+        # NOT pulled to host), and the plan comes back capacity-padded.
+        from repro.devtree import build as _devbuild
+        dtype = _resolve_dtype(config, targets)
+        inner = _devbuild.prepare_plan_device(
+            targets, sources, theta=config.theta, degree=config.degree,
+            leaf_size=config.leaf_size,
+            batch_size=config.resolved_batch_size(),
+            space=config.space, skin=config.skin, dtype=dtype,
+            capacities=None if capacities == "auto" else capacities,
+            pair_caps=pair_caps)
+        return SingleDevicePlan(config, kernel, inner, dtype)
     targets = np.asarray(targets)
     sources = np.asarray(sources)
     dtype = _resolve_dtype(config, targets)

@@ -74,6 +74,12 @@ class Plan:
     # pack), measured unconditionally — the build is heavy host work, so
     # a few perf_counter reads are free. Surfaced via plan.stats().
     build_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Which builder produced the plan ("host" | "device") and, for the
+    # device path, the `repro.devtree` metadata (dense-octree occupancy
+    # masks, leaf/batch tables, permutations) that backs the lazy
+    # Tree/Batches proxies. Host consumers never touch `dev` directly.
+    build_backend: str = "host"
+    dev: "dict | None" = None
 
 
 def prepare_plan(
@@ -143,29 +149,37 @@ def _prepare_plan_timed(targets, sources, *, theta, degree, leaf_size,
     skin_direct_node = _pad_cols(lists.skin_direct_node,
                                  sd_pad).astype(np.int32)
 
-    # Targets packed batch-contiguously, padded per row.
+    def _range_table(starts, counts, width, fill=-1):
+        """(rows, width) table of [start, start+count) runs, `fill`-padded.
+
+        One broadcast per table instead of a Python loop per row — at
+        10^5 particles the per-row loops dominated the pack phase
+        (~150 ms flat), swamping the actual array materialization.
+        """
+        ar = np.arange(width, dtype=np.int64)
+        return np.where(ar[None, :] < counts[:, None],
+                        starts[:, None] + ar[None, :], fill)
+
+    # Targets packed batch-contiguously, padded per row. Batches are in
+    # start order, so batch b owns tgt_sorted[start[b] : start[b]+count].
     nb = batches.num_batches
     tgt_sorted = targets[batches.perm]
+    b_counts = batches.count.astype(np.int64)
+    rows = np.repeat(np.arange(nb, dtype=np.int64), b_counts)
+    within = np.arange(targets.shape[0]) - np.repeat(
+        batches.start.astype(np.int64), b_counts)
     tgt_b = np.zeros((nb, nb_pad, 3), dtype)
     tgt_mask = np.zeros((nb, nb_pad), bool)
-    pos_of_batchorder = np.empty(targets.shape[0], np.int64)
-    cursor = 0
-    for b in range(nb):
-        c = int(batches.count[b])
-        tgt_b[b, :c] = tgt_sorted[cursor:cursor + c]
-        tgt_mask[b, :c] = True
-        pos_of_batchorder[cursor:cursor + c] = b * nb_pad + np.arange(c)
-        cursor += c
+    tgt_b[rows, within] = tgt_sorted
+    tgt_mask[rows, within] = True
+    pos_of_batchorder = rows * nb_pad + within
     # phi_input[j] = phi_flat[gather_index[j]] for input target index j.
     inv_perm = np.argsort(batches.perm, kind="stable")
     gather_index = pos_of_batchorder[inv_perm].astype(np.int32)
 
     # Leaf gather table (leaf slot -> padded particle indices, tree order).
-    nleaves = tree.num_leaves
-    leaf_gather = np.full((nleaves, nl_pad), -1, np.int64)
-    for slot, node in enumerate(tree.leaf_ids):
-        s, c = int(tree.start[node]), int(tree.count[node])
-        leaf_gather[slot, :c] = np.arange(s, s + c)
+    leaf_gather = _range_table(tree.start[tree.leaf_ids],
+                               tree.count[tree.leaf_ids], nl_pad)
 
     # Per-level cluster buckets for the modified-charge kernels. Padded
     # particle counts are bucketed to powers of two so moving-particle
@@ -173,10 +187,7 @@ def _prepare_plan_timed(targets, sources, *, theta, degree, leaf_size,
     bucket_gather, bucket_nodes = [], []
     for node_ids in tree.levels():
         m_pad = _round_pow2(int(tree.count[node_ids].max()))
-        g = np.full((len(node_ids), m_pad), -1, np.int64)
-        for r, node in enumerate(node_ids):
-            s, c = int(tree.start[node]), int(tree.count[node])
-            g[r, :c] = np.arange(s, s + c)
+        g = _range_table(tree.start[node_ids], tree.count[node_ids], m_pad)
         bucket_gather.append(jnp.asarray(g, jnp.int32))
         bucket_nodes.append(jnp.asarray(node_ids, jnp.int32))
 

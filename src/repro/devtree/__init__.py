@@ -1,0 +1,12 @@
+"""Device-resident tree pipeline: Morton build + on-device lists.
+
+`repro.devtree` constructs a complete treecode plan on the accelerator:
+Morton (Z-order) radix ordering of the particles (`morton`), a
+fixed-depth budgeted octree from the sorted codes (`build`), and a
+vectorized level-synchronous interaction-list traversal (`lists`). The
+output is an ordinary `repro.core.eval.Plan` — same `arrays` schema,
+same `Capacities` budget contract — so the jitted executors, the device
+refit, and the MD drift engine consume it unchanged. Selected via
+``TreecodeConfig(build_backend="device")``.
+"""
+from repro.devtree.build import prepare_plan_device  # noqa: F401

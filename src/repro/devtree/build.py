@@ -1,0 +1,608 @@
+"""Fixed-depth budgeted octree from Morton codes, entirely on device.
+
+The host build is a recursive midpoint bisection; the device build is
+the standard GPU alternative (Gaburov & Bedorf, arXiv:1005.5384): a
+DENSE complete octree of static depth over the Morton grid. A cell at
+level l is a 3l-bit code prefix, so after the radix sort every cell
+owns a contiguous particle run recoverable with one segmented
+reduction per level — no recursion, no data-dependent shapes:
+
+  * per level: particle counts via `segment_sum` over the code prefix,
+    starts via exclusive cumsum, SHRUNK cell boxes via
+    `segment_min`/`segment_max` (the same minimal-bounding-box
+    semantics the host tree has after its shrink step);
+  * occupancy masks: a cell is ACTIVE if it is non-empty and its
+    parent is an active internal node; an active cell is a LEAF if its
+    count fits `leaf_size` or it sits at the bottom level (oversized
+    bottom cells simply stay exact via direct evaluation);
+  * leaves/batches are enumerated into budgeted tables by an argsort
+    on start (so leaf slots are in particle order, as on host), and
+    every structure is padded to a `Capacities` budget with the same
+    sentinel conventions as `eval.pad_plan` (-1 gathers, [0,1] boxes,
+    scratch-node ids).
+
+Node ids are dense: gid = OFF[l] + cell, OFF[l] = (8^l - 1) / 7, so
+ancestor/child arithmetic is pure bit shifts and the padded node-array
+budget is the static M = OFF[depth + 1] — which is why the depth is
+capped (`MAX_DEPTH`): q_hat is O(num_nodes * (degree+1)^3) memory.
+
+The produced `Plan` has the exact `arrays` schema of the host
+`prepare_plan` (same keys, dtypes, sentinel rules), plus `plan.dev`
+metadata backing lazy host `Tree`/`Batches` proxies — diagnostics and
+the sharded/adapter paths materialize them on first touch; the step
+loop never does, so a budgeted rebuild syncs only the needs vector
+(a few dozen ints) and the two slack scalars.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eval as _eval
+from repro.core import interaction as _interaction
+from repro.core.space import FREE as _FREE
+from repro.core.tree import Batches, Tree
+from repro.devtree import lists as _lists
+from repro.devtree import morton as _morton
+from repro.obs import events as _events
+from repro.obs import trace as _trace
+
+#: Dense-octree depth cap: num_nodes = (8^(D+1) - 1)/7 and the
+#: modified-charge table is O(num_nodes * (degree+1)^3), so D = 5
+#: (~37k cells) is the deepest budget-friendly dense tree. Beyond
+#: ~10^6 particles at default leaf sizes the bottom cells simply hold
+#: more than `leaf_size` particles and stay exact (direct) — correct,
+#: but with growing direct work; see DESIGN.md §10.
+MAX_DEPTH = 5
+
+
+def depth_for(n: int, leaf_size: int, max_depth: int = MAX_DEPTH) -> int:
+    """Smallest depth whose 8^d cells could hold n at leaf_size, capped."""
+    d = 1
+    while (8 ** d) * max(leaf_size, 1) < n and d < max_depth:
+        d += 1
+    return d
+
+
+@functools.lru_cache(maxsize=None)
+def _static_nodes(depth: int):
+    """(offsets, M, level_of, cell_of, parent_of) for the dense tree."""
+    off = tuple((8 ** l - 1) // 7 for l in range(depth + 2))
+    m = off[depth + 1]
+    level = np.concatenate(
+        [np.full(8 ** l, l, np.int32) for l in range(depth + 1)])
+    cell = np.concatenate(
+        [np.arange(8 ** l, dtype=np.int32) for l in range(depth + 1)])
+    parent = np.full(m, -1, np.int32)
+    for l in range(1, depth + 1):
+        k = np.arange(8 ** l, dtype=np.int32)
+        parent[off[l] + k] = off[l - 1] + (k >> 3)
+    return off, m, level, cell, parent
+
+
+def _level_structs(x_sorted, codes, *, depth, leaf_size, bits):
+    """Dense per-cell arrays for all levels, concatenated in node-id order.
+
+    Segmented reductions run ONCE, at the deepest level — XLA's CPU
+    backend lowers them to serial scatters, the slowest primitive in
+    the build. Bottom counts come from the sorted-run boundaries (one
+    `searchsorted` over the code prefix); every coarser level then
+    aggregates its children with a (cells/8, 8) reshape reduction,
+    exact because a parent's particle run is the concatenation of its
+    children's runs and min/max ignore the empty-segment identities.
+    """
+    nseg = 8 ** depth
+    seg = jnp.right_shift(codes, 3 * (bits - depth))
+    bounds = jnp.searchsorted(
+        seg, jnp.arange(nseg + 1, dtype=seg.dtype)).astype(jnp.int32)
+    cnt = bounds[1:] - bounds[:-1]
+    start = bounds[:-1]
+    lo = jax.ops.segment_min(x_sorted, seg, nseg, indices_are_sorted=True)
+    hi = jax.ops.segment_max(x_sorted, seg, nseg, indices_are_sorted=True)
+    per = {depth: (cnt, start, lo, hi)}
+    for l in range(depth - 1, -1, -1):
+        cnt = cnt.reshape(-1, 8).sum(axis=1)
+        start = start.reshape(-1, 8)[:, 0]
+        lo = lo.reshape(-1, 8, 3).min(axis=1)
+        hi = hi.reshape(-1, 8, 3).max(axis=1)
+        per[l] = (cnt, start, lo, hi)
+    out = {k: [] for k in ("count", "start", "lo", "hi", "active", "leaf")}
+    parent_internal = None
+    for l in range(depth + 1):
+        cnt, start, lo, hi = per[l]
+        nonempty = cnt > 0
+        # Empty cells keep the [0, 1] sentinel box (pad_plan convention).
+        lo = jnp.where(nonempty[:, None], lo, 0.0)
+        hi = jnp.where(nonempty[:, None], hi, 1.0)
+        act = nonempty if l == 0 else nonempty & jnp.repeat(
+            parent_internal, 8)
+        leaf = act & ((cnt <= leaf_size) | (l == depth))
+        parent_internal = act & ~leaf
+        for k, v in zip(("count", "start", "lo", "hi", "active", "leaf"),
+                        (cnt, start, lo, hi, act, leaf)):
+            out[k].append(v)
+    return {k: jnp.concatenate(v, axis=0) for k, v in out.items()}
+
+
+def _leaf_tables(st, *, cap, width, level_np, cell_np):
+    """Budgeted enumeration of the leaf cells of a level structure.
+
+    Rows are in particle (start) order — the host `Tree.leaf_ids`
+    convention — so leaf particle ranges tile [0, N) across valid rows.
+    Serves both the source leaves and (applied to the target tree) the
+    batches. Rows past the true leaf count are sentinel rows.
+    """
+    m = st["count"].shape[0]
+    n = jnp.sum(st["leaf"].astype(jnp.int32))
+    key = jnp.where(st["leaf"], st["start"], jnp.int32(2 ** 31 - 1))
+    order = jnp.argsort(key).astype(jnp.int32)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    ids = order[jnp.clip(idx, 0, m - 1)]
+    valid = (idx < m) & (idx < n)
+    start = jnp.where(valid, st["start"][ids], 0)
+    count = jnp.where(valid, st["count"][ids], 0)
+    ar = jnp.arange(width, dtype=jnp.int32)
+    gather = jnp.where(ar[None, :] < count[:, None],
+                       start[:, None] + ar[None, :], -1)
+    lvl = jnp.asarray(level_np)
+    cll = jnp.asarray(cell_np)
+    return dict(
+        ids=jnp.where(valid, ids, -1), n=n, valid=valid,
+        start=start, count=count, gather=gather,
+        level=jnp.where(valid, lvl[ids], -9),
+        cell=jnp.where(valid, cll[ids], 0),
+        lo=jnp.where(valid[:, None], st["lo"][ids], 0.0),
+        hi=jnp.where(valid[:, None], st["hi"][ids], 1.0),
+        index=jnp.full((m,), -1, jnp.int32).at[
+            jnp.where(valid, ids, m)].set(idx, mode="drop"),
+        max_count=jnp.max(jnp.where(st["leaf"], st["count"], 0)),
+    )
+
+
+def _bucket_tables(st, *, off, depth, rows, widths, scratch):
+    """Per-level active-node gather tables for the q_hat kernels."""
+    gathers, nodes = [], []
+    for l in range(depth + 1):
+        nseg = 8 ** l
+        sl = slice(off[l], off[l] + nseg)
+        act = st["active"][sl]
+        n_act = jnp.sum(act.astype(jnp.int32))
+        order = jnp.argsort(~act).astype(jnp.int32)  # active first, k order
+        idx = jnp.arange(rows[l], dtype=jnp.int32)
+        cells = order[jnp.clip(idx, 0, nseg - 1)]
+        valid = (idx < nseg) & (idx < n_act)
+        start = jnp.where(valid, st["start"][sl][cells], 0)
+        count = jnp.where(valid, st["count"][sl][cells], 0)
+        ar = jnp.arange(widths[l], dtype=jnp.int32)
+        gathers.append(jnp.where(ar[None, :] < count[:, None],
+                                 start[:, None] + ar[None, :], -1))
+        nodes.append(jnp.where(valid, off[l] + cells, scratch)
+                     .astype(jnp.int32))
+    return tuple(gathers), tuple(nodes)
+
+
+def _build_dims(caps: "_eval.Capacities"):
+    """The subset of the budget the build phase shapes depend on —
+    list-lane widths excluded, so the needs pass (widths still at their
+    placeholder) and the final build share one compiled executable."""
+    return (caps.num_leaves, caps.leaf_width, caps.num_batches,
+            caps.batch_width, caps.num_nodes, caps.scratch_node,
+            caps.bucket_rows, caps.bucket_widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dims", "depth", "tdepth", "leaf_size", "batch_size", "bits"))
+def _build_phase(xs_sorted, codes_s, xt_sorted, codes_t, order_t, *,
+                 dims, depth, tdepth, leaf_size, batch_size, bits):
+    """Sorted particles -> budgeted tree/batch/pack arrays, one launch."""
+    (n_leaf_cap, leaf_w, n_batch_cap, batch_w,
+     num_nodes, scratch, bucket_rows, bucket_widths) = dims
+    off, m, level_np, cell_np, _ = _static_nodes(depth)
+    toff, tm, tlevel_np, tcell_np, _ = _static_nodes(tdepth)
+
+    ss = _level_structs(xs_sorted, codes_s, depth=depth,
+                        leaf_size=leaf_size, bits=bits)
+    tt = _level_structs(xt_sorted, codes_t, depth=tdepth,
+                        leaf_size=batch_size, bits=bits)
+    leaf = _leaf_tables(ss, cap=n_leaf_cap, width=leaf_w,
+                        level_np=level_np, cell_np=cell_np)
+    batch = _leaf_tables(tt, cap=n_batch_cap, width=batch_w,
+                         level_np=tlevel_np, cell_np=tcell_np)
+
+    # Target slab packing + input-order gather, the device analogue of
+    # the host pack: scatter each sorted target's padded slot, then
+    # compose with the inverse sort permutation.
+    n_t = xt_sorted.shape[0]
+    g = batch["gather"]
+    mask = g >= 0
+    tgt_b = jnp.where(mask[..., None],
+                      xt_sorted[jnp.clip(g, 0, n_t - 1)], 0.0)
+    slots = jnp.arange(g.size, dtype=jnp.int32).reshape(g.shape)
+    pos_sorted = jnp.zeros((n_t,), jnp.int32).at[
+        jnp.where(mask, g, n_t)].set(slots, mode="drop")
+    inv_t = jnp.zeros((n_t,), jnp.int32).at[order_t].set(
+        jnp.arange(n_t, dtype=jnp.int32))
+    gather_index = pos_sorted[inv_t]
+
+    bucket_gather, bucket_nodes = _bucket_tables(
+        ss, off=off, depth=depth, rows=bucket_rows, widths=bucket_widths,
+        scratch=scratch)
+
+    dt = xs_sorted.dtype
+    node_lo = jnp.zeros((num_nodes, 3), dt).at[:m].set(ss["lo"].astype(dt))
+    node_hi = jnp.ones((num_nodes, 3), dt).at[:m].set(ss["hi"].astype(dt))
+
+    busy_rows, busy_widths = [], []
+    for l in range(depth + 1):
+        sl = slice(off[l], off[l] + 8 ** l)
+        act = ss["active"][sl]
+        busy_rows.append(jnp.sum(act.astype(jnp.int32)))
+        busy_widths.append(jnp.max(jnp.where(act, ss["count"][sl], 0)))
+
+    return dict(
+        node_count=ss["count"], node_start=ss["start"],
+        node_active=ss["active"], node_leaf=ss["leaf"],
+        node_lo=node_lo, node_hi=node_hi,
+        leaf=leaf, batch=batch,
+        tgt_batched=tgt_b, tgt_mask=mask, gather_index=gather_index,
+        bucket_gather=bucket_gather, bucket_nodes=bucket_nodes,
+        need=dict(num_leaves=leaf["n"], leaf_width=leaf["max_count"],
+                  num_batches=batch["n"], batch_width=batch["max_count"],
+                  bucket_rows=tuple(busy_rows),
+                  bucket_widths=tuple(busy_widths)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "depth", "tdepth", "leaf_size", "batch_size", "bits"))
+def _needs_phase(xs_sorted, codes_s, xt_sorted, codes_t, *,
+                 depth, tdepth, leaf_size, batch_size, bits):
+    """First-build probe: the structural needs, 1-D reductions only.
+
+    Runs before any budget exists, so it must not materialize anything
+    budget-shaped — every output is a scalar (bounded by the static
+    dense-grid sizes, never by a capacity guess)."""
+    off, _, _, _, _ = _static_nodes(depth)
+    ss = _level_structs(xs_sorted, codes_s, depth=depth,
+                        leaf_size=leaf_size, bits=bits)
+    tt = _level_structs(xt_sorted, codes_t, depth=tdepth,
+                        leaf_size=batch_size, bits=bits)
+    rows, widths = [], []
+    for l in range(depth + 1):
+        sl = slice(off[l], off[l] + 8 ** l)
+        act = ss["active"][sl]
+        rows.append(jnp.sum(act.astype(jnp.int32)))
+        widths.append(jnp.max(jnp.where(act, ss["count"][sl], 0)))
+    return dict(
+        num_leaves=jnp.sum(ss["leaf"].astype(jnp.int32)),
+        leaf_width=jnp.max(jnp.where(ss["leaf"], ss["count"], 0)),
+        num_batches=jnp.sum(tt["leaf"].astype(jnp.int32)),
+        batch_width=jnp.max(jnp.where(tt["leaf"], tt["count"], 0)),
+        bucket_rows=tuple(rows), bucket_widths=tuple(widths),
+    )
+
+
+def _qcap(x, floor: int = 1024) -> int:
+    """Quantized pair budget: the ladder {1, 1.25, 1.5, 1.75} * 2^k.
+
+    Coarse enough that replans at steady state never see a new static
+    shape from need jitter, fine enough (+25% steps) that the padded
+    traversal work tracks the true pair counts."""
+    v = floor
+    while v < int(x):
+        v += (1 << (v.bit_length() - 1)) // 4
+    return v
+
+
+def _logged(label, fn, *args, **kwargs):
+    out, _ = _events.log_compiles(label, fn, *args, owner="devtree",
+                                  site="devtree.build", **kwargs)
+    return out
+
+
+def _ints(tree):
+    """Device needs pytree -> host ints (the tiny per-rebuild sync)."""
+    host = jax.device_get(tree)
+    return jax.tree.map(lambda v: int(v), host)
+
+
+class _LazyStruct:
+    """Materialize-on-first-touch proxy for host `Tree`/`Batches`.
+
+    The step loop never reads the host trees; diagnostics and the
+    adapter init do. Deferring the device->host sync to that first
+    access keeps the budgeted-rebuild path free of position syncs.
+    Snapshot semantics match the host path: geometry is as of build
+    time (host plans keep their build-time tree across refits too).
+    """
+
+    def __init__(self, thunk):
+        self._thunk = thunk
+        self._obj = None
+
+    def _materialize(self):
+        if self._obj is None:
+            self._obj = self._thunk()
+        return self._obj
+
+    def __getattr__(self, name):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self._materialize(), name)
+
+
+def _materialize_tree(dev, node_lo, node_hi) -> Tree:
+    depth = dev["depth"]
+    off, m, level, cell, parent = _static_nodes(depth)
+    count = np.asarray(dev["node_count"]).astype(np.int64)
+    start = np.asarray(dev["node_start"]).astype(np.int64)
+    active = np.asarray(dev["node_active"])
+    leafm = np.asarray(dev["node_leaf"])
+    lo = np.asarray(node_lo)[:m]
+    hi = np.asarray(node_hi)[:m]
+    children = np.full((m, 8), -1, np.int64)
+    for l in range(depth):
+        k = np.arange(8 ** l)
+        par = off[l] + k
+        kids = off[l + 1] + (k[:, None] * 8 + np.arange(8)[None, :])
+        link = (active[kids] & active[par][:, None]
+                & ~leafm[par][:, None])
+        children[par] = np.where(link, kids, -1)
+    n_leaves = int(dev["n_leaves"])
+    leaf_ids = np.asarray(dev["leaf_ids"])[:n_leaves].astype(np.int64)
+    leaf_index = np.full(m, -1, np.int64)
+    leaf_index[leaf_ids] = np.arange(n_leaves)
+    return Tree(
+        lo=lo, hi=hi, center=0.5 * (lo + hi),
+        radius=0.5 * np.linalg.norm(hi - lo, axis=1),
+        start=start, count=count, level=level.astype(np.int64),
+        parent=parent.astype(np.int64), children=children,
+        is_leaf=leafm, perm=np.asarray(dev["src_perm"]).astype(np.int64),
+        leaf_ids=leaf_ids, leaf_index=leaf_index,
+    )
+
+
+def _materialize_batches(dev) -> Batches:
+    nb = int(dev["n_batches"])
+    lo = np.asarray(dev["b_lo"])[:nb]
+    hi = np.asarray(dev["b_hi"])[:nb]
+    return Batches(
+        center=0.5 * (lo + hi),
+        radius=0.5 * np.linalg.norm(hi - lo, axis=1),
+        start=np.asarray(dev["b_start"])[:nb].astype(np.int64),
+        count=np.asarray(dev["b_count"])[:nb].astype(np.int64),
+        perm=np.asarray(dev["tgt_perm"]).astype(np.int64),
+        half_extent=0.5 * (hi - lo),
+    )
+
+
+def prepare_plan_device(
+    targets, sources, *, theta, degree, leaf_size, batch_size,
+    space=_FREE, skin=0.0, dtype=None, capacities=None,
+    headroom: float = 1.15, base: int = 8,
+    depth=None, batch_depth=None, pair_caps=None,
+) -> "_eval.Plan":
+    """Device-resident `prepare_plan`: same contract, no host tree.
+
+    With ``capacities=None`` (first build) a cheap 1-D needs probe plus
+    a count-only traversal size the budget; with an existing
+    `Capacities` (the replan path) the build runs straight at the
+    budgeted shapes and syncs only the needs vector — overflow grows
+    the budget geometrically (a `capacity_growth` event + rebuild, the
+    same deliberate-retrace contract as the host `pad_plan` path).
+
+    `depth`/`batch_depth` override the derived dense-octree depths —
+    the sharded path pins a common depth across ranks so the per-rank
+    plans stack into one budget. `pair_caps` carries the internal
+    traversal budgets (frontier pairs, skin pairs) from a previous plan
+    so replans hit the already-compiled list pass.
+    """
+    if skin < 0.0:
+        raise ValueError(f"skin must be >= 0, got {skin}")
+    with _trace.span("plan.build"):
+        return _prepare_device_timed(
+            targets, sources, theta=theta, degree=degree,
+            leaf_size=leaf_size, batch_size=batch_size, space=space,
+            skin=skin, dtype=dtype, capacities=capacities,
+            headroom=headroom, base=base, depth=depth,
+            batch_depth=batch_depth, pair_caps=pair_caps)
+
+
+def _prepare_device_timed(targets, sources, *, theta, degree, leaf_size,
+                          batch_size, space, skin, dtype, capacities,
+                          headroom, base, depth, batch_depth, pair_caps):
+    build_ms = {}
+    shared = targets is sources
+    xt = jnp.asarray(targets) if dtype is None else jnp.asarray(
+        targets, dtype)
+    xs = xt if shared else (jnp.asarray(sources) if dtype is None
+                            else jnp.asarray(sources, dtype))
+    n_t, n_s = int(xt.shape[0]), int(xs.shape[0])
+    if n_t == 0 or n_s == 0:
+        raise ValueError("cannot build a tree over zero particles")
+    d_src = depth if depth is not None else depth_for(n_s, leaf_size)
+    d_tgt = (batch_depth if batch_depth is not None
+             else depth_for(n_t, batch_size))
+    bits = _morton.BITS
+    off, m, _, _, parent_np = _static_nodes(d_src)
+    theta, skin = float(theta), float(skin)
+    degree = int(degree)
+
+    t0 = time.perf_counter()
+    with _trace.span("devtree.morton"):
+        xs_sorted, codes_s, order_s = _logged(
+            "devtree.morton", _morton.sort_phase, xs, space=space)
+        if shared:
+            xt_sorted, codes_t, order_t = xs_sorted, codes_s, order_s
+        else:
+            xt_sorted, codes_t, order_t = _logged(
+                "devtree.morton", _morton.sort_phase, xt, space=space)
+        jax.block_until_ready((xs_sorted, xt_sorted))
+    t1 = time.perf_counter()
+    build_ms["morton"] = (t1 - t0) * 1e3
+
+    static_kw = dict(depth=d_src, tdepth=d_tgt, leaf_size=int(leaf_size),
+                     batch_size=int(batch_size), bits=bits)
+    lists_kw = dict(depth=d_src, off=off, theta=theta, skin=skin,
+                    degree=degree, space=space)
+
+    def full_need(bneed, lneed):
+        return dict(
+            bneed, num_nodes=m, depth=d_src + 1, upward_rows=(),
+            approx_width=lneed["approx_width"],
+            direct_width=lneed["direct_width"],
+            skin_direct_width=lneed["skin_direct_width"])
+
+    def run_lists(struct, widths, pcaps):
+        return _logged(
+            "devtree.lists", _lists.lists_phase,
+            struct["node_lo"], struct["node_hi"], struct["node_count"],
+            struct["node_start"], struct["node_active"],
+            struct["node_leaf"], struct["leaf"]["start"],
+            struct["leaf"]["valid"], struct["batch"]["lo"],
+            struct["batch"]["hi"], struct["batch"]["valid"],
+            widths=widths, pair_caps=pcaps, **lists_kw)
+
+    def guess_pairs(nb_cap):
+        return (tuple(_qcap(min(nb_cap * 8 ** l, 128 * nb_cap))
+                      for l in range(d_src + 1)),
+                _qcap(32 * nb_cap), _qcap(4 * nb_cap))
+
+    def fit_pairs(pcaps, lneed):
+        return (tuple(max(c, _qcap(headroom * f)) for c, f in
+                      zip(pcaps[0], lneed["frontier_pairs"])),
+                max(pcaps[1], _qcap(headroom * lneed["run_pairs"])),
+                max(pcaps[2], _qcap(headroom * lneed["skin_pairs"])))
+
+    caps = None if capacities == "auto" else capacities
+    if caps is None:
+        # First build: probe the structural needs (1-D pass), build at
+        # placeholder list widths, count the lists, then lock the budget.
+        with _trace.span("devtree.needs"):
+            bneed = _ints(_logged(
+                "devtree.needs", _needs_phase, xs_sorted, codes_s,
+                xt_sorted, codes_t, **static_kw))
+            probe = _eval.Capacities.for_need(
+                full_need(bneed, dict(approx_width=1, direct_width=1,
+                                      skin_direct_width=1)),
+                headroom=headroom, base=base)
+            struct = _logged(
+                "devtree.build", _build_phase, xs_sorted, codes_s,
+                xt_sorted, codes_t, order_t, dims=_build_dims(probe),
+                **static_kw)
+            probe_pairs = guess_pairs(probe.num_batches)
+            _, lneed, _, _ = run_lists(struct, (0, 0, 0), probe_pairs)
+            lneed = _ints(lneed)
+            caps = _eval.Capacities.for_need(
+                full_need(bneed, lneed), headroom=headroom, base=base)
+            pair_caps = fit_pairs(
+                ((1,) * (d_src + 1), 1, 1), lneed)
+        build_ms["needs"] = (time.perf_counter() - t1) * 1e3
+    if caps.depth != d_src + 1:
+        raise ValueError(
+            f"device capacities are bound to the dense-octree depth: "
+            f"budget has depth {caps.depth}, this build derives "
+            f"{d_src + 1} (N={n_s}, leaf_size={leaf_size})")
+    if caps.num_nodes < m + 1:
+        raise ValueError(
+            f"device capacities too small for the dense octree: "
+            f"num_nodes budget {caps.num_nodes} < {m} cells + scratch")
+    if pair_caps is None:
+        pair_caps = guess_pairs(caps.num_batches)
+
+    for _ in range(8):
+        tb = time.perf_counter()
+        with _trace.span("devtree.build"):
+            struct = _logged(
+                "devtree.build", _build_phase, xs_sorted, codes_s,
+                xt_sorted, codes_t, order_t, dims=_build_dims(caps),
+                **static_kw)
+            jax.block_until_ready(struct["node_lo"])
+        tl = time.perf_counter()
+        build_ms["build"] = build_ms.get("build", 0.0) + (tl - tb) * 1e3
+        with _trace.span("devtree.lists"):
+            lists, lneed, t_slack, f_slack = run_lists(
+                struct, (caps.approx_width, caps.direct_width,
+                         caps.skin_direct_width), pair_caps)
+            jax.block_until_ready(lists["approx_idx"])
+        tn = time.perf_counter()
+        build_ms["lists"] = build_ms.get("lists", 0.0) + (tn - tl) * 1e3
+
+        # The ONLY per-rebuild device->host sync: the needs vector, the
+        # two slack scalars, and the list totals for the waste metric.
+        synced = _ints(dict(struct["need"], **lneed))
+        t_slack = float(jax.device_get(t_slack))
+        f_slack = float(jax.device_get(f_slack))
+        grown = caps.grown_to_fit_need(full_need(synced, synced))
+        grown_pairs = fit_pairs(pair_caps, synced)
+        if grown == caps and grown_pairs == pair_caps:
+            break
+        _events.record("capacity_growth", "devtree.prepare_plan_device",
+                       owner="devtree", site="devtree.build",
+                       key=repr((_build_dims(grown),) + grown_pairs))
+        caps = grown
+        pair_caps = grown_pairs
+    else:
+        raise RuntimeError("devtree capacity growth did not converge")
+
+    tf = time.perf_counter()
+    with _trace.span("devtree.finalize"):
+        scratch = caps.scratch_node
+        parent_full = np.full(caps.num_nodes, scratch, np.int32)
+        parent_full[:m] = parent_np
+        arrays = dict(
+            src_sorted=xs_sorted,
+            src_perm=order_s,
+            tgt_batched=struct["tgt_batched"],
+            gather_index=struct["gather_index"],
+            leaf_gather=struct["leaf"]["gather"],
+            node_lo=struct["node_lo"],
+            node_hi=struct["node_hi"],
+            approx_idx=lists["approx_idx"],
+            direct_idx=lists["direct_idx"],
+            approx_skin=lists["approx_skin"],
+            skin_direct=lists["skin_direct"],
+            skin_direct_node=lists["skin_direct_node"],
+            tgt_mask=struct["tgt_mask"],
+            bucket_gather=struct["bucket_gather"],
+            bucket_nodes=struct["bucket_nodes"],
+            parent_of=jnp.asarray(parent_full),
+        )
+        dev = dict(
+            depth=d_src, tdepth=d_tgt,
+            node_count=struct["node_count"],
+            node_start=struct["node_start"],
+            node_active=struct["node_active"],
+            node_leaf=struct["node_leaf"],
+            leaf_ids=struct["leaf"]["ids"],
+            n_leaves=synced["num_leaves"],
+            b_lo=struct["batch"]["lo"], b_hi=struct["batch"]["hi"],
+            b_start=struct["batch"]["start"],
+            b_count=struct["batch"]["count"],
+            n_batches=synced["num_batches"],
+            src_perm=order_s, tgt_perm=order_t,
+            pair_caps=pair_caps,
+        )
+        used = synced["approx_total"] + synced["direct_total"]
+        total = caps.num_batches * (caps.approx_width + caps.direct_width)
+        plan = _eval.Plan(
+            arrays=arrays, meta=(degree,),
+            tree=_LazyStruct(functools.partial(
+                _materialize_tree, dev, arrays["node_lo"],
+                arrays["node_hi"])),
+            batches=_LazyStruct(functools.partial(
+                _materialize_batches, dev)),
+            padding_waste=1.0 - used / max(total, 1),
+            num_targets=n_t, num_sources=n_s,
+            mac_slack=_interaction.scaled_mac_slack(
+                theta, t_slack, f_slack),
+            theta_slack=t_slack, fold_slack=f_slack, skin=skin,
+            capacities=caps, scratch_node=scratch, space=space,
+            build_ms=build_ms, build_backend="device", dev=dev,
+        )
+    build_ms["finalize"] = (time.perf_counter() - tf) * 1e3
+    return plan

@@ -1,0 +1,316 @@
+"""Device-side dual-traversal interaction lists over the dense octree.
+
+Ragged-frontier reformulation of `interaction.build_interaction_lists`:
+the traversal state is a flat, budget-padded list of (batch, cell)
+pairs, refined level by level. Each level classifies every pair with
+the same MAC math as `interaction.mac_accept` — theta * R - (r_B + r_C)
+> 0, the fold-free margin under PeriodicBox, and the (n+1)^3 < N_C size
+test — expressed in jnp so the whole pass stays inside one jit
+(`mac_accept` itself is NumPy and would force a sync). Undecided pairs
+expand to their children and are left-packed into the next level's
+frontier, so the work per level is O(live pairs), the host traversal's
+complexity — not O(num_batches * 8^level) as a dense frontier would be.
+Each level has its own pair budget, so the shallow levels (thousands of
+pairs) never pay the deep levels' padded width.
+
+Everything is emitted by GATHER, never scatter: left-packing an
+irregular candidate set into a budgeted buffer is `cumsum` over the
+mask plus one `searchsorted` per output slot (destination j pulls the
+j-th set mask bit), and the lanes are read out of batch-sorted buffers
+at `first[batch] + slot`. XLA's CPU scatter is serial and an order of
+magnitude slower than these primitives at the sizes the traversal
+reaches; the gather formulation is what makes the device lists
+competitive with the vectorized host pack. The approx lane goes one
+step further and never sorts: every level's frontier is already
+batch-ascending (compaction preserves order, child expansion refines
+it), so the per-level accepted sets are a merge of sorted sequences —
+per-level per-batch counts give each (batch, slot) destination its
+level-major source rank in closed form, and one searchsorted over the
+acceptance-mask cumsum turns rank into position.
+
+Direct coverage is emitted as PARTICLE-RANGE RUNS, the device analogue
+of the host's `small_internal` shortcut: the size test is monotone — a
+cell with N_C <= (n+1)^3 can never be MAC-accepted, and neither can any
+of its descendants — so the traversal never descends into such cells.
+Their full particle range goes direct, and because leaf slots are in
+particle order that range is one contiguous run of leaf slots,
+recovered with two `searchsorted` calls against the leaf starts. A
+pair whose surviving children ALL fall in that class collapses to a
+single run over the parent; skin-flagged accepted clusters decompose
+through the identical run machinery. Host and device therefore produce
+the same direct coverage; only the emission order differs.
+
+List lanes are `Capacities`-budgeted, and the internal pair buffers
+(per-level frontier, direct runs, skin runs) carry their own quantized
+budgets: overflowing entries are dropped by the compaction while the
+TRUE counts — accumulated as scalars during the loop — are returned
+undamaged in the needs vector, so the caller detects overflow from a
+tiny sync and regrows, the same contract the host pack uses. Skin-pair
+slack minima (PR 5 drift budget) fall out of the same masks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import interaction as _interaction
+
+_I32MAX = jnp.int32(2 ** 31 - 1)
+_I32 = jnp.int32
+
+
+def _compact(mask_parts, val_parts, cap):
+    """Left-pack masked values from concatenated parts into a budgeted
+    buffer, by gather: slot j pulls the j-th set mask bit. Returns one
+    packed array per (parts, fill) entry of `val_parts`."""
+    m = jnp.concatenate(mask_parts)
+    c = jnp.cumsum(m.astype(_I32))
+    sel = jnp.searchsorted(c, jnp.arange(1, cap + 1, dtype=_I32))
+    src = jnp.clip(sel, 0, m.shape[0] - 1).astype(_I32)
+    ok = jnp.arange(cap, dtype=_I32) < c[-1]
+    return [jnp.where(ok, jnp.concatenate(parts)[src], fill)
+            for parts, fill in val_parts]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "depth", "off", "widths", "pair_caps", "theta", "skin", "degree",
+    "space"))
+def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
+                node_leaf, leaf_start, leaf_valid, b_lo, b_hi, b_valid, *,
+                depth, off, widths, pair_caps, theta, skin, degree, space):
+    """Traverse all batches against the dense source octree.
+
+    node_* are the flat (M,) / (M, 3) per-cell arrays in dense node-id
+    order (level l occupies [off[l], off[l] + 8^l));
+    leaf_start/leaf_valid describe the budgeted leaf-slot table (slots
+    are in particle-start order); b_lo/b_hi are exact batch bounding
+    boxes with b_valid masking padded rows. `widths` = (approx, direct,
+    skin_direct) lane budgets — pass zeros to run a count-only pass
+    (nothing lane-shaped materialized, same counts). `pair_caps` =
+    (per-level frontier tuple, direct runs, skin runs) internal
+    traversal budgets.
+
+    Returns (lists dict or None, need dict of scalar counts,
+    theta_slack, fold_slack).
+    """
+    a_width, d_width, s_width = widths
+    f_caps, run_cap, skin_cap = pair_caps
+    npts = (degree + 1) ** 3
+    has_skin = skin > 0.0
+    thr_theta = _interaction.theta_drift_rate(theta) * 0.5 * skin
+    thr_fold = _interaction.fold_drift_rate() * 0.5 * skin
+
+    dt = b_lo.dtype
+    nb = b_lo.shape[0]
+    bc = 0.5 * (b_lo + b_hi)
+    bhw = 0.5 * (b_hi - b_lo)
+    rb = jnp.linalg.norm(bhw, axis=-1)
+    nb_edges = jnp.arange(nb + 1, dtype=_I32)
+    k8 = jnp.arange(8, dtype=_I32)[None, :]
+
+    # Per-cell classification flags (the dense cell table is tiny):
+    # `testable` cells can still pass the size test somewhere at or
+    # below themselves and must be MAC-evaluated; the rest go direct
+    # as whole particle ranges without ever entering the frontier.
+    testable = node_active & (node_count > npts)
+    runnable = node_active & ~testable
+
+    inf = jnp.asarray(jnp.inf, dt)
+    theta_slack = inf
+    fold_slack = inf
+
+    # Candidate parts retained per level for the deferred emissions.
+    pb_parts, pg_parts, mac_parts, skin_parts = [], [], [], []
+    rm_parts, rbv_parts, rgv_parts = [], [], []
+    mac_cnt_parts = []
+    run_total = jnp.zeros((), _I32)
+    skin_total = jnp.zeros((), _I32)
+
+    # Level-0 frontier: every valid batch against the root cell.
+    c0 = jnp.cumsum(b_valid.astype(_I32))
+    sel0 = jnp.clip(jnp.searchsorted(
+        c0, jnp.arange(1, f_caps[0] + 1, dtype=_I32)), 0, nb - 1)
+    ok0 = jnp.arange(f_caps[0], dtype=_I32) < c0[-1]
+    fb = jnp.where(ok0, sel0, nb).astype(_I32)
+    fc = jnp.zeros((f_caps[0],), _I32)
+    fneed = [c0[-1]]
+
+    for lvl in range(depth + 1):
+        valid = fb < nb
+        bj = jnp.clip(fb, 0, nb - 1)
+        gidx = off[lvl] + fc  # fc < 8^lvl for live pairs, 0 for padding
+
+        clo, chi = node_lo[gidx], node_hi[gidx]
+        cc = 0.5 * (clo + chi)
+        chw = 0.5 * (chi - clo)
+        rc = jnp.linalg.norm(chw, axis=-1)
+
+        d = bc[bj] - cc
+        dm = space.min_image(d)
+        radius = jnp.sqrt(jnp.sum(dm * dm, axis=-1))
+        t_margin = theta * radius - (rb[bj] + rc)
+        fold = jnp.broadcast_to(
+            jnp.asarray(space.fold_margin(d, bhw[bj] + chw), dt),
+            t_margin.shape)
+        process = valid & node_active[gidx]
+        mac = (process & (t_margin > 0.0) & (fold > 0.0)
+               & (npts < node_count[gidx]))
+        safe = mac & (t_margin > thr_theta) & (fold > thr_fold)
+        skinp = mac & ~safe
+        go_self = process & ~mac & node_leaf[gidx]
+        recurse = process & ~mac & ~node_leaf[gidx]
+
+        theta_slack = jnp.minimum(
+            theta_slack, jnp.min(jnp.where(safe, t_margin, inf)))
+        fold_slack = jnp.minimum(
+            fold_slack,
+            jnp.min(jnp.where(safe & jnp.isfinite(fold), fold, inf)))
+
+        pb_parts.append(fb)
+        pg_parts.append(gidx)
+        mac_parts.append(mac)
+        skin_parts.append(skinp)
+        # Per-batch acceptance counts: cumsum diff at batch boundaries
+        # (fb is batch-ascending with nb-padding, so searchsorted
+        # recovers the boundary positions).
+        cm = jnp.concatenate(
+            [jnp.zeros((1,), _I32), jnp.cumsum(mac.astype(_I32))])
+        firsts = jnp.searchsorted(fb, nb_edges).astype(_I32)
+        mac_cnt_parts.append(cm[firsts[1:]] - cm[firsts[:-1]])
+        if has_skin:
+            skin_total = skin_total + jnp.sum(skinp, dtype=_I32)
+
+        if lvl < depth:
+            kid_cell = fc[:, None] * 8 + k8
+            kid_gid = off[lvl + 1] + kid_cell
+            kenter = recurse[:, None] & testable[kid_gid]
+            krun = recurse[:, None] & runnable[kid_gid]
+            # A pair none of whose surviving children are testable
+            # collapses to ONE run over the parent's whole range.
+            allrun = recurse & ~jnp.any(kenter, axis=1)
+            krun = krun & ~allrun[:, None]
+            prun = go_self | allrun
+            rm_parts += [prun, krun.reshape(-1)]
+            rbv_parts += [fb, jnp.broadcast_to(fb[:, None],
+                                               krun.shape).reshape(-1)]
+            rgv_parts += [gidx, kid_gid.reshape(-1)]
+            run_total = (run_total + jnp.sum(prun, dtype=_I32)
+                         + jnp.sum(krun, dtype=_I32))
+
+            # Next frontier by gather-compaction of the testable kids.
+            km = kenter.reshape(-1)
+            c = jnp.cumsum(km.astype(_I32))
+            ncap = f_caps[lvl + 1]
+            sel = jnp.searchsorted(
+                c, jnp.arange(1, ncap + 1, dtype=_I32))
+            src = jnp.clip(sel, 0, km.shape[0] - 1).astype(_I32)
+            ok = jnp.arange(ncap, dtype=_I32) < c[-1]
+            pair = src >> 3
+            fb, fc = (jnp.where(ok, fb[pair], nb),
+                      jnp.where(ok, (fc[pair] << 3) + (src & 7), 0))
+            fneed.append(c[-1])
+        else:
+            rm_parts.append(go_self)
+            rbv_parts.append(fb)
+            rgv_parts.append(gidx)
+            run_total = run_total + jnp.sum(go_self, dtype=_I32)
+
+    # ---- Deferred emissions ------------------------------------------
+    # Approx lane, sort-free: `cnts[b, l]` counts batch b's acceptances
+    # at level l. Lane slot (b, s) belongs to the level whose
+    # within-batch offset covers s, and its rank in the level-major
+    # candidate stream is  level_start + preceding_batches + within.
+    # One searchsorted over the global acceptance cumsum maps rank ->
+    # candidate position; everything else is closed-form gathers, and
+    # the per-batch counts are exact (no buffer to overflow).
+    cnts = jnp.stack(mac_cnt_parts, axis=1)           # (nb, L)
+    a_cnt = jnp.sum(cnts, axis=1)                     # (nb,)
+    approx_total = jnp.sum(a_cnt)
+    loff = jnp.cumsum(cnts, axis=1) - cnts            # within-batch
+    stot = jnp.sum(cnts, axis=0)                      # per-level totals
+    sstart = jnp.cumsum(stot) - stot                  # level-major starts
+    cbefore = jnp.cumsum(cnts, axis=0) - cnts         # same-level earlier batches
+
+    materialize = bool(a_width and d_width)
+    if materialize:
+        mall = jnp.concatenate(mac_parts)
+        call = jnp.cumsum(mall.astype(_I32))
+        gall = jnp.concatenate(pg_parts)
+        sall = jnp.concatenate([s.astype(jnp.uint8) for s in skin_parts])
+        s_ar = jnp.arange(a_width, dtype=_I32)[None, :]
+        a_ok = s_ar < a_cnt[:, None]
+        l_of = jnp.clip(
+            jnp.sum(loff[:, None, :] <= s_ar[:, :, None], axis=-1) - 1,
+            0, cnts.shape[1] - 1)
+        j = s_ar - jnp.take_along_axis(loff, l_of, axis=1)
+        rank = (sstart[l_of]
+                + jnp.take_along_axis(cbefore, l_of, axis=1) + j)
+        src = jnp.clip(jnp.searchsorted(call, rank + 1),
+                       0, mall.shape[0] - 1).astype(_I32)
+        approx_idx = jnp.where(a_ok, gall[src], -1).astype(_I32)
+        approx_skin = jnp.where(a_ok, sall[src], 0)
+
+    # Run decomposition (direct and skin lanes): map each cell's
+    # particle range to its contiguous leaf-slot run, then unroll runs
+    # into the (batch, slot) grid — each output slot finds its source
+    # run with one searchsorted against the inclusive run ends.
+    key = jnp.where(leaf_valid, leaf_start, _I32MAX)
+
+    def unroll(bufs, cap, width, want_nodes):
+        ordp = jnp.argsort(bufs[0]).astype(_I32)
+        pb, pg = (b[ordp] for b in bufs)
+        bounds = jnp.searchsorted(pb, nb_edges).astype(_I32)
+        ps = node_start[pg]
+        plo = jnp.searchsorted(key, ps).astype(_I32)
+        pend = jnp.searchsorted(key, ps + node_count[pg]).astype(_I32)
+        plen = jnp.where(pb < nb, pend - plo, 0)
+        e_excl = jnp.cumsum(plen) - plen
+        edges = jnp.concatenate([e_excl, e_excl[-1:] + plen[-1:]])
+        cnt_b = edges[bounds[1:]] - edges[bounds[:-1]]
+        if not width:
+            return None, None, cnt_b
+        g = edges[bounds[:-1, None]] + jnp.arange(width, dtype=_I32)[None]
+        p = jnp.clip(jnp.searchsorted(e_excl + plen, g, side="right"),
+                     0, cap - 1)
+        ok = jnp.arange(width, dtype=_I32)[None, :] < cnt_b[:, None]
+        slots = jnp.where(ok, plo[p] + (g - e_excl[p]), -1).astype(_I32)
+        nodes = (jnp.where(ok, pg[p], -1).astype(_I32)
+                 if want_nodes else None)
+        return slots, nodes, cnt_b
+
+    rn = _compact(rm_parts, [(rbv_parts, nb), (rgv_parts, 0)], run_cap)
+    direct_idx, _, d_cnt = unroll(rn, run_cap,
+                                  d_width if materialize else 0, False)
+    if has_skin:
+        sp = _compact(skin_parts, [(pb_parts, nb), (pg_parts, 0)],
+                      skin_cap)
+        skin_direct, skin_direct_node, s_cnt = unroll(
+            sp, skin_cap, s_width if materialize else 0, True)
+    else:
+        s_cnt = jnp.zeros((nb,), _I32)
+        skin_direct = jnp.full((nb, s_width), -1, _I32)
+        skin_direct_node = jnp.full((nb, s_width), -1, _I32)
+
+    need = dict(
+        approx_width=jnp.max(a_cnt),
+        direct_width=jnp.max(d_cnt),
+        skin_direct_width=jnp.max(s_cnt),
+        approx_total=approx_total,
+        direct_total=jnp.sum(d_cnt),
+        frontier_pairs=tuple(fneed),
+        run_pairs=run_total,
+        skin_pairs=skin_total,
+    )
+
+    lists = None
+    if materialize:
+        lists = dict(
+            approx_idx=approx_idx,
+            approx_skin=approx_skin,
+            direct_idx=direct_idx,
+            skin_direct=skin_direct,
+            skin_direct_node=skin_direct_node,
+        )
+    return lists, need, theta_slack, fold_slack

@@ -1,0 +1,90 @@
+"""Jit-compatible Morton (Z-order) codes and radix ordering.
+
+The device build replaces the host's recursive midpoint bisection with a
+radix sort of 30-bit Morton codes (10 bits per dimension), the standard
+GPU tree-construction ordering (Gaburov & Bedorf, arXiv:1005.5384).
+Sorting by code makes every octree cell — at every level — own a
+contiguous run of the sorted particles, because a depth-``l`` cell is
+exactly a 3l-bit code prefix. That contiguity is the same invariant the
+host `build_tree` establishes with its permutation, so the downstream
+padded executors work unchanged.
+
+Space convention matches the host path: periodic plans quantize WRAPPED
+coordinates against the static box (`PeriodicBox.origin/lengths`), so
+the octree never straddles the boundary; free space quantizes against
+the on-device bounding box of the data. `space` methods dispatch to
+jnp for jnp inputs, so everything here stays inside one jit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# 3*BITS = 30-bit codes fit int32 even with x64 disabled.
+BITS = 10
+
+
+def spread3(v):
+    """Spread the low 10 bits of ``v`` to every third bit (magic numbers)."""
+    v = (v | (v << 16)) & 0x030000FF
+    v = (v | (v << 8)) & 0x0300F00F
+    v = (v | (v << 4)) & 0x030C30C3
+    v = (v | (v << 2)) & 0x09249249
+    return v
+
+
+def interleave3(ux, uy, uz):
+    """Morton code with x in the highest bit of each triple."""
+    return (spread3(ux) << 2) | (spread3(uy) << 1) | spread3(uz)
+
+
+def quantize(x, lo, inv_ext, bits: int = BITS):
+    """Map coords to integer cells in [0, 2^bits); clipped, never NaN-safe."""
+    u = jnp.floor((x - lo) * inv_ext).astype(jnp.int32)
+    return jnp.clip(u, 0, (1 << bits) - 1)
+
+
+def morton_codes(x, lo, inv_ext, bits: int = BITS):
+    u = quantize(x, lo, inv_ext, bits)
+    return interleave3(u[:, 0], u[:, 1], u[:, 2])
+
+
+def quantization_box(x, space):
+    """(lo, inv_ext) for the quantization grid.
+
+    Periodic: the static cell — identical for every rebuild, so codes
+    (and hence tree topology for unmoved particles) are reproducible.
+    Free space: the data bounding box, computed on device. The scale
+    backs off a few ulp so the max coordinate lands in the top cell,
+    and degenerate extents (all particles coplanar) divide safely.
+    """
+    dt = x.dtype
+    if getattr(space, "periodic", False):
+        lo = jnp.asarray(space.origin, dt)
+        ext = jnp.asarray(space.lengths, dt)
+    else:
+        lo = jnp.min(x, axis=0)
+        ext = jnp.max(x, axis=0) - lo
+    eps = jnp.finfo(dt).eps
+    scale = jnp.asarray((1 << BITS) * (1.0 - 8.0 * eps), dt)
+    inv_ext = scale / jnp.maximum(ext, jnp.asarray(jnp.finfo(dt).tiny, dt))
+    return lo, inv_ext
+
+
+@functools.partial(jax.jit, static_argnames=("space",))
+def sort_phase(x, *, space):
+    """Wrap, code, and radix-order one point set.
+
+    Returns ``(x_sorted, codes_sorted, order)`` where ``order`` follows
+    the host `Tree.perm` convention: ``order[i]`` is the input index of
+    the i-th sorted particle (``x_sorted = x_wrapped[order]``).
+    jnp.argsort is stable, so equal-code particles keep input order and
+    rebuilds at identical positions are bit-reproducible.
+    """
+    xw = space.wrap(x)
+    lo, inv_ext = quantization_box(xw, space)
+    codes = morton_codes(xw, lo, inv_ext)
+    order = jnp.argsort(codes).astype(jnp.int32)
+    return xw[order], codes[order], order

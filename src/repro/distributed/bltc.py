@@ -438,14 +438,29 @@ class ShardedPlan:
 
         _t = time.perf_counter()
         with _trace.span("plan.local_plans"):
-            plans = []
-            for r in range(nranks):
-                slab = points[rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]]
-                plans.append(ceval.prepare_plan(
-                    slab, slab, theta=cfg.theta, degree=cfg.degree,
-                    leaf_size=cfg.leaf_size,
-                    batch_size=cfg.resolved_batch_size(), space=cfg.space,
-                    skin=cfg.skin))
+            slabs = [points[rcb.perm[rcb.starts[r]:rcb.starts[r + 1]]]
+                     for r in range(nranks)]
+            kw = dict(theta=cfg.theta, degree=cfg.degree,
+                      leaf_size=cfg.leaf_size,
+                      batch_size=cfg.resolved_batch_size(),
+                      space=cfg.space, skin=cfg.skin)
+            if cfg.build_backend == "device":
+                # Per-rank LOCAL device builds. Pin ONE dense-octree
+                # depth (source and target) across ranks, so every
+                # rank's budget has the same level structure and the
+                # per-rank arrays stack into one (P, ...) pytree.
+                from repro.devtree import build as _devtree
+                d_src = max(_devtree.depth_for(len(s), cfg.leaf_size)
+                            for s in slabs)
+                d_tgt = max(
+                    _devtree.depth_for(len(s), cfg.resolved_batch_size())
+                    for s in slabs)
+                plans = [_devtree.prepare_plan_device(
+                    slab, slab, depth=d_src, batch_depth=d_tgt, **kw)
+                    for slab in slabs]
+            else:
+                plans = [ceval.prepare_plan(slab, slab, **kw)
+                         for slab in slabs]
         build_ms["local_plans"] = (time.perf_counter() - _t) * 1e3
 
         _t = time.perf_counter()

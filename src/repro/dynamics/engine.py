@@ -129,7 +129,7 @@ class Simulation:
         self.profile = bool(profile)
         # Owner token scoping this engine's entries in the global
         # compile/retrace event log (repro.obs.events).
-        self.obs_owner = f"Simulation@{id(self):x}"
+        self.obs_owner = _events.owner_token("Simulation")
         self._occ_dev = None
 
         self.adapter = make_adapter(plan)
@@ -185,6 +185,10 @@ class Simulation:
         self.rebuilds_drift = 0
         self.rebuilds_interval = 0
         self.rebuilds_forced = 0
+        # Backend partition of the same count: every rebuild is either a
+        # host build or a device (devtree) build.
+        self.rebuilds_host = 0
+        self.rebuilds_device = 0
         self.force_evals = 0
         self.capacity_growths = 0
         self._steps_since_rebuild = 0
@@ -371,10 +375,15 @@ class Simulation:
             # per-particle lattice shift: velocities, forces and energies
             # are all minimum-image invariant, so the trajectory is
             # unchanged while coordinates stay bounded).
-            _rb_span = _trace.span("md.rebuild_host")
+            on_device = self.adapter.device_rebuild
+            _rb_span = _trace.span(
+                "md.rebuild_device" if on_device else "md.rebuild_host")
             _rb_span.__enter__()
             s1 = s1._replace(x=self.space.wrap(s1.x))
-            invalidated = self.adapter.rebuild(np.asarray(s1.x))
+            # Device rebuilds consume the live device positions — no
+            # host sync; only the needs vector crosses back.
+            invalidated = self.adapter.rebuild(
+                s1.x if on_device else np.asarray(s1.x))
             if invalidated:
                 # A capacity budget grew: the new shapes force a retrace
                 # (counted), deliberately — geometric growth bounds how
@@ -398,6 +407,10 @@ class Simulation:
                 self.rebuilds_interval += 1
             else:
                 self.rebuilds_forced += 1
+            if on_device:
+                self.rebuilds_device += 1
+            else:
+                self.rebuilds_host += 1
             _rb_span.__exit__(None, None, None)
         else:
             self.refits += 1
@@ -475,13 +488,17 @@ class Simulation:
           any diagnostics-driven refreshes).
         - ``refits``: steps serviced by the device tree refit alone — no
           host work beyond the one drift scalar.
-        - ``rebuilds``: host tree rebuilds, PARTITIONED by cause:
+        - ``rebuilds``: tree rebuilds, PARTITIONED by cause:
           ``rebuilds == rebuilds_drift + rebuilds_interval +
           rebuilds_forced`` always holds. ``rebuilds_drift`` — a drift
           budget was exhausted (wins ties with the interval);
           ``rebuilds_interval`` — the K-step fallback elapsed (and drift
           did not fire); ``rebuilds_forced`` — neither cause
-          (``rebuild="always"`` steps, checkpoint restores).
+          (``rebuild="always"`` steps, checkpoint restores). The same
+          count is also partitioned by backend: ``rebuilds ==
+          rebuilds_host + devtree_rebuilds`` (``devtree_rebuilds`` are
+          device-resident builds; ``build_backend`` names the plan's
+          configured backend).
         - ``compiles``: total jit compilations of the step executables
           (advance + force closures, including retired ones), counted
           from the compile/retrace event log (`repro.obs.events`;
@@ -526,6 +543,10 @@ class Simulation:
             rebuilds_drift=self.rebuilds_drift,
             rebuilds_interval=self.rebuilds_interval,
             rebuilds_forced=self.rebuilds_forced,
+            rebuilds_host=self.rebuilds_host,
+            devtree_rebuilds=self.rebuilds_device,
+            build_backend=getattr(self.plan.config, "build_backend",
+                                  "host"),
             retraces=self.retraces,
             compiles=self.compiles,
             compiles_cache=self._total_compiles(),
@@ -575,13 +596,19 @@ class Simulation:
         self.state = self.adapter.commit(
             MDState(**{k: jnp.asarray(v) for k, v in tree.items()}))
         self.state = self.state._replace(x=self.space.wrap(self.state.x))
-        invalidated = self.adapter.rebuild(np.asarray(self.state.x))
+        on_device = self.adapter.device_rebuild
+        invalidated = self.adapter.rebuild(
+            self.state.x if on_device else np.asarray(self.state.x))
         if invalidated:
             self.capacity_growths += 1
             if self.adapter.recloses_on_rebuild:
                 self._remake_finish()
         self.rebuilds += 1
         self.rebuilds_forced += 1  # neither drift- nor interval-caused
+        if on_device:
+            self.rebuilds_device += 1
+        else:
+            self.rebuilds_host += 1
         self.plan = self.adapter.plan
         self._arrays = self.adapter.arrays
         self._x_eval_ref = self.state.x

@@ -209,6 +209,10 @@ class PlanAdapter:
     # force-dependent jits and count the recompilation as a retrace.
     # Budget-fitting rebuilds never invalidate on either strategy.
     recloses_on_rebuild = False
+    # True when `rebuild` runs on device (the devtree backend): the
+    # engine then passes the live device positions straight through
+    # instead of syncing them to host first.
+    device_rebuild = False
 
     def positions(self) -> np.ndarray:
         """Current particle positions in input order (host)."""
@@ -276,6 +280,10 @@ class PlanAdapter:
 class SingleDeviceAdapter(PlanAdapter):
     def __init__(self, plan: SingleDevicePlan):
         self.plan = plan
+
+    @property
+    def device_rebuild(self) -> bool:
+        return getattr(self.plan.config, "build_backend", "host") == "device"
 
     def positions(self) -> np.ndarray:
         src = np.asarray(self.plan.inner.arrays["src_sorted"])

@@ -27,13 +27,28 @@ sums by the tier-1 suite.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-__all__ = ["EventLog", "log", "log_compiles", "record", "cache_size"]
+__all__ = ["EventLog", "log", "log_compiles", "record", "cache_size",
+           "owner_token"]
 
 MAX_EVENTS = 50_000
+
+_owner_seq = itertools.count(1)
+
+
+def owner_token(prefix: str) -> str:
+    """Process-unique owner token for scoping entries in the global log.
+
+    Owners must never alias across object lifetimes: the log outlives
+    the objects, so an `id()`-derived token can collide when CPython
+    reuses a freed address, silently merging a dead owner's events into
+    a new one's counters. A monotonic sequence cannot.
+    """
+    return f"{prefix}@{next(_owner_seq):x}"
 
 
 class EventLog:

@@ -166,7 +166,7 @@ class ServeFrontend:
         # compile/retrace event log (repro.obs.events). stats() derives
         # its counters from the log; the attributes above are kept in
         # lockstep as the legacy cross-check (tier-1 asserted equal).
-        self.obs_owner = f"ServeFrontend@{id(self):x}"
+        self.obs_owner = _events.owner_token("ServeFrontend")
 
     # ------------------------------------------------------------------
 

@@ -1,0 +1,321 @@
+"""Device-resident tree build + on-device interaction lists (repro.devtree).
+
+The devtree backend must be an exact drop-in for the host planner: same
+Plan schema, same MAC semantics, same coverage guarantees, same
+capacity-growth contract — with rebuilds that never sync positions to
+host. These tests pin each of those properties:
+
+- Morton codes against a bit-by-bit python reference;
+- dense-octree structural invariants (leaf ranges tile [0, N),
+  particles inside their shrunk leaf boxes);
+- force equivalence vs the host planner, judged against a float64
+  direct-sum oracle, in free and periodic space and with a Verlet skin;
+- EXACT pair coverage: decoded (target, source) coverage of the device
+  lists is all-ones, and identical to the host lists' coverage — every
+  host MAC-accepted pair is covered by the device lists exactly once;
+- budgeted rebuilds: zero devtree compiles and zero engine retraces
+  across repeated rebuilds, stats backend partition, deliberate
+  capacity growth on an undersized budget;
+- per-rank local device builds under the sharded (LET) strategy.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.api import TreecodeConfig, TreecodeSolver
+from repro.core.space import FREE, PeriodicBox
+from repro.devtree import morton
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BOX = PeriodicBox(lengths=(1.0, 1.0, 1.0))
+
+
+def _solver(build_backend, *, theta=0.7, degree=2, leaf_size=16,
+            space=FREE, skin=0.0):
+    return TreecodeSolver(TreecodeConfig(
+        theta=theta, degree=degree, leaf_size=leaf_size, space=space,
+        skin=skin, build_backend=build_backend))
+
+
+def _cloud(n, rng, space=FREE):
+    if getattr(space, "periodic", False):
+        return rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    return rng.uniform(-1.0, 1.0, (n, 3)).astype(np.float32)
+
+
+def _oracle(x, q, space):
+    """Float64 direct-sum potentials (numpy; minimum-image if periodic)."""
+    xd = x.astype(np.float64)
+    d = xd[:, None, :] - xd[None, :, :]
+    if getattr(space, "periodic", False):
+        L = np.asarray(space.lengths, np.float64)
+        d -= L * np.round(d / L)
+    r2 = (d ** 2).sum(-1)
+    np.fill_diagonal(r2, np.inf)
+    return (q.astype(np.float64)[None, :] / np.sqrt(r2)).sum(-1)
+
+
+# ---------------------------------------------------------------------------
+# Morton codes
+# ---------------------------------------------------------------------------
+
+
+def _ref_interleave(ux, uy, uz, bits):
+    out = 0
+    for b in range(bits):
+        out |= (((ux >> b) & 1) << (3 * b + 2)
+                | ((uy >> b) & 1) << (3 * b + 1)
+                | ((uz >> b) & 1) << (3 * b))
+    return out
+
+
+def test_morton_codes_match_bitloop_reference(rng):
+    u = rng.integers(0, 1 << morton.BITS, size=(512, 3)).astype(np.int32)
+    got = np.asarray(morton.interleave3(u[:, 0], u[:, 1], u[:, 2]))
+    ref = np.array([_ref_interleave(int(a), int(b), int(c), morton.BITS)
+                    for a, b, c in u])
+    assert (got == ref).all()
+    # codes sort == lexicographic sort of (x, y, z) bit-interleaved cells
+    assert got.max() < 2 ** 31  # int32-safe with x64 off
+
+
+def test_morton_quantization_periodic_is_static(rng):
+    # Periodic: the grid comes from the box, not the data, so the same
+    # wrapped point always lands in the same cell regardless of the rest
+    # of the cloud (reproducible topology across rebuilds).
+    import jax.numpy as jnp
+    x1 = _cloud(100, rng, BOX)
+    x2 = np.concatenate([x1, _cloud(50, rng, BOX)])
+    lo1, inv1 = morton.quantization_box(jnp.asarray(x1), BOX)
+    lo2, inv2 = morton.quantization_box(jnp.asarray(x2), BOX)
+    np.testing.assert_array_equal(np.asarray(lo1), np.asarray(lo2))
+    np.testing.assert_array_equal(np.asarray(inv1), np.asarray(inv2))
+
+
+# ---------------------------------------------------------------------------
+# Dense-octree structure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("space", [FREE, BOX], ids=["free", "periodic"])
+def test_device_tree_invariants(rng, space):
+    n = 2500
+    x = _cloud(n, rng, space)
+    plan = _solver("device", space=space).plan(x)
+    inner = plan.inner
+    dev = inner.dev
+    assert inner.build_backend == "device"
+
+    start = np.asarray(dev["node_start"])
+    count = np.asarray(dev["node_count"])
+    nl = int(dev["n_leaves"])
+    ids = np.asarray(dev["leaf_ids"])[:nl]
+    # Leaf particle ranges partition [0, N) in slot order.
+    s, c = start[ids], count[ids]
+    assert s[0] == 0 and (s[1:] == s[:-1] + c[:-1]).all()
+    assert s[-1] + c[-1] == n
+    assert (c > 0).all()
+
+    # Every sorted particle sits inside its leaf's shrunk box.
+    xs = np.asarray(inner.arrays["src_sorted"])
+    lo = np.asarray(inner.arrays["node_lo"])
+    hi = np.asarray(inner.arrays["node_hi"])
+    for g, s0, c0 in zip(ids, s, c):
+        pts = xs[s0:s0 + c0]
+        assert (pts >= lo[g] - 1e-6).all() and (pts <= hi[g] + 1e-6).all()
+
+    # The sort permutation is a permutation (Tree.perm convention).
+    perm = np.asarray(dev["src_perm"])
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# Force equivalence vs the host planner (f64 oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("space", [FREE, BOX], ids=["free", "periodic"])
+@pytest.mark.parametrize("skin", [0.0, 0.05])
+def test_device_matches_host_against_f64_oracle(rng, space, skin):
+    n = 2500
+    x = _cloud(n, rng, space)
+    q = rng.uniform(0.5, 1.5, n).astype(np.float32)
+    ref = _oracle(x, q, space)
+    scale = np.abs(ref).max()
+
+    ph = _solver("host", space=space, skin=skin).plan(x)
+    pd = _solver("device", space=space, skin=skin).plan(x)
+    host_err = np.abs(np.asarray(ph.execute(q)) - ref).max() / scale
+    dev_err = np.abs(np.asarray(pd.execute(q)) - ref).max() / scale
+    # Same approximation, so same error scale; the floor absorbs f32
+    # noise when both are tiny.
+    assert dev_err <= max(2.0 * host_err, 1e-5), (host_err, dev_err)
+
+    # Drift-budget slacks land at the same scale (the two trees differ,
+    # so the minima are over different pair sets; skin=0 slack sits at
+    # the f32 noise floor and is not comparable).
+    if skin > 0.0 and np.isfinite(ph.theta_slack):
+        assert 0.0 < pd.theta_slack <= 2.0 * ph.theta_slack + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Exact pair coverage (host-accepted pairs covered by device lists)
+# ---------------------------------------------------------------------------
+
+
+def _coverage(inner):
+    """Decode plan lists into a (target, source) coverage-count matrix."""
+    tree, batches = inner.tree, inner.batches
+    a = inner.arrays
+    approx = np.asarray(a["approx_idx"])
+    direct = np.asarray(a["direct_idx"])
+    leaf_gather = np.asarray(a["leaf_gather"])
+    start = np.asarray(tree.start)
+    count = np.asarray(tree.count)
+    sperm = np.asarray(tree.perm)
+    tperm = np.asarray(batches.perm)
+    M = np.zeros((inner.num_targets, inner.num_sources), np.int64)
+    for b in range(batches.num_batches):
+        t_idx = tperm[batches.start[b]:batches.start[b] + batches.count[b]]
+        srcs = []
+        for g in approx[b]:
+            if g >= 0:
+                srcs.append(sperm[start[g]:start[g] + count[g]])
+        for sl in direct[b]:
+            if sl >= 0:
+                cols = leaf_gather[sl]
+                srcs.append(sperm[cols[cols >= 0]])
+        if not srcs:
+            continue
+        flat = np.concatenate(srcs)
+        np.add.at(M, (np.repeat(t_idx, flat.size),
+                      np.tile(flat, t_idx.size)), 1)
+    return M
+
+
+@pytest.mark.parametrize("space", [FREE, BOX], ids=["free", "periodic"])
+def test_pair_coverage_exact_and_matches_host(rng, space):
+    # Small enough to decode densely, deep enough that MAC acceptances,
+    # leaf hits and collapsed runs all occur (degree 1 -> npts 8).
+    n = 700
+    x = _cloud(n, rng, space)
+    ph = _solver("host", degree=1, leaf_size=8, space=space).plan(x)
+    pd = _solver("device", degree=1, leaf_size=8, space=space).plan(x)
+    Mh = _coverage(ph.inner)
+    Md = _coverage(pd.inner)
+    # Every (target, source) pair is covered exactly once on both
+    # backends — so in particular every host MAC-accepted pair is
+    # covered by the device lists.
+    assert (Mh == 1).all()
+    assert (Md == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Budgeted rebuilds: zero retraces, stats partition, capacity growth
+# ---------------------------------------------------------------------------
+
+
+def test_budgeted_rebuilds_zero_compiles_and_stats_partition(rng):
+    from repro.dynamics import Simulation
+
+    n = 1200
+    x = _cloud(n, rng)
+    q = (rng.uniform(-1, 1, n) * 0.05).astype(np.float32)
+    plan = _solver("device", leaf_size=32).plan(x)
+    sim = Simulation(plan, q, dt=1e-5, rebuild="always")
+    devtree_compiles = obs.log.count(owner="devtree", kind="compile")
+    growths = obs.log.count(owner="devtree", kind="capacity_growth")
+    sig0 = sim.adapter.signature()
+    sim.run(3)
+    s = sim.stats()
+    # >= 2 budgeted rebuilds reuse the compiled build/lists executables:
+    # no new devtree compiles, no budget growth, no engine retraces.
+    assert s["rebuilds"] >= 3, s
+    assert obs.log.count(owner="devtree", kind="compile") \
+        == devtree_compiles
+    assert obs.log.count(owner="devtree", kind="capacity_growth") == growths
+    assert sim.adapter.signature() == sig0
+    assert s["retraces"] == 0, s
+    assert s["capacity_growths"] == 0, s
+    # Backend partition of the rebuild count.
+    assert s["build_backend"] == "device"
+    assert s["devtree_rebuilds"] == s["rebuilds"]
+    assert s["rebuilds_host"] == 0
+    assert s["rebuilds"] == s["rebuilds_host"] + s["devtree_rebuilds"]
+
+
+def test_capacity_growth_on_undersized_budget(rng):
+    n = 1500
+    x = _cloud(n, rng)
+    q = rng.uniform(-1, 1, n).astype(np.float32)
+    plan = _solver("device", leaf_size=32).plan(x)
+    ref = np.asarray(plan.execute(q))
+    caps = plan.inner.capacities
+    small = dataclasses.replace(caps, approx_width=8, direct_width=16)
+    growths = obs.log.count(owner="devtree", kind="capacity_growth")
+    p2 = plan.replan(x, capacities=small)
+    # The undersized lanes overflowed: a growth event fired, the grown
+    # budget fits, and the result is unchanged.
+    assert obs.log.count(owner="devtree", kind="capacity_growth") > growths
+    assert p2.inner.capacities.approx_width >= caps.approx_width
+    np.testing.assert_allclose(np.asarray(p2.execute(q)), ref, rtol=2e-5)
+
+
+def test_replan_is_deterministic_and_keeps_shapes(rng):
+    n = 2000
+    x = _cloud(n, rng)
+    q = rng.uniform(-1, 1, n).astype(np.float32)
+    plan = _solver("device").plan(x)
+    p2 = plan.replan(x)
+    assert p2.inner.dev["pair_caps"] == plan.inner.dev["pair_caps"]
+    np.testing.assert_array_equal(np.asarray(plan.execute(q)),
+                                  np.asarray(p2.execute(q)))
+
+
+def test_device_rejects_hierarchical_precompute():
+    with pytest.raises(ValueError, match="hierarchical"):
+        TreecodeConfig(build_backend="device", precompute="hierarchical")
+
+
+# ---------------------------------------------------------------------------
+# Sharded: per-rank local device builds
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_local_device_build_matches_direct_sum():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=2")
+    code = textwrap.dedent("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core.api import TreecodeConfig, TreecodeSolver
+        from repro.core.direct import direct_sum
+        rng = np.random.default_rng(0)
+        N = 2048
+        x = rng.uniform(-1, 1, (N, 3)).astype(np.float32)
+        q = rng.uniform(-1, 1, N).astype(np.float32)
+        solver = TreecodeSolver(TreecodeConfig(
+            theta=0.7, degree=5, leaf_size=64, backend="xla",
+            build_backend="device"))
+        phi_ds = direct_sum(jnp.asarray(x), jnp.asarray(x),
+                            jnp.asarray(q), kernel=solver.kernel)
+        plan = solver.plan(x, nranks=2)
+        st = plan.stats()
+        assert st["strategy"] == "sharded" and st["nranks"] == 2, st
+        phi = plan.execute(q)
+        err = float(jnp.linalg.norm(phi_ds - phi)
+                    / jnp.linalg.norm(phi_ds))
+        print("err", err)
+        assert err < 5e-3, err
+    """)
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env, cwd=ROOT)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "err" in p.stdout
