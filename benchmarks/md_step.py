@@ -24,7 +24,15 @@ Chrome-trace file is written to PATH.
 
     PYTHONPATH=src python benchmarks/md_step.py \
         [--n 1500] [--steps 200] [--skin 0.05] [--refit-interval 100] \
+        [--build-backend device] [--async-replan] \
         [--max-rebuilds N] [--trace PATH] [--check]
+
+With ``--async-replan`` (device build backend only) a third mode runs:
+`Simulation(async_replan=True)` double-buffers the rebuilds — a shadow
+device build is dispatched ahead of the trigger and swapped in at the
+next step boundary — and `--check` gates it at ``--async-factor``
+(default 1.05x) of the pure-refit ms/step with zero retraces and both
+rebuild-count partitions exact.
 
 `--check` asserts the smoke thresholds (used by CI): >= 1 refit without
 a rebuild, energy drift below --drift-tol, trajectory deviation below
@@ -53,17 +61,18 @@ from repro.dynamics import Simulation  # noqa: E402
 json_safe = obs.json_safe  # non-finite floats -> None (RFC-8259)
 
 
-def build_sim(x, q, args, rebuild):
+def build_sim(x, q, args, rebuild, async_replan=False):
     solver = TreecodeSolver(TreecodeConfig(
         theta=args.theta, degree=args.degree, leaf_size=args.leaf_size,
-        skin=args.skin))
+        skin=args.skin, build_backend=args.build_backend))
     return Simulation(solver.plan(x), q, dt=args.dt,
                       integrator=args.integrator,
-                      refit_interval=args.refit_interval, rebuild=rebuild)
+                      refit_interval=args.refit_interval, rebuild=rebuild,
+                      async_replan=async_replan)
 
 
-def run_mode(x, q, args, rebuild):
-    sim = build_sim(x, q, args, rebuild)
+def run_mode(x, q, args, rebuild, async_replan=False):
+    sim = build_sim(x, q, args, rebuild, async_replan)
     sim.log.record(0, sim.diagnostics())  # E(0) baseline for drift()
     sim.step()                       # compile + first step (excluded)
     if obs.enabled():
@@ -100,7 +109,7 @@ def run_mode(x, q, args, rebuild):
     force_err = float(np.linalg.norm(np.asarray(sim.state.f) - f_ref)
                       / max(np.linalg.norm(f_ref), 1e-30))
     return sim, dict(
-        mode=rebuild,
+        mode="async" if async_replan else rebuild,
         ms_per_step=steady / max(args.steps - 1, 1) * 1e3,
         steady_seconds=steady,
         steps=s["steps"],
@@ -109,6 +118,11 @@ def run_mode(x, q, args, rebuild):
         rebuilds_drift=s["rebuilds_drift"],
         rebuilds_interval=s["rebuilds_interval"],
         rebuilds_forced=s["rebuilds_forced"],
+        rebuilds_host=s["rebuilds_host"],
+        devtree_rebuilds=s["devtree_rebuilds"],
+        plan_swaps=s["plan_swaps"],
+        rebuild_total_ms=s["rebuild_total_ms"],
+        rebuild_wait_ms=s["rebuild_wait_ms"],
         retraces=s["retraces"],
         rebuild_over_refit=ratio,
         energy_drift=sim.log.drift(),
@@ -140,6 +154,16 @@ def main(argv=None):
     ap.add_argument("--refit-interval", type=int, default=100,
                     help="fallback interval K (v2: drift validity is "
                     "guarded per step by the refreshed budgets)")
+    ap.add_argument("--build-backend", choices=("host", "device"),
+                    default="host",
+                    help="tree-build backend for every mode")
+    ap.add_argument("--async-replan", action="store_true",
+                    help="additionally run the double-buffered mode "
+                    "(device backend only): shadow rebuilds dispatched "
+                    "ahead of the trigger, swapped at step boundaries")
+    ap.add_argument("--async-factor", type=float, default=1.05,
+                    help="max async / pure-refit ms-per-step ratio "
+                    "(the latency-hiding gate)")
     ap.add_argument("--out", default="BENCH_md_step.json")
     ap.add_argument("--check", action="store_true",
                     help="assert smoke thresholds (CI)")
@@ -160,6 +184,8 @@ def main(argv=None):
                     "Chrome-trace JSON here and fills the report's "
                     "phases breakdown")
     args = ap.parse_args(argv)
+    if args.async_replan and args.build_backend != "device":
+        ap.error("--async-replan requires --build-backend device")
 
     if args.trace:
         obs.enable()
@@ -175,6 +201,10 @@ def main(argv=None):
         obs.write_chrome_trace(args.trace, process_name="repro.md_step")
         print(f"wrote {args.trace}")
     sim_b, rebuild = run_mode(x, q, args, "always")
+    sim_a = async_row = None
+    if args.async_replan:
+        sim_a, async_row = run_mode(x, q, args, "auto", async_replan=True)
+        async_row.pop("phases")
 
     xr, xb = np.asarray(sim_r.state.x), np.asarray(sim_b.state.x)
     traj_dev = float(np.max(np.linalg.norm(xr - xb, axis=1))
@@ -195,7 +225,11 @@ def main(argv=None):
         metrics=dict(
             refit=refit, rebuild=rebuild,
             rebuild_over_refit=refit["rebuild_over_refit"],
-            speedup=speedup, trajectory_deviation=traj_dev),
+            speedup=speedup, trajectory_deviation=traj_dev,
+            **({"async": async_row,
+                "async_over_refit": (async_row["ms_per_step"]
+                                     / max(refit["ms_per_step"], 1e-30))}
+               if async_row else {})),
         # phases: the refit run's steady loop (ms over steady_seconds)
         phases=refit_phases,
         counters=dict(
@@ -211,6 +245,13 @@ def main(argv=None):
     print(f"rebuild: {rebuild['ms_per_step']:8.1f} ms/step  "
           f"rebuilds {rebuild['rebuilds']}  "
           f"F-err(f64) {rebuild['force_error_f64']:.2e}")
+    if async_row:
+        print(f"async:   {async_row['ms_per_step']:8.1f} ms/step  "
+              f"swaps {async_row['plan_swaps']}  "
+              f"retraces {async_row['retraces']}  "
+              f"wait {async_row['rebuild_wait_ms']:.1f} ms of "
+              f"{async_row['rebuild_total_ms']:.1f} ms total  "
+              f"F-err(f64) {async_row['force_error_f64']:.2e}")
     ratio = refit["rebuild_over_refit"]
     print(f"speedup {speedup:.2f}x  trajectory deviation {traj_dev:.2e}  "
           f"rebuild/refit step ratio "
@@ -239,6 +280,25 @@ def main(argv=None):
         if args.max_rebuilds:
             checks[f"rebuilds <= seed count {args.max_rebuilds}"] = \
                 refit["rebuilds"] <= args.max_rebuilds
+        if async_row:
+            a_ratio = (async_row["ms_per_step"]
+                       / max(refit["ms_per_step"], 1e-30))
+            checks[f"async {a_ratio:.3f}x <= {args.async_factor}x "
+                   "pure-refit ms/step"] = a_ratio <= args.async_factor
+            checks["async retraces == 0"] = async_row["retraces"] == 0
+            checks["async rebuild-cause partition exact"] = (
+                async_row["rebuilds"]
+                == async_row["rebuilds_drift"]
+                + async_row["rebuilds_interval"]
+                + async_row["rebuilds_forced"])
+            checks["async backend partition exact"] = (
+                async_row["rebuilds"]
+                == async_row["rebuilds_host"]
+                + async_row["devtree_rebuilds"])
+            checks["async swaps happened"] = async_row["plan_swaps"] >= 1
+            checks["async wait <= total rebuild ms"] = (
+                async_row["rebuild_wait_ms"]
+                <= async_row["rebuild_total_ms"] + 1e-9)
         if args.trace:
             cov = obs.phase_coverage(report,
                                      refit["steady_seconds"] * 1e3)

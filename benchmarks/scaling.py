@@ -130,6 +130,12 @@ def bench_size(solver, n, reps, err_sample, seed=0, host_solver=None):
             dev_ms / max(delta.get("plan.build", 0.0), 1e-9))
         if host_ms is not None:
             row["build_total_ms_host"] = host_ms
+        # Adaptive-depth evidence: the octree depth the build chose and
+        # how many of its levels run as compacted sparse blocks (depths
+        # past SPLIT_DEPTH — the 10^6 rung needs them to fit on device).
+        dev = plan.inner.dev or {}
+        row["tree_depth"] = int(dev.get("depth", 0))
+        row["sparse_levels"] = len(dev.get("sparse_occ", ()))
     return row
 
 
@@ -257,6 +263,14 @@ def main(argv=None):
                    f"{last['build_total_ms']:.0f}ms <= host "
                    f"{last['build_total_ms_host']:.0f}ms"] = \
                 last["build_total_ms"] <= last["build_total_ms_host"]
+            if last["n"] >= 1_000_000:
+                # The 10^6 rung must build through the adaptive sparse
+                # levels (a dense octree at its depth would not fit the
+                # device budget scheme).
+                checks[f"N={last['n']} adaptive depth engaged "
+                       f"(depth {last['tree_depth']}, "
+                       f"{last['sparse_levels']} sparse levels)"] = \
+                    last["sparse_levels"] >= 1
         else:
             # The vectorized pack must stay a minor fraction of the
             # host build (the pre-fix flat ~150ms pack was ~25-70%).

@@ -472,16 +472,74 @@ class SingleDevicePlan:
         """
         if capacities == "keep":
             capacities = self.inner.capacities
+        dev = (self.inner.dev or {}
+               if self.inner.build_backend == "device" else {})
         return _plan_single(self.config, self.kernel, targets,
                             targets if sources is None else sources,
                             capacities=capacities,
-                            pair_caps=(self.inner.dev or {}).get("pair_caps")
-                            if self.inner.build_backend == "device" else None)
+                            pair_caps=dev.get("pair_caps"),
+                            # The capacity budget is bound to the octree
+                            # depths, so replans that keep it must keep
+                            # them too (pinned or derived alike).
+                            depth=dev.get("depth") if capacities else None,
+                            batch_depth=(dev.get("tdepth")
+                                         if capacities else None))
+
+    def replan_async(self, targets, sources=None) -> "PendingSingleDevicePlan":
+        """Dispatch a shadow replan without blocking (device builds only).
+
+        Enqueues the full sort/build/list pipeline at this plan's budget
+        and returns immediately; this plan stays live and untouched. Call
+        `finalize()` on the returned handle to block on the leftover
+        device work and obtain the new plan — the double-buffered rebuild
+        the MD engine swaps in at a step boundary (DESIGN.md §10).
+        """
+        if self.inner.build_backend != "device":
+            raise ValueError(
+                "replan_async requires build_backend='device' (host "
+                "builds run on the host thread and cannot overlap)")
+        if self.inner.capacities is None:
+            raise ValueError(
+                "replan_async requires a capacity-padded plan (the async "
+                "path never probes budgets)")
+        from repro.devtree import build as _devbuild
+        dev = self.inner.dev or {}
+        pending = _devbuild.dispatch_plan_device(
+            targets, targets if sources is None else sources,
+            theta=self.config.theta, degree=self.config.degree,
+            leaf_size=self.config.leaf_size,
+            batch_size=self.config.resolved_batch_size(),
+            space=self.config.space, skin=self.config.skin,
+            dtype=self.dtype, capacities=self.inner.capacities,
+            pair_caps=dev.get("pair_caps"),
+            depth=dev.get("depth"), batch_depth=dev.get("tdepth"))
+        return PendingSingleDevicePlan(self, pending)
+
+
+class PendingSingleDevicePlan:
+    """An in-flight `SingleDevicePlan.replan_async`.
+
+    Wraps the devtree `PendingDevicePlan`; `finalize()` blocks on the
+    leftover device work and returns ``(plan, wait_ms, grew)`` — the new
+    `SingleDevicePlan`, the milliseconds actually spent waiting, and
+    whether the budget grew mid-flight (a deliberate retrace, exactly
+    the synchronous path's `capacity_growth` contract).
+    """
+
+    def __init__(self, source: SingleDevicePlan, pending):
+        self._source = source
+        self._pending = pending
+
+    def finalize(self):
+        inner, wait_ms, grew = self._pending.finalize()
+        s = self._source
+        return (SingleDevicePlan(s.config, s.kernel, inner, s.dtype),
+                wait_ms, grew)
 
 
 def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
-                 sources, capacities=None,
-                 pair_caps=None) -> SingleDevicePlan:
+                 sources, capacities=None, pair_caps=None,
+                 depth=None, batch_depth=None) -> SingleDevicePlan:
     if config.build_backend == "device":
         # Device build: positions stay wherever they are (jnp arrays are
         # NOT pulled to host), and the plan comes back capacity-padded.
@@ -493,7 +551,7 @@ def _plan_single(config: TreecodeConfig, kernel: Kernel, targets,
             batch_size=config.resolved_batch_size(),
             space=config.space, skin=config.skin, dtype=dtype,
             capacities=None if capacities == "auto" else capacities,
-            pair_caps=pair_caps)
+            pair_caps=pair_caps, depth=depth, batch_depth=batch_depth)
         return SingleDevicePlan(config, kernel, inner, dtype)
     targets = np.asarray(targets)
     sources = np.asarray(sources)

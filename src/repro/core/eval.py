@@ -611,6 +611,11 @@ class Capacities:
     bucket_rows: Tuple[int, ...]      # len == depth
     bucket_widths: Tuple[int, ...]    # len == depth, powers of two
     upward_rows: Tuple[int, ...] = () # len == depth - 1 (hierarchical)
+    # Device hybrid octree (repro.devtree): occupied-cell row budgets for
+    # the source/target tree levels past the dense split depth. Empty on
+    # host plans and on device trees shallow enough to stay fully dense.
+    sparse_rows: Tuple[int, ...] = ()
+    batch_sparse_rows: Tuple[int, ...] = ()
     num_targets: int = 0              # 0 = unbudgeted (fixed-N replans)
     num_sources: int = 0              # 0 = unbudgeted
     headroom: float = 1.15
@@ -675,6 +680,9 @@ class Capacities:
             bucket_rows=tuple(h(r) for r in need["bucket_rows"]),
             bucket_widths=tuple(_round_pow2(w) for w in need["bucket_widths"]),
             upward_rows=tuple(h(r) for r in need["upward_rows"]),
+            sparse_rows=tuple(h(r) for r in need.get("sparse_rows", ())),
+            batch_sparse_rows=tuple(
+                h(r) for r in need.get("batch_sparse_rows", ())),
             headroom=headroom, growth=growth,
         )
 
@@ -722,6 +730,9 @@ class Capacities:
             bucket_widths=gt(self.bucket_widths, need["bucket_widths"],
                              _round_pow2),
             upward_rows=gt(self.upward_rows, need["upward_rows"]),
+            sparse_rows=gt(self.sparse_rows, need.get("sparse_rows", ())),
+            batch_sparse_rows=gt(self.batch_sparse_rows,
+                                 need.get("batch_sparse_rows", ())),
         )
 
     def fits(self, plan: "Plan") -> bool:
@@ -855,6 +866,9 @@ def _plan_dims(plan: Plan) -> dict:
         bucket_rows=tuple(g.shape[0] for g in bg),
         bucket_widths=tuple(g.shape[1] for g in bg),
         upward_rows=tuple(p.shape[0] for p in up),
+        sparse_rows=tuple((plan.dev or {}).get("sparse_occ", ())),
+        batch_sparse_rows=tuple(
+            (plan.dev or {}).get("batch_sparse_occ", ())),
     )
 
 

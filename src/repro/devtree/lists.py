@@ -1,8 +1,12 @@
-"""Device-side dual-traversal interaction lists over the dense octree.
+"""Device-side dual-traversal interaction lists over the hybrid octree.
 
 Ragged-frontier reformulation of `interaction.build_interaction_lists`:
 the traversal state is a flat, budget-padded list of (batch, cell)
-pairs, refined level by level. Each level classifies every pair with
+pairs, refined level by level. Below the dense split depth the cells
+live in compacted occupied-cell blocks (see `build.py`), so child
+expansion swaps the dense gid arithmetic for one `searchsorted` of the
+eight candidate child codes into the block's sorted code table — empty
+cells are simply absent and drop out of the frontier for free. Each level classifies every pair with
 the same MAC math as `interaction.mac_accept` — theta * R - (r_B + r_C)
 > 0, the fold-free margin under PeriodicBox, and the (n+1)^3 < N_C size
 test — expressed in jnp so the whole pass stays inside one jit
@@ -75,15 +79,22 @@ def _compact(mask_parts, val_parts, cap):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "depth", "off", "widths", "pair_caps", "theta", "skin", "degree",
-    "space"))
+    "depth", "off", "sparse", "widths", "pair_caps", "theta", "skin",
+    "degree", "space"))
 def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
-                node_leaf, leaf_start, leaf_valid, b_lo, b_hi, b_valid, *,
-                depth, off, widths, pair_caps, theta, skin, degree, space):
-    """Traverse all batches against the dense source octree.
+                node_leaf, node_code, leaf_start, leaf_valid, b_lo, b_hi,
+                b_valid, *, depth, off, sparse, widths, pair_caps, theta,
+                skin, degree, space):
+    """Traverse all batches against the hybrid source octree.
 
-    node_* are the flat (M,) / (M, 3) per-cell arrays in dense node-id
-    order (level l occupies [off[l], off[l] + 8^l));
+    node_* are the flat (M,) / (M, 3) per-cell arrays in hybrid node-id
+    order: dense level l occupies [off[l], off[l] + 8^l) through the
+    split depth, then each deeper level is one compacted occupied-cell
+    block described by `sparse` — a tuple of (base, rows) — whose rows
+    are sorted by `node_code` (cell code at the row's own level,
+    PAD_CODE past the occupied count). Child lookup below the split is
+    a `searchsorted` of the 8 candidate child codes into the block; an
+    absent code means an EMPTY cell and contributes nothing.
     leaf_start/leaf_valid describe the budgeted leaf-slot table (slots
     are in particle-start order); b_lo/b_hi are exact batch bounding
     boxes with b_valid masking padded rows. `widths` = (approx, direct,
@@ -95,6 +106,7 @@ def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
     Returns (lists dict or None, need dict of scalar counts,
     theta_slack, fold_slack).
     """
+    sd = depth - len(sparse)  # deepest DENSE level
     a_width, d_width, s_width = widths
     f_caps, run_cap, skin_cap = pair_caps
     npts = (degree + 1) ** 3
@@ -135,12 +147,13 @@ def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
     ok0 = jnp.arange(f_caps[0], dtype=_I32) < c0[-1]
     fb = jnp.where(ok0, sel0, nb).astype(_I32)
     fc = jnp.zeros((f_caps[0],), _I32)
+    fg = jnp.zeros((f_caps[0],), _I32)  # hybrid gid carried alongside fc
     fneed = [c0[-1]]
 
     for lvl in range(depth + 1):
         valid = fb < nb
         bj = jnp.clip(fb, 0, nb - 1)
-        gidx = off[lvl] + fc  # fc < 8^lvl for live pairs, 0 for padding
+        gidx = fg  # dense: off[lvl] + fc; sparse: block base + row
 
         clo, chi = node_lo[gidx], node_hi[gidx]
         cc = 0.5 * (clo + chi)
@@ -184,9 +197,23 @@ def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
 
         if lvl < depth:
             kid_cell = fc[:, None] * 8 + k8
-            kid_gid = off[lvl + 1] + kid_cell
-            kenter = recurse[:, None] & testable[kid_gid]
-            krun = recurse[:, None] & runnable[kid_gid]
+            if lvl + 1 <= sd:
+                kid_gid = off[lvl + 1] + kid_cell
+                kenter = recurse[:, None] & testable[kid_gid]
+                krun = recurse[:, None] & runnable[kid_gid]
+            else:
+                # Sparse level: find each candidate child code in the
+                # block's sorted code table. A missing code is an empty
+                # cell — `occ` gates it out before any flag lookup can
+                # alias the clipped row.
+                base, r = sparse[lvl + 1 - sd - 1]
+                tbl = node_code[base:base + r]
+                row = jnp.searchsorted(tbl, kid_cell).astype(_I32)
+                rc_ = jnp.clip(row, 0, r - 1)
+                occ = (row < r) & (tbl[rc_] == kid_cell)
+                kid_gid = base + rc_
+                kenter = recurse[:, None] & occ & testable[kid_gid]
+                krun = recurse[:, None] & occ & runnable[kid_gid]
             # A pair none of whose surviving children are testable
             # collapses to ONE run over the parent's whole range.
             allrun = recurse & ~jnp.any(kenter, axis=1)
@@ -208,8 +235,9 @@ def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
             src = jnp.clip(sel, 0, km.shape[0] - 1).astype(_I32)
             ok = jnp.arange(ncap, dtype=_I32) < c[-1]
             pair = src >> 3
-            fb, fc = (jnp.where(ok, fb[pair], nb),
-                      jnp.where(ok, (fc[pair] << 3) + (src & 7), 0))
+            fb, fc, fg = (jnp.where(ok, fb[pair], nb),
+                          jnp.where(ok, (fc[pair] << 3) + (src & 7), 0),
+                          jnp.where(ok, kid_gid.reshape(-1)[src], 0))
             fneed.append(c[-1])
         else:
             rm_parts.append(go_self)

@@ -25,6 +25,18 @@ import jax.numpy as jnp
 # 3*BITS = 30-bit codes fit int32 even with x64 disabled.
 BITS = 10
 
+#: Sentinel code for padded rows of a COMPACTED (sparse) cell table.
+#: Strictly above every real prefix (codes < 8^MAX_DEPTH = 2^24) yet
+#: small enough that `PAD_CODE * 8 + 8` still fits int32, so child-code
+#: arithmetic on padded rows never overflows into negative codes that
+#: would break `searchsorted` against an ascending table.
+PAD_CODE = 1 << 27
+
+
+def prefix(codes, level, bits: int = BITS):
+    """Depth-``level`` cell of each particle: the leading 3*level bits."""
+    return jnp.right_shift(codes, 3 * (bits - level))
+
 
 def spread3(v):
     """Spread the low 10 bits of ``v`` to every third bit (magic numbers)."""

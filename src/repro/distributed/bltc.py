@@ -174,6 +174,14 @@ def _rank_need(plans) -> dict:
     need["bucket_rows"] = tuple(rows)
     need["bucket_widths"] = tuple(widths)
     need["upward_rows"] = ()
+    # Hybrid-depth device builds carry per-sparse-level row budgets;
+    # ranks share one depth, so element-wise max aligns level-for-level
+    # (host builds leave the tuples empty).
+    for key in ("sparse_rows", "batch_sparse_rows"):
+        tups = [d.get(key, ()) for d in dims]
+        ln = max((len(t) for t in tups), default=0)
+        need[key] = tuple(max((t[i] for t in tups if len(t) > i),
+                              default=1) for i in range(ln))
     return need
 
 

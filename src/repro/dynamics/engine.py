@@ -41,6 +41,7 @@ restores across processes.
 from __future__ import annotations
 
 import math
+import time
 from typing import Optional
 
 import jax
@@ -103,6 +104,22 @@ class Simulation:
         ``stats()["occupancy"]``. Changes the finish closure's output
         pytree, so flipping it mid-run would retrace; set at
         construction. No extra kernel launches either way.
+      async_replan: double-buffer tree rebuilds (device build backend
+        only, rebuild="auto"). When a drift budget is
+        `dispatch_fraction` spent — or the interval is one step from
+        elapsing — the engine DISPATCHES a shadow device build over the
+        current (wrapped) positions without blocking, keeps refitting on
+        the live plan, and swaps the shadow in at the next step boundary
+        (the `plan_swap` obs span). jax's async dispatch overlaps the
+        shadow build with the live step's refit+force work — no threads.
+        The swap counts as a rebuild with the cause recorded at dispatch
+        time, so the stats partitions are unchanged; `stats()` splits
+        the host time blocked on builds (``rebuild_wait_ms``) from the
+        end-to-end build time (``rebuild_total_ms``).
+      dispatch_fraction: fraction of a drift budget consumed before a
+        shadow build is dispatched (the remaining fraction is the drift
+        headroom that keeps the live plan valid while the shadow is in
+        flight).
     """
 
     def __init__(self, plan, charges, *, dt: float,
@@ -115,7 +132,9 @@ class Simulation:
                  rebuild: str = "auto",
                  checkpointer: Optional[Checkpointer] = None,
                  checkpoint_every: int = 0,
-                 profile: bool = False):
+                 profile: bool = False,
+                 async_replan: bool = False,
+                 dispatch_fraction: float = 0.5):
         if rebuild not in _REBUILD_POLICIES:
             raise ValueError(f"rebuild must be one of {_REBUILD_POLICIES}")
         if refit_interval < 1:
@@ -139,6 +158,25 @@ class Simulation:
             plan = plan.replan(self.adapter.positions(), capacities="auto")
             self.adapter = make_adapter(plan)
         self.plan = self.adapter.plan
+        self.async_replan = bool(async_replan)
+        self.dispatch_fraction = float(dispatch_fraction)
+        if self.async_replan:
+            if rebuild != "auto":
+                raise ValueError(
+                    "async_replan requires rebuild='auto' (the shadow "
+                    "dispatch rides the drift/interval triggers)")
+            if not self.adapter.supports_async_rebuild:
+                raise ValueError(
+                    "async_replan requires a capacity-padded device-"
+                    "backend plan (build_backend='device')")
+            if not 0.0 < self.dispatch_fraction <= 1.0:
+                raise ValueError("dispatch_fraction must be in (0, 1]")
+        # Double-buffer state: the in-flight shadow build (an opaque
+        # adapter handle), the rebuild cause recorded at dispatch time,
+        # and the host milliseconds the dispatch call itself took.
+        self._pending = None
+        self._pending_cause = None
+        self._pending_dispatch_ms = 0.0
         dtype = np.dtype(self.plan.dtype)
 
         n = self.plan.num_targets
@@ -189,6 +227,13 @@ class Simulation:
         # host build or a device (devtree) build.
         self.rebuilds_host = 0
         self.rebuilds_device = 0
+        # Rebuild wall-time split (ms): `total` is end-to-end build time
+        # (sync rebuild wall, or async dispatch + commit wall); `wait`
+        # is the part the host actually spent BLOCKED (for sync rebuilds
+        # the two coincide; async hides total - wait behind live steps).
+        self.rebuild_total_ms = 0.0
+        self.rebuild_wait_ms = 0.0
+        self.plan_swaps = 0
         self.force_evals = 0
         self.capacity_growths = 0
         self._steps_since_rebuild = 0
@@ -350,6 +395,85 @@ class Simulation:
             exceeded |= fold_drift_rate() * drift >= self.drift_safety * fs
         return exceeded
 
+    # ------------------------------------------------------------------
+    # double-buffered replan (async_replan=True)
+    # ------------------------------------------------------------------
+
+    def _dispatch_cause(self, drift: float) -> Optional[str]:
+        """Soft-trigger test: which rebuild cause (if any) warrants
+        dispatching a shadow build NOW, while the live plan still has
+        budget left to cover the in-flight window. Drift soft-fires at
+        `dispatch_fraction` of either refreshed budget (NaN slack never
+        soft-fires — the interval fallback owns that regime); the
+        interval soft-fires one step before the hard K-step cadence."""
+        ts, fs = self._theta_slack, self._fold_slack
+        if not (math.isnan(ts) or math.isnan(fs)):
+            frac = self.dispatch_fraction * self.drift_safety
+            if math.isfinite(ts) and \
+                    theta_drift_rate(self._theta) * drift >= frac * ts:
+                return "drift"
+            if math.isfinite(fs) and \
+                    fold_drift_rate() * drift >= frac * fs:
+                return "drift"
+        if self._steps_since_rebuild + 1 >= self.refit_interval - 1:
+            return "interval"
+        return None
+
+    def _dispatch_shadow(self, s1, cause: str) -> None:
+        """Enqueue the shadow device build over the CURRENT wrapped
+        positions. The wrap is a separate device copy — the live
+        trajectory keeps integrating unwrapped coordinates until the
+        swap re-anchors it. Nothing here blocks: the build runs in the
+        device queue behind the step's refit+force work."""
+        with _trace.span("md.rebuild_dispatch"):
+            t0 = time.perf_counter()
+            self._pending = self.adapter.rebuild_dispatch(
+                self.space.wrap(s1.x))
+            self._pending_dispatch_ms = (time.perf_counter() - t0) * 1e3
+        self._pending_cause = cause
+
+    def _swap_plan(self, s1):
+        """Commit the in-flight shadow build at a step boundary: pay its
+        deferred device sync, swap the live plan, and account the swap
+        as a rebuild with the cause recorded at dispatch time (so the
+        cause/backend partitions of the rebuild count stay exact)."""
+        with _trace.span("plan_swap"):
+            t0 = time.perf_counter()
+            invalidated, wait_ms, _grew = self.adapter.rebuild_commit(
+                self._pending)
+            commit_ms = (time.perf_counter() - t0) * 1e3
+        self._pending = None
+        cause, self._pending_cause = self._pending_cause, None
+        self.rebuild_wait_ms += wait_ms
+        self.rebuild_total_ms += self._pending_dispatch_ms + commit_ms
+        self._pending_dispatch_ms = 0.0
+        self.plan_swaps += 1
+        # The shadow was built over wrapped positions: re-anchor the
+        # live trajectory on the same wrapped coordinates (a lattice
+        # shift, exactly as at a synchronous rebuild).
+        s1 = s1._replace(x=self.space.wrap(s1.x))
+        if invalidated:
+            # The shadow overflowed its budget: commit fell back to a
+            # blocking growth loop and the new shapes force a retrace —
+            # counted exactly like a synchronous capacity growth.
+            self.capacity_growths += 1
+            if self.adapter.recloses_on_rebuild:
+                self._remake_finish()
+        self.plan = self.adapter.plan
+        self._arrays = self.adapter.arrays
+        self._theta_slack = float(self.adapter.theta_slack)
+        self._fold_slack = float(self.adapter.fold_slack)
+        self._steps_since_rebuild = 0
+        self.rebuilds += 1
+        if cause == "drift":
+            self.rebuilds_drift += 1
+        elif cause == "interval":
+            self.rebuilds_interval += 1
+        else:
+            self.rebuilds_forced += 1
+        self.rebuilds_device += 1  # shadow builds are devtree builds
+        return s1
+
     def step(self) -> MDState:
         """One integration step (one force evaluation)."""
         with _trace.span("md.advance"):
@@ -370,7 +494,16 @@ class Simulation:
                        >= self.refit_interval)
         do_rebuild = (policy == "always" or by_drift or by_interval)
 
-        if do_rebuild:
+        if self._pending is not None:
+            # A shadow build is in flight: swap it in at this step
+            # boundary. It is strictly newer than the live topology, so
+            # the swap supersedes any hard trigger that fired this very
+            # step — the finish pass refits the swapped arrays to the
+            # CURRENT positions and refreshes their slacks, so residual
+            # invalidity (drift since dispatch) re-fires the drift
+            # trigger on the next step.
+            s1 = self._swap_plan(s1)
+        elif do_rebuild:
             # Wrap positions into the primary cell at rebuild time (a
             # per-particle lattice shift: velocities, forces and energies
             # are all minimum-image invariant, so the trajectory is
@@ -379,6 +512,7 @@ class Simulation:
             _rb_span = _trace.span(
                 "md.rebuild_device" if on_device else "md.rebuild_host")
             _rb_span.__enter__()
+            _t0 = time.perf_counter()
             s1 = s1._replace(x=self.space.wrap(s1.x))
             # Device rebuilds consume the live device positions — no
             # host sync; only the needs vector crosses back.
@@ -411,9 +545,18 @@ class Simulation:
                 self.rebuilds_device += 1
             else:
                 self.rebuilds_host += 1
+            # A synchronous rebuild blocks the host for its whole
+            # duration: total and wait coincide.
+            _wall = (time.perf_counter() - _t0) * 1e3
+            self.rebuild_total_ms += _wall
+            self.rebuild_wait_ms += _wall
             _rb_span.__exit__(None, None, None)
         else:
             self.refits += 1
+            if self.async_replan and policy == "auto":
+                cause = self._dispatch_cause(drift)
+                if cause is not None:
+                    self._dispatch_shadow(s1, cause)
 
         with _trace.span("md.finish"):
             self._arrays, self.state, self._slack_dev, self._occ_dev = \
@@ -528,6 +671,14 @@ class Simulation:
           (since the previous force evaluation, minimum-image).
         - ``slack_fallback``: a NaN slack was seen — the engine is
           explicitly rebuilding on the interval cadence.
+        - ``rebuild_total_ms`` / ``rebuild_wait_ms``: rebuild wall time,
+          split into end-to-end build time and the part the host spent
+          BLOCKED on it. Synchronous rebuilds contribute equally to
+          both; with ``async_replan`` the shadow build's latency hides
+          behind live steps and only the swap's residual sync lands in
+          ``rebuild_wait_ms``. ``plan_swaps`` counts double-buffer
+          swaps (each is also in ``rebuilds`` under its dispatch-time
+          cause); ``pending_replan`` flags a shadow build in flight.
         - ``plan``: the underlying plan's own `stats()`.
         """
         self._refresh_budgets()
@@ -552,6 +703,11 @@ class Simulation:
             compiles_cache=self._total_compiles(),
             capacity_growths=self.capacity_growths,
             capacity_grows=self.capacity_growths,  # serve-naming alias
+            async_replan=self.async_replan,
+            plan_swaps=self.plan_swaps,
+            pending_replan=self._pending is not None,
+            rebuild_total_ms=self.rebuild_total_ms,
+            rebuild_wait_ms=self.rebuild_wait_ms,
             force_evals=self.force_evals,
             refit_interval=self.refit_interval,
             rebuild_policy=self.rebuild_policy,
@@ -591,6 +747,13 @@ class Simulation:
         restored positions (a host rebuild, counted as such)."""
         if self.checkpointer is None:
             raise ValueError("Simulation built without a checkpointer")
+        if self._pending is not None:
+            # Discard an in-flight shadow build: the restored positions
+            # supersede the dispatch positions, and simply dropping the
+            # handle abandons the enqueued device work.
+            self._pending = None
+            self._pending_cause = None
+            self._pending_dispatch_ms = 0.0
         tree, step, _meta = self.checkpointer.restore(
             self.state._asdict(), step=step)
         self.state = self.adapter.commit(

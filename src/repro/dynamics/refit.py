@@ -213,6 +213,11 @@ class PlanAdapter:
     # engine then passes the live device positions straight through
     # instead of syncing them to host first.
     device_rebuild = False
+    # True when the strategy can dispatch a SHADOW rebuild without
+    # blocking (`rebuild_dispatch` / `rebuild_commit`): the engine keeps
+    # refitting on the live plan while the replacement builds in the
+    # device queue, and swaps at the next step boundary.
+    supports_async_rebuild = False
 
     def positions(self) -> np.ndarray:
         """Current particle positions in input order (host)."""
@@ -269,6 +274,22 @@ class PlanAdapter:
         """Host tree rebuild at new positions, re-padded into the plan's
         capacity budget; returns True only when a budget overflowed (the
         compiled executables were invalidated)."""
+        raise NotImplementedError
+
+    def rebuild_dispatch(self, x):
+        """Enqueue a shadow rebuild at positions ``x`` WITHOUT blocking
+        and without touching the live plan; returns an opaque pending
+        handle for `rebuild_commit`. Only meaningful when
+        `supports_async_rebuild` is True."""
+        raise NotImplementedError
+
+    def rebuild_commit(self, pending) -> Tuple[bool, float, bool]:
+        """Swap the live plan for a dispatched shadow build. Pays the
+        deferred device sync; returns ``(invalidated, wait_ms, grew)``
+        where `invalidated` means compiled executables were lost (budget
+        shapes changed), `wait_ms` is the host time spent waiting on the
+        shadow build, and `grew` means a capacity budget overflowed (the
+        handle fell back to a blocking growth loop)."""
         raise NotImplementedError
 
     def sync_arrays(self, arrays: dict) -> None:
@@ -328,6 +349,22 @@ class SingleDeviceAdapter(PlanAdapter):
         old_sig = self.signature()
         self.plan = self.plan.replan(x_host)   # keeps capacities, grows
         return self.signature() != old_sig
+
+    @property
+    def supports_async_rebuild(self) -> bool:
+        # Needs the non-blocking devtree pipeline AND a locked capacity
+        # budget to dispatch fixed shapes into.
+        return (self.device_rebuild
+                and self.plan.inner.capacities is not None)
+
+    def rebuild_dispatch(self, x):
+        return self.plan.replan_async(x)
+
+    def rebuild_commit(self, pending) -> Tuple[bool, float, bool]:
+        old_sig = self.signature()
+        plan, wait_ms, grew = pending.finalize()
+        self.plan = plan
+        return self.signature() != old_sig, wait_ms, grew
 
     def sync_arrays(self, arrays: dict) -> None:
         self.plan.inner.arrays = arrays
