@@ -93,6 +93,9 @@ def bary_terms(y: jnp.ndarray, s: jnp.ndarray, w: jnp.ndarray, tol=0.0):
       row and denom is 1.
     """
     d = y[..., None] - s  # (..., m)
+    # lint: disable=TS004 — the isinstance guard short-circuits: when tol
+    # is a traced array the first disjunct is True and `tol > 0.0` is
+    # never coerced to bool; when tol is a float the compare is host-side.
     hit = jnp.abs(d) <= tol if not isinstance(tol, float) or tol > 0.0 \
         else d == 0.0
     any_hit = jnp.any(hit, axis=-1, keepdims=True)

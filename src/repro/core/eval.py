@@ -112,8 +112,11 @@ def prepare_plan(
 def _prepare_plan_timed(targets, sources, *, theta, degree, leaf_size,
                         batch_size, space, skin):
     build_ms: Dict[str, float] = {}
-    targets = np.asarray(space.wrap(np.asarray(targets)))
-    sources = np.asarray(space.wrap(np.asarray(sources)))
+    # the HOST build path: positions land on the host by design — an
+    # explicit device_get (visible to jax's transfer guard) instead of
+    # an implicit np.asarray copy. Device builds never take this path.
+    targets = np.asarray(space.wrap(jax.device_get(targets)))
+    sources = np.asarray(space.wrap(jax.device_get(sources)))
     dtype = targets.dtype
 
     t0 = time.perf_counter()

@@ -222,6 +222,9 @@ def pack_params(params):
     """
     leaves, treedef = jax.tree.flatten(params)
     shapes = tuple(tuple(jnp.shape(leaf)) for leaf in leaves)
+    # lint: disable=TS004 — branches on the pytree STRUCTURE (a host
+    # list's emptiness), which is static under jit; the leaves themselves
+    # are never coerced.
     if leaves:
         vec = jnp.concatenate(
             [jnp.ravel(jnp.asarray(leaf)) for leaf in leaves])

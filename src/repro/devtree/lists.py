@@ -287,6 +287,9 @@ def lists_phase(node_lo, node_hi, node_count, node_start, node_active,
     key = jnp.where(leaf_valid, leaf_start, _I32MAX)
 
     def unroll(bufs, cap, width, want_nodes):
+        # lint: disable=DV002 — run-merge permutation over the O(runs)
+        # compacted buffer, not the O(n) particle/key set the sort-free
+        # contract covers (particle order comes from the Morton phase).
         ordp = jnp.argsort(bufs[0]).astype(_I32)
         pb, pg = (b[ordp] for b in bufs)
         bounds = jnp.searchsorted(pb, nb_edges).astype(_I32)

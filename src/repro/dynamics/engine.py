@@ -55,6 +55,7 @@ from repro.dynamics import diagnostics as diag
 from repro.dynamics.integrators import (MDState, get_integrator,
                                         initial_state)
 from repro.dynamics.refit import make_adapter, max_drift
+from repro.lint import runtime as _lint_runtime
 from repro.obs import events as _events
 from repro.obs import trace as _trace
 from repro.obs.occupancy import occupancy_counters as _occ_counters
@@ -139,6 +140,7 @@ class Simulation:
             raise ValueError(f"rebuild must be one of {_REBUILD_POLICIES}")
         if refit_interval < 1:
             raise ValueError("refit_interval must be >= 1")
+        self.debug_nans = _lint_runtime.enable_debug_nans_if_requested()
         self.dt = float(dt)
         self.refit_interval = int(refit_interval)
         self.drift_safety = float(drift_safety)
@@ -361,8 +363,12 @@ class Simulation:
         """Pull the slacks computed by the last finish/init pass (exact
         margins from the refitted boxes) onto the host."""
         if self._slack_dev is not None:
-            self._theta_slack = float(self._slack_dev[0])
-            self._fold_slack = float(self._slack_dev[1])
+            # one explicit d2h for both scalars (indexing a device array
+            # under float() would launch a slice kernel per scalar and
+            # hide the transfer from jax's transfer guard)
+            slack = jax.device_get(self._slack_dev)
+            self._theta_slack = float(slack[0])
+            self._fold_slack = float(slack[1])
             self._slack_dev = None
 
     def _drift_exceeds_budget(self, drift: float) -> bool:
@@ -481,9 +487,10 @@ class Simulation:
                 "advance", self._advance, "Simulation.step",
                 self.state, self._x_eval_ref)
             # The one host<->device sync of a refit step: the drift
-            # scalar. Inside the span so enabled traces attribute the
+            # scalar, as an explicit device_get so jax's transfer guard
+            # sees it. Inside the span so enabled traces attribute the
             # device wait to the phase that caused it.
-            drift = float(drift_dev)
+            drift = float(jax.device_get(drift_dev))
         self._last_drift = drift
         self._refresh_budgets()
 
@@ -726,8 +733,8 @@ class Simulation:
             drift_budget_skin=0.5 * self._skin,
             drift_budget=min(b_theta, b_fold),
             plan=self.plan.stats(),
-            **({"occupancy": {k: float(v)
-                              for k, v in self._occ_dev.items()}}
+            **({"occupancy": {k: float(v) for k, v in jax.device_get(
+                    self._occ_dev).items()}}
                if self.profile and self._occ_dev else {}),
         )
 

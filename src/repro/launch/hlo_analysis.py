@@ -362,6 +362,45 @@ def _fusion_bytes(op: Op, comp: Computation,
     return total
 
 
+# Host custom-call targets XLA emits for device<->host movement.
+_HOST_CALL_MARKERS = ("HostCallback", "xla_python_cpu_callback",
+                      "xla_python_gpu_callback", "xla_ffi_python",
+                      "MoveToHost", "MoveToDevice", "SendToHost",
+                      "RecvFromHost")
+
+
+def count_transfers(hlo_text: str) -> Dict[str, int]:
+    """Count host<->device transfer ops in compiled HLO text.
+
+    The CPU-side ground truth for the repro.lint no-host-sync rules: on
+    the CPU backend ``jax.transfer_guard`` never fires (host and device
+    share buffers), but a host round-trip still shows up in the compiled
+    program as ``copy-start``/``copy-done`` pairs (cross-memory-space
+    copies), host custom-calls (python callbacks, annotated host
+    offloads) or ``send``/``recv`` to the host. A device-resident pass
+    must compile to zero of all three.
+
+    Returns ``{"copies": n, "host_calls": n, "send_recv": n,
+    "total": n}`` summed over every computation (loop bodies count once
+    — a transfer in a while body is a finding regardless of trip count).
+    """
+    comps, _entry = parse_hlo(hlo_text)
+    copies = host_calls = send_recv = 0
+    for comp in comps.values():
+        for op in comp.ops.values():
+            oc = op.opcode
+            if oc in ("copy-start", "copy-done"):
+                copies += 1
+            elif oc in ("send", "send-done", "recv", "recv-done"):
+                send_recv += 1
+            elif oc == "custom-call" and any(
+                    m in op.attrs for m in _HOST_CALL_MARKERS):
+                host_calls += 1
+    return {"copies": copies, "host_calls": host_calls,
+            "send_recv": send_recv,
+            "total": copies + host_calls + send_recv}
+
+
 def analyze(text: str) -> Totals:
     comps, entry = parse_hlo(text)
     totals = Totals()

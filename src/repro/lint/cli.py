@@ -1,0 +1,190 @@
+"""CLI: ``python -m repro.lint [paths] [--baseline ...] [--format ...]``.
+
+Exit codes: 0 clean (no unsuppressed, unbaselined errors), 1 findings,
+2 usage error (bad args, out-of-scope baseline entry).
+
+Suppressions: ``# lint: disable=RULE[,RULE...] — reason`` on the
+finding's line or on a standalone comment line immediately above it.
+The reason is mandatory — a suppression without one is itself a
+finding (SUP001), so every silenced rule documents *why* the pattern
+is legal at that site.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.lint import baseline as _baseline
+from repro.lint.findings import Finding, Severity
+from repro.lint.resolver import ModuleInfo, TraceResolver, scan_paths
+from repro.lint.rules import ALL_RULES, run_rules
+
+# `# lint: disable=TS001,OB001 — flush materializes results`
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=([A-Z0-9,\s]+?)"
+    r"(?:\s*(?:—|--|-)\s*(.*?))?\s*$")
+
+
+class Suppression:
+    __slots__ = ("rules", "reason", "line", "used")
+
+    def __init__(self, rules: Set[str], reason: Optional[str], line: int):
+        self.rules = rules
+        self.reason = reason
+        self.line = line
+        self.used = False
+
+
+def collect_suppressions(mod: ModuleInfo) -> List[Suppression]:
+    out: List[Suppression] = []
+    for i, text in enumerate(mod.lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        reason = (m.group(2) or "").strip() or None
+        out.append(Suppression(rules, reason, i))
+    return out
+
+
+def _covers(s: Suppression, line: int, lines: List[str]) -> bool:
+    """A suppression covers the finding's line, or sits in a contiguous
+    comment block immediately above it (multi-line reasons)."""
+    if s.line == line:
+        return True
+    if not s.line < line:
+        return False
+    for i in range(s.line, line - 1):  # 0-indexed lines between
+        t = lines[i].strip() if i < len(lines) else ""
+        if t and not t.startswith("#"):
+            return False
+    return True
+
+
+def apply_suppressions(
+        findings: Sequence[Finding],
+        sup_by_path: Dict[str, List[Suppression]],
+        lines_by_path: Optional[Dict[str, List[str]]] = None,
+        ) -> List[Finding]:
+    """Drop suppressed findings; emit SUP001 for reason-less or unused
+    suppressions so the suppression inventory stays honest."""
+    lines_by_path = lines_by_path or {}
+    kept: List[Finding] = []
+    for f in findings:
+        sups = sup_by_path.get(f.path, [])
+        lines = lines_by_path.get(f.path, [])
+        hit = None
+        for s in sups:
+            if f.rule in s.rules and _covers(s, f.line, lines):
+                hit = s
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            hit.used = True
+    for path, sups in sorted(sup_by_path.items()):
+        for s in sups:
+            if s.reason is None:
+                kept.append(Finding(
+                    rule="SUP001", severity=Severity.ERROR, path=path,
+                    line=s.line, col=1,
+                    message=f"suppression of {','.join(sorted(s.rules))} "
+                            f"has no reason — use `# lint: "
+                            f"disable=RULE — reason`"))
+    return sorted(kept, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths: Sequence[str],
+               baseline_path: Optional[str] = None,
+               ) -> Tuple[List[Finding], TraceResolver]:
+    """Scan, resolve, run all rules, apply suppressions + baseline.
+
+    Returns the surviving findings (errors and warnings) and the
+    resolver (for reporting/tests). Raises ValueError on an
+    out-of-scope baseline entry.
+    """
+    modules = scan_paths(paths)
+    resolver = TraceResolver(modules)
+    findings = run_rules(modules, resolver)
+    sup_by_path = {m.path: collect_suppressions(m) for m in modules}
+    lines_by_path = {m.path: m.lines for m in modules}
+    findings = apply_suppressions(findings, sup_by_path, lines_by_path)
+    if baseline_path is not None:
+        bl = _baseline.load_baseline(baseline_path)
+        bad = _baseline.check_scope(bl)
+        if bad:
+            raise ValueError(
+                "baseline entries outside the LM-skeleton scope "
+                f"(treecode packages are zero-findings): {bad}")
+        findings = _baseline.apply_baseline(findings, bl)
+    return findings, resolver
+
+
+def _emit(findings: Sequence[Finding], fmt: str, out) -> None:
+    if fmt == "json":
+        json.dump({"findings": [f.to_dict() for f in findings],
+                   "errors": sum(1 for f in findings
+                                 if f.severity == Severity.ERROR),
+                   "warnings": sum(1 for f in findings
+                                   if f.severity == Severity.WARNING)},
+                  out, indent=2)
+        out.write("\n")
+        return
+    for f in findings:
+        out.write((f.format_gh() if fmt == "gh" else f.format_text())
+                  + "\n")
+    if fmt == "text":
+        errs = sum(1 for f in findings if f.severity == Severity.ERROR)
+        out.write(f"{len(findings)} finding(s), {errs} error(s)\n")
+
+
+def main(argv: Optional[Sequence[str]] = None,
+         out=None) -> int:
+    out = out or sys.stdout
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="trace-safety & device-residency linter")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (LM-skeleton scope only)")
+    ap.add_argument("--format", choices=("text", "gh", "json"),
+                    default="text")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write current findings as a baseline and exit")
+    ap.add_argument("--list-traced", action="store_true",
+                    help="print the resolved traced-function set")
+    try:
+        args = ap.parse_args(argv)
+    except SystemExit as e:
+        return 2 if e.code not in (0, None) else 0
+    paths = args.paths or ["src"]
+    try:
+        findings, resolver = lint_paths(paths, args.baseline)
+    except (ValueError, OSError) as e:
+        print(f"repro.lint: {e}", file=sys.stderr)
+        return 2
+    if args.list_traced:
+        for fn in sorted(resolver.traced_functions(),
+                         key=lambda f: (f.path, f.line)):
+            out.write(f"{fn.path}:{fn.line}: {fn.qualname}"
+                      f"  [{fn.trace_via}]\n")
+        return 0
+    if args.write_baseline:
+        bad = [f for f in findings if not _baseline.in_scope(f.path)]
+        if bad:
+            print("repro.lint: refusing to baseline findings outside "
+                  "the LM-skeleton scope:", file=sys.stderr)
+            for f in bad:
+                print(f"  {f.format_text()}", file=sys.stderr)
+            return 2
+        _baseline.write_baseline(args.write_baseline, findings)
+        out.write(f"wrote {args.write_baseline} "
+                  f"({len(findings)} finding(s))\n")
+        return 0
+    _emit(findings, args.format, out)
+    errors = [f for f in findings if f.severity == Severity.ERROR]
+    return 1 if errors else 0

@@ -1,0 +1,53 @@
+"""Finding record shared by the resolver, rules, baseline and CLI."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+class Severity:
+    ERROR = "error"
+    WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location.
+
+    ``path`` is relative to the lint invocation's working directory (CI
+    runs from the repo root, so baselines are repo-relative).
+    ``context`` carries the resolver's evidence — for traced-region
+    rules, the trace chain that makes the enclosing function a jit
+    region (e.g. ``via jax.jit(advance) @ engine.py:272``).
+    """
+    rule: str
+    severity: str
+    path: str
+    line: int
+    col: int
+    message: str
+    context: Optional[str] = None
+
+    def key(self):
+        return (self.path, self.rule)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d.get("context") is None:
+            del d["context"]
+        return d
+
+    def format_text(self) -> str:
+        loc = f"{self.path}:{self.line}:{self.col}"
+        out = f"{loc}: {self.severity}[{self.rule}] {self.message}"
+        if self.context:
+            out += f"\n    {self.context}"
+        return out
+
+    def format_gh(self) -> str:
+        kind = "error" if self.severity == Severity.ERROR else "warning"
+        title = self.rule
+        msg = self.message if not self.context else (
+            f"{self.message} ({self.context})")
+        return (f"::{kind} file={self.path},line={self.line},"
+                f"col={self.col},title={title}::{msg}")

@@ -1,0 +1,685 @@
+"""Rule registry: each rule is a small class with an id, a severity and
+a `check` over one module (given the resolver's traced-function set).
+
+Traced-region rules use a light **parameter taint**: the non-static
+parameters of a traced function are traced values; assignments
+propagate taint forward; ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size``
+and ``len(...)`` un-taint (static under jit). This keeps trace-time
+numpy on static shapes legal while flagging host syncs on traced data.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set
+
+from repro.lint.findings import Finding, Severity
+from repro.lint.resolver import (FunctionInfo, ModuleInfo, TraceResolver,
+                                 dotted_name)
+
+UNTAINT_ATTRS = {"shape", "ndim", "dtype", "size"}
+NONDET_MODULES = {"random", "time", "datetime", "uuid", "secrets"}
+AT_METHODS = {"set", "add", "multiply", "divide", "max", "min", "power",
+              "apply", "get"}
+SORT_CALLS = {"sort", "argsort", "lexsort", "sort_key_val", "top_k"}
+UNHASHABLE_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                    ast.DictComp, ast.SetComp)
+
+
+def scope_nodes(root: ast.AST) -> Iterator[ast.AST]:
+    """Nodes of a function body excluding nested function defs (nested
+    defs of traced functions are traced entries of their own)."""
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def expr_tainted(node, tainted: Set[str]) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in UNTAINT_ATTRS:
+            return False
+        return expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        f = dotted_name(node.func) or ""
+        if f == "len":
+            return False
+        if any(expr_tainted(a, tainted) for a in node.args):
+            return True
+        if any(expr_tainted(k.value, tainted) for k in node.keywords):
+            return True
+        if isinstance(node.func, ast.Attribute):
+            return expr_tainted(node.func.value, tainted)
+        return False
+    if isinstance(node, ast.Subscript):
+        return (expr_tainted(node.value, tainted)
+                or expr_tainted(node.slice, tainted))
+    if isinstance(node, ast.Constant):
+        return False
+    return any(expr_tainted(c, tainted)
+               for c in ast.iter_child_nodes(node))
+
+
+SCALAR_ANNOTATIONS = {"int", "float", "bool", "str", "bytes"}
+
+
+def _target_names(t) -> Iterator[str]:
+    """Names bound (or mutated through) by an assignment target —
+    ``per[l] = v`` taints ``per`` (container holds a traced value) but
+    never the index ``l``."""
+    if isinstance(t, ast.Name):
+        yield t.id
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for e in t.elts:
+            yield from _target_names(e)
+    elif isinstance(t, ast.Starred):
+        yield from _target_names(t.value)
+    elif isinstance(t, (ast.Subscript, ast.Attribute)):
+        yield from _target_names(t.value)
+
+
+def _annotated_scalar_params(fn: FunctionInfo) -> Set[str]:
+    """Params annotated with a plain Python scalar type are host values
+    by contract (``n: int`` — trace-time constants)."""
+    out: Set[str] = set()
+    args = fn.node.args
+    for a in list(args.posonlyargs) + list(args.args) + list(
+            args.kwonlyargs):
+        ann = a.annotation
+        if isinstance(ann, ast.Name) and ann.id in SCALAR_ANNOTATIONS:
+            out.add(a.arg)
+        elif isinstance(ann, ast.Constant) \
+                and ann.value in SCALAR_ANNOTATIONS:
+            out.add(a.arg)
+    return out
+
+
+class TaintEngine:
+    """Inter-procedural parameter taint, memoized across modules.
+
+    A param of a transitively-traced function is tainted only when a
+    resolved call site from a traced caller binds a tainted expression
+    to it (roots and call-site-less functions stay conservative: every
+    non-static param is tainted). Scalar-annotated params are never
+    tainted. On recursion cycles the in-progress function falls back to
+    its conservative param set.
+    """
+
+    def __init__(self):
+        self._memo: Dict[int, Set[str]] = {}
+        self._local_memo: Dict[int, Set[str]] = {}
+        self._in_progress: Set[int] = set()
+
+    def _conservative_params(self, fn: FunctionInfo) -> Set[str]:
+        return (set(fn.params) - fn.static_params() - {"self", "cls"}
+                - _annotated_scalar_params(fn))
+
+    def _bound_args(self, fn: FunctionInfo, call: ast.Call):
+        """Map call-site arg expressions onto fn's param names.
+
+        Returns (bindings, precise): bindings is {param: [exprs]};
+        precise=False when *args/**kwargs defeat the mapping."""
+        params = list(fn.params[:fn.n_positional])
+        if params and params[0] in ("self", "cls") \
+                and fn.class_name is not None:
+            params = params[1:]
+        bindings: Dict[str, List[ast.AST]] = {}
+        precise = True
+        for i, a in enumerate(call.args):
+            if isinstance(a, ast.Starred):
+                precise = False
+                continue
+            if i < len(params):
+                bindings.setdefault(params[i], []).append(a)
+        for kw in call.keywords:
+            if kw.arg is None:  # **kwargs
+                precise = False
+            elif kw.arg in fn.params:
+                bindings.setdefault(kw.arg, []).append(kw.value)
+        return bindings, precise
+
+    def param_set(self, fn: FunctionInfo) -> Set[str]:
+        """Tainted *parameters* of fn."""
+        if id(fn) in self._memo:
+            return self._memo[id(fn)]
+        if id(fn) in self._in_progress:
+            return self._conservative_params(fn)
+        conservative = self._conservative_params(fn)
+        if fn.is_root or not fn.call_sites:
+            self._memo[id(fn)] = conservative
+            return conservative
+        self._in_progress.add(id(fn))
+        try:
+            tainted: Set[str] = set()
+            for caller, call in fn.call_sites:
+                caller_taint = self.local_taint(caller)
+                bindings, precise = self._bound_args(fn, call)
+                if not precise:
+                    tainted |= conservative
+                    continue
+                for p, exprs in bindings.items():
+                    if any(expr_tainted(e, caller_taint) for e in exprs):
+                        tainted.add(p)
+            out = tainted & conservative
+        finally:
+            self._in_progress.discard(id(fn))
+        self._memo[id(fn)] = out
+        return out
+
+    def local_taint(self, fn: FunctionInfo) -> Set[str]:
+        """Tainted *names* in fn's body: params + closure captures from
+        the enclosing function + forward assignments."""
+        if id(fn) in self._local_memo:
+            return self._local_memo[id(fn)]
+        tainted = set(self.param_set(fn))
+        # closure captures are tracers only when the enclosing function
+        # is itself traced; captures from host code are concrete at
+        # trace time (branching on them bakes the branch — legal)
+        if fn.parent is not None and fn.parent.traced \
+                and id(fn.parent) not in self._in_progress:
+            self._in_progress.add(id(fn))
+            try:
+                tainted |= self.local_taint(fn.parent) - set(fn.params)
+            finally:
+                self._in_progress.discard(id(fn))
+        for _ in range(2):  # two passes approximate a fixpoint
+            for node in scope_nodes(fn.node):
+                if isinstance(node, ast.Assign) \
+                        and expr_tainted(node.value, tainted):
+                    for t in node.targets:
+                        tainted.update(_target_names(t))
+                elif isinstance(node, ast.AugAssign) \
+                        and expr_tainted(node.value, tainted) \
+                        and isinstance(node.target, ast.Name):
+                    tainted.add(node.target.id)
+                elif isinstance(node, ast.For) \
+                        and expr_tainted(node.iter, tainted):
+                    tainted.update(_target_names(node.target))
+        self._local_memo[id(fn)] = tainted
+        return tainted
+
+
+def param_taint(fn: FunctionInfo,
+                engine: Optional[TaintEngine] = None) -> Set[str]:
+    """Traced-value names in fn's body (see TaintEngine)."""
+    return (engine or TaintEngine()).local_taint(fn)
+
+
+class RuleContext:
+    """Everything a rule can look at for one module."""
+
+    def __init__(self, module: ModuleInfo, resolver: TraceResolver,
+                 engine: Optional[TaintEngine] = None):
+        self.module = module
+        self.resolver = resolver
+        self.traced = [f for f in module.functions if f.traced]
+        self.engine = engine or TaintEngine()
+
+    def taint(self, fn: FunctionInfo) -> Set[str]:
+        return self.engine.local_taint(fn)
+
+
+class Rule:
+    id: str = ""
+    severity: str = Severity.ERROR
+    description: str = ""
+
+    def check(self, ctx: RuleContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: RuleContext, node, message: str,
+                fn: Optional[FunctionInfo] = None) -> Finding:
+        return Finding(
+            rule=self.id, severity=self.severity, path=ctx.module.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0) + 1, message=message,
+            context=(f"traced via {fn.trace_via}" if fn is not None
+                     else None))
+
+
+# ---------------------------------------------------------------------
+# traced-region host-sync rules
+# ---------------------------------------------------------------------
+
+class NumpyCallInJit(Rule):
+    id = "TS001"
+    description = ("numpy call on a traced value inside a jit region "
+                   "(forces a host sync / fails to trace)")
+
+    def check(self, ctx):
+        aliases = ctx.module.numpy_aliases()
+        if not aliases:
+            return
+        for fn in ctx.traced:
+            taint = ctx.taint(fn)
+            for node in scope_nodes(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted_name(node.func)
+                if d is None or d.split(".")[0] not in aliases:
+                    continue
+                if any(expr_tainted(a, taint) for a in node.args) or \
+                        any(expr_tainted(k.value, taint)
+                            for k in node.keywords):
+                    yield self.finding(
+                        ctx, node,
+                        f"`{d}(...)` on a traced value in jit region "
+                        f"`{fn.name}` — use jnp or hoist to host code",
+                        fn)
+
+
+class HostPullInJit(Rule):
+    id = "TS002"
+    description = (".item()/.tolist()/device_get inside a jit region "
+                   "(device->host pull cannot run under trace)")
+
+    _METHODS = {"item", "tolist", "copy_to_host"}
+
+    def check(self, ctx):
+        for fn in ctx.traced:
+            for node in scope_nodes(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted_name(node.func) or ""
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in self._METHODS:
+                    yield self.finding(
+                        ctx, node,
+                        f"`.{node.func.attr}()` in jit region "
+                        f"`{fn.name}` pulls to host", fn)
+                elif d.endswith("device_get"):
+                    yield self.finding(
+                        ctx, node,
+                        f"`{d}` in jit region `{fn.name}` pulls to host",
+                        fn)
+
+
+class PythonCastOnTraced(Rule):
+    id = "TS003"
+    description = ("float()/int()/bool() on a traced value inside a jit "
+                   "region (concretization error or silent host sync)")
+
+    _CASTS = {"float", "int", "bool", "complex"}
+
+    def check(self, ctx):
+        for fn in ctx.traced:
+            taint = ctx.taint(fn)
+            for node in scope_nodes(fn.node):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in self._CASTS \
+                        and node.args \
+                        and expr_tainted(node.args[0], taint):
+                    yield self.finding(
+                        ctx, node,
+                        f"`{node.func.id}(...)` on traced value in jit "
+                        f"region `{fn.name}`", fn)
+
+
+class TracedBoolBranch(Rule):
+    id = "TS004"
+    description = ("`if`/`while` on a traced value inside a jit region "
+                   "(implicit bool() concretizes; use jnp.where/lax.cond)")
+
+    def _tainted_test(self, test, taint) -> bool:
+        if isinstance(test, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in test.ops):
+                return False  # identity/membership: trace-time structure
+            return expr_tainted(test, taint)
+        if isinstance(test, ast.BoolOp):
+            return any(self._tainted_test(v, taint) for v in test.values)
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._tainted_test(test.operand, taint)
+        if isinstance(test, ast.Call):
+            return False  # isinstance()/predicates: cannot tell, stay quiet
+        return expr_tainted(test, taint)
+
+    def check(self, ctx):
+        for fn in ctx.traced:
+            taint = ctx.taint(fn)
+            for node in scope_nodes(fn.node):
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                elif isinstance(node, ast.Assert):
+                    test = node.test
+                else:
+                    continue
+                if self._tainted_test(test, taint):
+                    yield self.finding(
+                        ctx, node,
+                        f"branch on traced value in jit region "
+                        f"`{fn.name}` — use jnp.where / lax.cond", fn)
+
+
+class UnhashableStaticArg(Rule):
+    id = "TS005"
+    description = ("unhashable value (list/dict/set) passed to a "
+                   "static argument of a jitted callable")
+
+    def _unhashable(self, node) -> bool:
+        if isinstance(node, UNHASHABLE_NODES):
+            return True
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Name) \
+                and node.func.id in ("list", "dict", "set"):
+            return True
+        return False
+
+    def _bindings_visible(self, ctx):
+        """JitBindings callable from this module: own + imported."""
+        out = {}
+        for name, b in ctx.module.bindings.items():
+            out[name] = b
+        for alias, (src, attr) in ctx.module.from_imports.items():
+            tmod = ctx.resolver.dotted_to_mod.get(src)
+            if tmod is not None and attr in tmod.bindings:
+                out[alias] = tmod.bindings[attr]
+        return out
+
+    def check(self, ctx):
+        vis = self._bindings_visible(ctx)
+
+        def binding_for(call):
+            f = call.func
+            if isinstance(f, ast.Name):
+                return vis.get(f.id)
+            if isinstance(f, ast.Attribute) \
+                    and isinstance(f.value, ast.Name):
+                tmod = ctx.resolver._imported_module(ctx.module, f.value.id)
+                if tmod is not None:
+                    return tmod.bindings.get(f.attr)
+            return None
+
+        for node in ast.walk(ctx.module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            b = binding_for(node)
+            if b is None or not (b.static_argnames or b.static_argnums):
+                continue
+            for kw in node.keywords:
+                if kw.arg in b.static_argnames \
+                        and self._unhashable(kw.value):
+                    yield self.finding(
+                        ctx, kw.value,
+                        f"unhashable value for static arg "
+                        f"`{kw.arg}` of jitted `{b.name}` — every call "
+                        f"retraces (and jax raises on hash)")
+            for i, a in enumerate(node.args):
+                if i in b.static_argnums and self._unhashable(a):
+                    yield self.finding(
+                        ctx, a,
+                        f"unhashable value for static arg #{i} of "
+                        f"jitted `{b.name}`")
+        # defaults of decorated roots: a static param defaulting to a
+        # list/dict is unhashable on the no-arg call path
+        for fn in ctx.module.functions:
+            if not fn.is_root:
+                continue
+            statics = fn.static_params()
+            args = fn.node.args
+            named = list(args.posonlyargs) + list(args.args)
+            defaults = list(args.defaults)
+            for name_node, d in zip(named[len(named) - len(defaults):],
+                                    defaults):
+                if name_node.arg in statics and self._unhashable(d):
+                    yield self.finding(
+                        ctx, d,
+                        f"static arg `{name_node.arg}` of `{fn.name}` "
+                        f"defaults to an unhashable value")
+
+
+class PrintInJit(Rule):
+    id = "TS006"
+    severity = Severity.WARNING
+    description = ("print() inside a jit region runs at trace time only "
+                   "— silent in the compiled steady state (use "
+                   "jax.debug.print)")
+
+    def check(self, ctx):
+        for fn in ctx.traced:
+            for node in scope_nodes(fn.node):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id == "print":
+                    yield self.finding(
+                        ctx, node,
+                        f"print() in jit region `{fn.name}` only runs "
+                        f"at trace time", fn)
+
+
+class NondeterminismInTrace(Rule):
+    id = "ND001"
+    description = ("Python-side nondeterminism (random/time/datetime) in "
+                   "a jit region bakes a trace-time constant into the "
+                   "executable — rebuilds stop being reproducible")
+
+    def check(self, ctx):
+        mod = ctx.module
+        np_aliases = mod.numpy_aliases()
+        nondet_aliases = {a for a, m in mod.imports.items()
+                          if m.split(".")[0] in NONDET_MODULES}
+        nondet_names = {a for a, (src, _) in mod.from_imports.items()
+                        if src.split(".")[0] in NONDET_MODULES}
+        for fn in ctx.traced:
+            for node in scope_nodes(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted_name(node.func)
+                if d is None:
+                    continue
+                head = d.split(".")[0]
+                bad = (head in nondet_aliases
+                       or (d in nondet_names and "." not in d)
+                       or (head in np_aliases and ".random." in f".{d}."
+                           and not d.endswith(".random")))
+                if head in np_aliases and d.split(".")[1:2] == ["random"]:
+                    bad = True
+                if bad:
+                    yield self.finding(
+                        ctx, node,
+                        f"`{d}(...)` in jit region `{fn.name}` is "
+                        f"trace-time nondeterminism — thread a jax PRNG "
+                        f"key or hoist to the host", fn)
+
+
+# ---------------------------------------------------------------------
+# package-contract rules
+# ---------------------------------------------------------------------
+
+def _in_devtree(path: str) -> bool:
+    return "devtree" in path.replace("\\", "/").split("/")
+
+
+class ScatterInDevtree(Rule):
+    id = "DV001"
+    description = ("scatter op inside repro.devtree — the device tree "
+                   "build is scatter-free by contract (PR 8: gather-"
+                   "compaction only)")
+
+    def check(self, ctx):
+        if not _in_devtree(ctx.module.path):
+            return
+        for node in ast.walk(ctx.module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func) or ""
+            last = d.rsplit(".", 1)[-1]
+            if last.startswith("scatter"):
+                yield self.finding(
+                    ctx, node,
+                    f"`{d}` in devtree violates the scatter-free "
+                    f"traversal contract")
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in AT_METHODS \
+                    and isinstance(node.func.value, ast.Subscript) \
+                    and isinstance(node.func.value.value, ast.Attribute) \
+                    and node.func.value.value.attr == "at":
+                yield self.finding(
+                    ctx, node,
+                    f"`.at[...].{node.func.attr}(...)` in devtree "
+                    f"violates the scatter-free traversal contract")
+
+
+class SortInDevtreeLists(Rule):
+    id = "DV002"
+    description = ("sort inside repro.devtree.lists — the on-device "
+                   "interaction lists are sort-free by contract "
+                   "(merge-rank of already-ordered frontiers)")
+
+    def check(self, ctx):
+        p = ctx.module.path.replace("\\", "/")
+        if not (_in_devtree(p) and p.endswith("lists.py")):
+            return
+        for node in ast.walk(ctx.module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func) or ""
+            if d.rsplit(".", 1)[-1] in SORT_CALLS:
+                yield self.finding(
+                    ctx, node,
+                    f"`{d}` in devtree lists violates the sort-free "
+                    f"contract")
+
+
+class SyncOutsideObsGate(Rule):
+    id = "OB001"
+    description = ("block_until_ready outside an obs `enabled()` gate — "
+                   "DESIGN.md §9: device phases sync inside spans only "
+                   "when tracing, so disabled runs keep the async "
+                   "pipeline")
+
+    def _test_gates(self, test) -> bool:
+        for n in ast.walk(test):
+            if isinstance(n, ast.Call):
+                d = dotted_name(n.func) or ""
+                if d.rsplit(".", 1)[-1] == "enabled":
+                    return True
+        return False
+
+    def _walk(self, node, gated):
+        for c in ast.iter_child_nodes(node):
+            if isinstance(c, ast.If) and self._test_gates(c.test):
+                for b in c.body:
+                    yield from self._walk_self(b, True)
+                for b in c.orelse:
+                    yield from self._walk_self(b, gated)
+            else:
+                yield from self._walk_self(c, gated)
+
+    def _walk_self(self, node, gated):
+        yield node, gated
+        yield from self._walk(node, gated)
+
+    def check(self, ctx):
+        for node, gated in self._walk(ctx.module.tree, False):
+            if gated or not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func) or ""
+            is_sync = (d.rsplit(".", 1)[-1] == "block_until_ready"
+                       or (isinstance(node.func, ast.Attribute)
+                           and node.func.attr == "block_until_ready"))
+            if is_sync:
+                yield self.finding(
+                    ctx, node,
+                    "block_until_ready outside a trace-enabled gate "
+                    "serializes the async pipeline (gate on "
+                    "obs.trace.enabled() or suppress with the reason "
+                    "the sync is the product)")
+
+
+class DonatedBufferReuse(Rule):
+    id = "DN001"
+    description = ("argument donated to a jitted executable is read "
+                   "after the call — donated buffers are invalidated "
+                   "(jax returns garbage or errors)")
+
+    def check(self, ctx):
+        donating = ctx.resolver.donating_bindings()
+        vis = {}
+        for name, b in ctx.module.bindings.items():
+            if name in donating:
+                vis[name] = b
+        for alias, (src, attr) in ctx.module.from_imports.items():
+            tmod = ctx.resolver.dotted_to_mod.get(src)
+            if tmod is not None and attr in tmod.bindings \
+                    and attr in donating:
+                vis[alias] = tmod.bindings[attr]
+
+        def binding_for(call):
+            f = call.func
+            if isinstance(f, ast.Name):
+                return vis.get(f.id)
+            if isinstance(f, ast.Attribute) \
+                    and isinstance(f.value, ast.Name):
+                tmod = ctx.resolver._imported_module(ctx.module, f.value.id)
+                if tmod is not None and f.attr in tmod.bindings \
+                        and f.attr in donating:
+                    return tmod.bindings[f.attr]
+            return None
+
+        for fn in ctx.module.functions:
+            calls = [n for n in scope_nodes(fn.node)
+                     if isinstance(n, ast.Call)]
+            for call in calls:
+                b = binding_for(call)
+                if b is None:
+                    continue
+                donated = [call.args[i] for i in b.donate_argnums
+                           if i < len(call.args)]
+                if not donated and b.name.endswith("_donating"):
+                    donated = list(call.args)[1:2]  # convention: arg 1
+                for arg in donated:
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    uses = [n for n in scope_nodes(fn.node)
+                            if isinstance(n, ast.Name) and n.id == arg.id
+                            and n.lineno > call.lineno]
+                    stores = sorted(n.lineno for n in uses
+                                    if isinstance(n.ctx, ast.Store))
+                    rebound = stores[0] if stores else float("inf")
+                    for u in uses:
+                        if isinstance(u.ctx, ast.Load) \
+                                and u.lineno < rebound:
+                            yield self.finding(
+                                ctx, u,
+                                f"`{arg.id}` read after being donated to "
+                                f"`{b.name}` at line {call.lineno}")
+                            break
+
+
+ALL_RULES: Sequence[Rule] = (
+    NumpyCallInJit(), HostPullInJit(), PythonCastOnTraced(),
+    TracedBoolBranch(), UnhashableStaticArg(), PrintInJit(),
+    NondeterminismInTrace(), ScatterInDevtree(), SortInDevtreeLists(),
+    SyncOutsideObsGate(), DonatedBufferReuse(),
+)
+
+
+def get_rule(rule_id: str) -> Rule:
+    for r in ALL_RULES:
+        if r.id == rule_id:
+            return r
+    raise KeyError(rule_id)
+
+
+def run_rules(modules: Sequence[ModuleInfo], resolver: TraceResolver,
+              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    out: List[Finding] = []
+    seen = set()
+    engine = TaintEngine()
+    for mod in modules:
+        ctx = RuleContext(mod, resolver, engine)
+        for rule in (rules or ALL_RULES):
+            for f in rule.check(ctx):
+                k = (f.path, f.line, f.rule, f.message)
+                if k not in seen:
+                    seen.add(k)
+                    out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.rule))

@@ -1,0 +1,50 @@
+"""Runtime sanitizers that cross-check the static pass.
+
+`no_implicit_transfers()` wraps ``jax.transfer_guard("disallow")``
+around device-resident step loops: any implicit device<->host transfer
+inside the context raises, validating the linter's "no host sync here"
+model against jax's own guard.
+
+CPU-backend caveat (documented in DESIGN.md §11): on the CPU backend
+host and device buffers share memory, so jax's transfer guard never
+fires — the guard is exercised for real on GPU/TPU runs, while on CPU
+the HLO-level ``launch.hlo_analysis.count_transfers`` check is the
+ground truth. The fixture still wraps the loops on CPU so the wiring
+is in place (and so accidental `jax.device_put`-style explicit
+transfer *API misuse* keeps a single choke point).
+
+`REPRO_DEBUG_NANS=1` opts hot loops into ``jax_debug_nans`` — threaded
+through `Simulation` / `ServeFrontend` constructors so a NaN produced
+inside a jitted region fails loudly at the producing primitive instead
+of surfacing steps later in a diagnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+_DEBUG_NANS_ENV = "REPRO_DEBUG_NANS"
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Raise on implicit device<->host transfers within the context."""
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+def debug_nans_requested() -> bool:
+    return os.environ.get(_DEBUG_NANS_ENV, "").strip() in (
+        "1", "true", "on", "yes")
+
+
+def enable_debug_nans_if_requested() -> bool:
+    """Turn on jax_debug_nans when REPRO_DEBUG_NANS=1; returns whether
+    the mode is active. Called from Simulation/ServeFrontend __init__
+    so the opt-in covers everything those objects compile."""
+    if debug_nans_requested():
+        jax.config.update("jax_debug_nans", True)
+        return True
+    return False

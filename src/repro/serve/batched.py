@@ -86,6 +86,13 @@ def _stack_members(members: Sequence[_eval.Plan], width: int) -> dict:
     return out
 
 
+def _split_stacked_impl(stacked, *, sizes):
+    return tuple(stacked[i, :n] for i, n in enumerate(sizes))
+
+
+_split_stacked = jax.jit(_split_stacked_impl, static_argnames=("sizes",))
+
+
 class EnsemblePlan:
     """Plan-protocol executor over S stacked systems (targets == sources).
 
@@ -281,8 +288,14 @@ class EnsemblePlan:
 
     def split(self, stacked) -> List[jnp.ndarray]:
         """Trim a stacked output — phi (width, nt) or forces
-        (width, nt, 3) — back to per-system views (dummy slots dropped)."""
-        return [stacked[i, :n] for i, n in enumerate(self.sizes)]
+        (width, nt, 3) — back to per-system views (dummy slots dropped).
+
+        Routed through a jitted helper with the (static) size tuple:
+        eager `stacked[i, :n]` re-uploads the scalar slice bounds on
+        every call (an implicit int32[] h2d per slot per flush, caught
+        by transfer_guard); under jit the bounds are baked into the one
+        cached executable per (signature, sizes)."""
+        return list(_split_stacked(stacked, sizes=self.sizes))
 
     # ------------------------------------------------------------------
     # plan protocol

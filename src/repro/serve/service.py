@@ -36,10 +36,12 @@ import dataclasses
 import time
 from typing import List, Optional
 
+import jax
 import numpy as np
 
 from repro.core import eval as _eval
 from repro.core.api import TreecodeConfig
+from repro.lint import runtime as _lint_runtime
 from repro.obs import events as _events
 from repro.obs import trace as _trace
 from repro.serve.batched import EnsemblePlan
@@ -150,6 +152,7 @@ class ServeFrontend:
                  clock=time.monotonic):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        self.debug_nans = _lint_runtime.enable_debug_nans_if_requested()
         self.config = config
         self.max_batch = int(max_batch)
         self.flush_deadline = float(flush_deadline)
@@ -233,7 +236,13 @@ class ServeFrontend:
         bucket.deadline = (None if not bucket.queue
                            else self.clock() + self.flush_deadline)
 
-        with _trace.span("serve.plan_build"):
+        # The plan build is the one acknowledged host->device upload site
+        # in the flush: the host tree build packs fresh geometry/index
+        # tables for this batch and pushes them up. Everything after it
+        # (charge packing, execute, resolve) runs under whatever
+        # transfer_guard the caller installed, so the warm execute path
+        # stays provably free of implicit transfers.
+        with _trace.span("serve.plan_build"), jax.transfer_guard("allow"):
             plan = EnsemblePlan.build(
                 bucket.config, [r.points for r in batch],
                 capacities=bucket.capacities, ensemble_width=self.max_batch)
@@ -260,10 +269,16 @@ class ServeFrontend:
             if want_forces:
                 phi, F = plan.potential_and_forces(charges,
                                                    kernel_params=params)
+                # lint: disable=OB001 — the sync IS the product here: a
+                # flush materializes results for the waiting futures, and
+                # the request latency recorded below must include device
+                # time (attribution honesty for serve.execute).
                 phi.block_until_ready()
                 phis, Fs = plan.split(phi), plan.split(F)
             else:
                 phi = plan.execute(charges, kernel_params=params)
+                # lint: disable=OB001 — flush materializes results for
+                # the waiting futures (as above).
                 phi.block_until_ready()
                 phis, Fs = plan.split(phi), None
         delta = _eval.ensemble_compile_count() - before
@@ -297,12 +312,15 @@ class ServeFrontend:
             for i, r in enumerate(batch):
                 lat = now - r.t_submit
                 self.latencies.append(lat)
-                out = np.asarray(phis[i])
+                # explicit d2h: results were already materialized by the
+                # gated block above; device_get makes the transfer visible
+                # to jax's transfer guard instead of an implicit np copy
+                out = jax.device_get(phis[i])
                 if r.future.want_forces:
                     if Fs is None:
                         raise RuntimeError(
                             "forces requested but not computed")
-                    r.future._resolve((out, np.asarray(Fs[i])), lat)
+                    r.future._resolve((out, jax.device_get(Fs[i])), lat)
                 else:
                     r.future._resolve(out, lat)
 

@@ -90,3 +90,56 @@ def test_dus_counted_at_window_size():
     t = analyze(c.as_text())
     full_quadratic = L * L * D * 4
     assert t.hbm_bytes < full_quadratic / 4, t.hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# host-transfer counting (repro.lint's HLO-level ground truth)
+# ---------------------------------------------------------------------------
+
+
+def test_count_transfers_clean_program():
+    from repro.launch.hlo_analysis import count_transfers
+
+    c = _compile(lambda x: jnp.tanh(x).sum(), jnp.zeros((64,)))
+    counts = count_transfers(c.as_text())
+    assert counts == {"copies": 0, "host_calls": 0, "send_recv": 0,
+                      "total": 0}
+
+
+def test_count_transfers_flags_host_callback():
+    """A python callback compiles to a host custom-call — the counter
+    must see it (positive control: the zero pins below mean something)."""
+    from repro.launch.hlo_analysis import count_transfers
+
+    def cb(x):
+        return np.asarray(x) * 2
+
+    def f(x):
+        return jax.pure_callback(
+            cb, jax.ShapeDtypeStruct((64,), jnp.float32), x)
+
+    c = _compile(f, jnp.zeros((64,)))
+    assert count_transfers(c.as_text())["host_calls"] >= 1
+
+
+def test_finish_pass_zero_host_transfers(rng):
+    """The single-device execute pass must compile with NO host
+    round-trips: no cross-memory copies, host custom-calls or sends.
+    This is the CPU-side ground truth for the d2h half of the
+    repro.lint trace-safety rules (jax's transfer_guard only catches
+    the h2d direction on the CPU backend)."""
+    from repro.core import eval as ceval
+    from repro.core.api import TreecodeConfig, TreecodeSolver
+    from repro.launch.hlo_analysis import count_transfers
+
+    pts = rng.random((256, 3)).astype(np.float32)
+    solver = TreecodeSolver(TreecodeConfig(degree=3, leaf_size=32,
+                                           backend="xla"))
+    plan = solver.plan(pts)
+    q = jnp.ones((256,), plan.dtype)
+    opts = plan.config.exec_opts(plan.kernel)
+    lowered = jax.jit(
+        ceval._execute_impl, static_argnames=ceval._EXEC_OPTS).lower(
+        plan.arrays, plan._charges(q), plan._params(None), **opts)
+    counts = count_transfers(lowered.compile().as_text())
+    assert counts["total"] == 0, counts

@@ -1,0 +1,127 @@
+"""Runtime sanitizer wiring: `jax.transfer_guard("disallow")` around the
+device-resident step loops, cross-checking the repro.lint static pass.
+
+What "pass under the guard" proves: the steady-state loops perform no
+IMPLICIT device<->host transfers — every host pull is an explicit
+`jax.device_get` (the engine's one drift scalar per step, serve's
+result materialization), which the guard permits by design.
+
+CPU-backend caveat: the guard DOES fire on CPU for implicit
+host-to-device uploads (fresh numpy arrays, eager scalar constants) —
+it caught EnsemblePlan.split re-uploading slice bounds per flush — but
+device-to-host reads pass silently (host and device share buffers), so
+the d2h half of the invariant only bites on GPU/TPU runs of the same
+suite. The CPU-side d2h equivalent is pinned at the HLO level in
+test_hlo_analysis.py (`count_transfers` == 0 for the finish pass).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.api import TreecodeConfig, TreecodeSolver
+from repro.dynamics import Simulation
+from repro.serve import ServeFrontend
+
+from test_devtree import _cloud, _solver
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _device_sim(rng, n=400, **kw):
+    x = _cloud(n, rng)
+    q = rng.uniform(-1, 1, n).astype(np.float32)
+    plan = _solver("device").plan(x, capacities="auto")
+    kw.setdefault("dt", 1e-5)
+    kw.setdefault("refit_interval", 4)
+    return Simulation(plan, q, **kw)
+
+
+def test_device_engine_steps_under_transfer_guard(rng,
+                                                  no_implicit_transfers):
+    """>= 3 steady-state steps of the device-build engine, including an
+    interval rebuild, with implicit transfers disallowed."""
+    sim = _device_sim(rng)
+    for _ in range(2):  # warm up: compile advance/finish, first rebuild
+        sim.step()
+    with no_implicit_transfers():
+        for _ in range(4):  # crosses refit_interval=4 -> device rebuild
+            sim.step()
+    s = sim.stats()
+    assert s["steps"] == 6
+    assert s["devtree_rebuilds"] >= 1  # the guarded window rebuilt
+
+
+def test_async_replan_steps_under_transfer_guard(rng,
+                                                 no_implicit_transfers):
+    """Shadow dispatch + swap inside the guard: the double-buffered
+    replan path must stay free of implicit host syncs too."""
+    sim = _device_sim(rng, async_replan=True)
+    for _ in range(2):
+        sim.step()
+    with no_implicit_transfers():
+        for _ in range(5):
+            sim.step()
+    assert sim.stats()["steps"] == 7
+
+
+def test_serve_warm_flush_under_transfer_guard(rng,
+                                               no_implicit_transfers):
+    """Warm-bucket flushes with device-resident request payloads: the
+    only transfers are the explicit result device_gets."""
+    cfg = TreecodeConfig(degree=3, leaf_size=16, theta=0.7, backend="xla")
+    fe = ServeFrontend(cfg, max_batch=2)
+    xs = [_cloud(24, rng), _cloud(24, rng)]
+    qs = [rng.uniform(-1, 1, 24).astype(np.float32) for _ in range(2)]
+    futs = [fe.submit(x, q) for x, q in zip(xs, qs)]  # cold: compiles
+    assert all(f.done() for f in futs)
+
+    # request payloads land on device OUTSIDE the guard (the h2d of an
+    # incoming request is the caller's explicit transfer, not the warm
+    # path's)
+    xs_d = [jax.device_put(x) for x in xs]
+    qs_d = [jax.device_put(q) for q in qs]
+    with no_implicit_transfers():
+        futs = [fe.submit(x, q) for x, q in zip(xs_d, qs_d)]
+        assert all(f.done() for f in futs)
+    s = fe.stats()
+    assert s["flushes"] == 2 and s["retraces"] == 0
+    for f, q in zip(futs, qs):
+        assert np.asarray(f.result()).shape == q.shape
+
+
+def test_debug_nans_opt_in(rng, monkeypatch):
+    """REPRO_DEBUG_NANS=1 threads jax_debug_nans through the frontends'
+    constructors; unset, the mode stays off."""
+    prev = jax.config.jax_debug_nans
+    try:
+        monkeypatch.delenv("REPRO_DEBUG_NANS", raising=False)
+        cfg = TreecodeConfig(degree=2, leaf_size=16, backend="xla")
+        fe = ServeFrontend(cfg, max_batch=1)
+        assert fe.debug_nans is False
+
+        monkeypatch.setenv("REPRO_DEBUG_NANS", "1")
+        fe = ServeFrontend(cfg, max_batch=1)
+        assert fe.debug_nans is True
+        assert jax.config.jax_debug_nans is True
+
+        sim = _device_sim(rng, n=200)
+        assert sim.debug_nans is True
+        sim.step()  # clean dynamics: debug_nans must not false-positive
+    finally:
+        jax.config.update("jax_debug_nans", prev)
+
+
+def test_debug_nans_catches_injected_nan(monkeypatch):
+    """Positive control: with the mode on, a NaN produced inside a jitted
+    region raises at the producing op instead of propagating."""
+    prev = jax.config.jax_debug_nans
+    monkeypatch.setenv("REPRO_DEBUG_NANS", "1")
+    cfg = TreecodeConfig(degree=2, leaf_size=16, backend="xla")
+    try:
+        ServeFrontend(cfg, max_batch=1)  # flips the jax flag
+        with pytest.raises(FloatingPointError):
+            jax.jit(lambda x: 0.0 * x / x)(np.zeros((4,), np.float32))
+    finally:
+        jax.config.update("jax_debug_nans", prev)
